@@ -1,0 +1,64 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — correctness +
+host-side cost only; wall numbers are NOT TPU predictions, the roofline
+table carries those)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import row
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def main(full: bool = False) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    b, s, hq, hkv, d = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    t = _time(lambda *a: ops.flash_attention(*a, block_q=128, block_k=128), q, k, v)
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q, k, v, block_q=128, block_k=128) - ref.flash_attention(q, k, v))))
+    rows.append(row("kernels/flash_attention", t, 1.0, max_err=err,
+                    shape=f"b{b}s{s}h{hq}d{d}"))
+
+    a_ = jnp.asarray(rng.uniform(0.8, 0.999, size=(2, 512, 256)), jnp.float32)
+    b_ = jnp.asarray(rng.normal(size=(2, 512, 256)) * 0.1, jnp.float32)
+    t = _time(lambda *x: ops.rglru_scan(*x, block_w=256, block_s=128), a_, b_)
+    err = float(jnp.max(jnp.abs(ops.rglru_scan(a_, b_, block_w=256, block_s=128) - ref.rglru_scan(a_, b_))))
+    rows.append(row("kernels/rglru_scan", t, 1.0, max_err=err, shape="2x512x256"))
+
+    r = jnp.asarray(rng.normal(size=(1, 256, 2, 16)) * 0.5, jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(1, 256, 2, 16)) * 0.5, jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(1, 256, 2, 16)) * 0.5, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.9, 0.999, size=(1, 256, 2, 16)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(2, 16)) * 0.1, jnp.float32)
+    t = _time(lambda *x: ops.rwkv6_scan(*x, block_s=64)[0], r, kk, vv, w, u)
+    err = float(jnp.max(jnp.abs(ops.rwkv6_scan(r, kk, vv, w, u, block_s=64)[0]
+                                - ref.rwkv6_scan(r, kk, vv, w, u)[0])))
+    rows.append(row("kernels/rwkv6_scan", t, 1.0, max_err=err, shape="1x256x2x16"))
+
+    tree = {"w": jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)}
+    g = jax.tree.map(lambda x: x * 0.3, tree)
+    t = _time(lambda *x: ops.accumulate_tree(*x, 0.05), tree, g)
+    rows.append(row("kernels/fused_accumulate", t, 1.0, elems=1 << 16))
+    d0 = jax.tree.map(jnp.zeros_like, tree)
+    t = _time(lambda *x: ops.ps_apply_tree(*x, 0.1, 0.9)[0], tree, d0, g)
+    rows.append(row("kernels/fused_ps_apply", t, 1.0, elems=1 << 16))
+    return rows

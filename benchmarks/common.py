@@ -1,0 +1,69 @@
+"""Shared helpers for the per-figure benchmarks.
+
+Every benchmark emits CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is host wall-time per simulated virtual second (the
+benchmark harness cost) and ``derived`` is a ';'-separated key=value list
+holding the figure's actual quantities (convergence time, waiting
+fraction, speedups, roofline terms, ...).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.sync import make_policy
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import cnn_task, make_task
+
+# Benchmark-scale defaults: Γ=20 s virtual; the CNN task needs a few
+# hundred check periods' worth of steps to converge — same period count
+# regime as the paper's 60 s Γ over multi-hour runs.
+GAMMA = 20.0
+EPOCH = 200.0
+TARGET_LOSS = 0.6
+MAX_SECONDS = 4000.0
+
+
+def default_policy(name: str, **kw):
+    if name == "adsp":
+        kw.setdefault("gamma", GAMMA)
+        kw.setdefault("probe_seconds", GAMMA)
+        kw.setdefault("max_probes", 8)
+    if name == "adsp_fixed":
+        return make_policy("adsp", search=False, gamma=GAMMA, **kw)
+    return make_policy(name, **kw)
+
+
+def run_sim(task, profiles, policy, *, target_loss=TARGET_LOSS,
+            max_seconds=MAX_SECONDS, seed=0, local_lr=0.05, base_batch=32):
+    cfg = SimConfig(
+        gamma=GAMMA, epoch_seconds=EPOCH, target_loss=target_loss,
+        max_seconds=max_seconds, seed=seed, local_lr=local_lr,
+        base_batch=base_batch,
+    )
+    t0 = time.time()
+    sim = Simulator(task, profiles, policy, cfg)
+    res = sim.train()
+    wall = time.time() - t0
+    return sim, res, wall
+
+
+def row(name: str, wall_s: float, virtual_s: float, **derived) -> str:
+    us = 1e6 * wall_s / max(virtual_s, 1e-9)
+    kv = ";".join(f"{k}={_fmt(v)}" for k, v in derived.items())
+    return f"{name},{us:.1f},{kv}"
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def standard_task(num_workers: int, seed: int = 0):
+    return cnn_task(num_workers, seed=seed, width=8)
+
+
+def standard_profiles():
+    return ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)

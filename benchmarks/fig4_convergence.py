@@ -1,0 +1,46 @@
+"""Fig. 4 — headline comparison: wall-clock convergence time, total steps,
+and final loss for ADSP vs BSP / SSP / ADACOMM / Fixed ADACOMM (CNN task,
+1:1:3 heterogeneity). Reports the paper's speedup metric
+(1 − t_ADSP/t_baseline)."""
+
+from __future__ import annotations
+
+from .common import default_policy, row, run_sim, standard_profiles, standard_task
+
+BASELINES = [
+    ("bsp", {}),
+    ("ssp", {"s": 8}),
+    ("adacomm", {}),
+    ("fixed_adacomm", {"tau": 8}),
+]
+
+
+def main(full: bool = False) -> list[str]:
+    rows = []
+    profiles = standard_profiles()
+    task = standard_task(len(profiles))
+
+    sim, res_adsp, wall = run_sim(task, profiles, default_policy("adsp", search=True))
+    rows.append(
+        row(
+            "fig4_convergence/adsp", wall, res_adsp.elapsed,
+            convergence_time=res_adsp.convergence_time,
+            steps=res_adsp.total_steps, commits=res_adsp.total_commits,
+            final_loss=float(res_adsp.losses[-1]),
+            loss_per_step=(float(res_adsp.losses[0]) - float(res_adsp.losses[-1]))
+            / max(res_adsp.total_steps, 1),
+        )
+    )
+    for name, kw in BASELINES:
+        sim, res, wall = run_sim(task, profiles, default_policy(name, **kw))
+        speedup = 1.0 - res_adsp.convergence_time / res.convergence_time if res.converged else float("nan")
+        rows.append(
+            row(
+                f"fig4_convergence/{name}", wall, res.elapsed,
+                convergence_time=res.convergence_time,
+                steps=res.total_steps, commits=res.total_commits,
+                final_loss=float(res.losses[-1]),
+                adsp_speedup=speedup,
+            )
+        )
+    return rows

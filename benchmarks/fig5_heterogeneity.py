@@ -1,0 +1,49 @@
+"""Fig. 5 — adaptability to heterogeneity degree H and system scale.
+
+(a–e) ADSP vs Fixed ADACOMM at H ∈ {1, 1.6, 2.4, 3.2} (6 workers);
+(f) scalability: larger worker pool (12 workers; 18/36 with --full),
+hardware mix following the paper's Table 1 distribution."""
+
+from __future__ import annotations
+
+from repro.edgesim.profiles import ec2_profiles, heterogeneity_profiles
+
+from .common import default_policy, row, run_sim, standard_task
+
+H_LEVELS = [1.0, 1.6, 2.4, 3.2]
+
+
+def main(full: bool = False) -> list[str]:
+    rows = []
+    m = 6
+    for H in H_LEVELS:
+        profiles = heterogeneity_profiles(m, H, base_v=2.0, o=0.2)
+        task = standard_task(m)
+        times = {}
+        for name, kw in (("adsp", {"search": True}), ("fixed_adacomm", {"tau": 8})):
+            sim, res, wall = run_sim(task, profiles, default_policy(name, **kw))
+            times[name] = res.convergence_time
+            rows.append(
+                row(
+                    f"fig5_heterogeneity/H{H}/{name}", wall, res.elapsed,
+                    H=H, convergence_time=res.convergence_time,
+                    converged=res.converged, waiting_frac=res.waiting_fraction,
+                )
+            )
+        speedup = 1 - times["adsp"] / times["fixed_adacomm"]
+        rows.append(row(f"fig5_heterogeneity/H{H}/speedup", 0.0, 1.0,
+                        H=H, adsp_vs_fixed_speedup=speedup))
+    # scalability
+    for m in ([12, 18] if full else [12]):
+        profiles = ec2_profiles(o=0.2, scale=0.5)[:m]
+        task = standard_task(m)
+        for name, kw in (("adsp", {"search": True}), ("fixed_adacomm", {"tau": 8})):
+            sim, res, wall = run_sim(task, profiles, default_policy(name, **kw))
+            rows.append(
+                row(
+                    f"fig5_scalability/m{m}/{name}", wall, res.elapsed,
+                    workers=m, convergence_time=res.convergence_time,
+                    converged=res.converged,
+                )
+            )
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 6 — impact of network latency: convergence time under extra
+communication delay O_i ∈ {0.2, 1.0, 3.0} s for BSP / SSP / Fixed
+ADACOMM / ADSP. The speedup of local-update methods over BSP/SSP must
+grow with delay; ADSP stays best."""
+
+from __future__ import annotations
+
+from repro.edgesim.profiles import ratio_profiles
+
+from .common import default_policy, row, run_sim, standard_task
+
+DELAYS = [0.2, 1.0, 3.0]
+POLICIES = [
+    ("bsp", {}),
+    ("ssp", {"s": 8}),
+    ("fixed_adacomm", {"tau": 8}),
+    ("adsp", {"search": True}),
+]
+
+
+def main(full: bool = False) -> list[str]:
+    rows = []
+    for o in DELAYS:
+        profiles = ratio_profiles((1, 1, 3), base_v=1.0, o=o)
+        task = standard_task(len(profiles))
+        for name, kw in POLICIES:
+            sim, res, wall = run_sim(task, profiles, default_policy(name, **kw))
+            rows.append(
+                row(
+                    f"fig6_latency/o{o}/{name}", wall, res.elapsed,
+                    delay_s=o, convergence_time=res.convergence_time,
+                    converged=res.converged, waiting_frac=res.waiting_fraction,
+                )
+            )
+    return rows

@@ -1,0 +1,76 @@
+"""§Roofline source: aggregates results/dryrun/*.json into the per
+(arch × shape × mesh) roofline table — the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-chip memory."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import row
+
+DRYRUN_DIR = pathlib.Path("results/dryrun")
+
+
+def load_reports() -> list[dict]:
+    out = []
+    if DRYRUN_DIR.exists():
+        for fp in sorted(DRYRUN_DIR.glob("*.json")):
+            out.append(json.loads(fp.read_text()))
+    return out
+
+
+def main(full: bool = False) -> list[str]:
+    rows = []
+    reports = load_reports()
+    if not reports:
+        return [row("roofline_table/missing", 0.0, 1.0,
+                    note="run python -m repro.launch.dryrun --all --mesh both first")]
+    for d in reports:
+        tag = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] == "skipped":
+            rows.append(row(tag, 0.0, 1.0, status="skipped", reason=d.get("reason", "")))
+            continue
+        if d["status"] != "ok":
+            rows.append(row(tag, 0.0, 1.0, status=d["status"], error=d.get("error", "")[:80]))
+            continue
+        r = d["roofline"]
+        rows.append(
+            row(
+                tag, d.get("wall_s", 0.0), 1.0,
+                status="ok",
+                compute_s=r["compute_s"], memory_s=r["memory_s"],
+                collective_s=r["collective_s"], bottleneck=r["bottleneck"],
+                useful_ratio=r["useful_flops_ratio"],
+                param_gb_chip=d.get("analytic_param_bytes_per_chip", 0) / 1e9,
+                variant=d.get("variant_note", ""),
+            )
+        )
+    return rows
+
+
+def markdown_table() -> str:
+    """Render EXPERIMENTS.md §Roofline."""
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | 6ND/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in load_reports():
+        if d["status"] == "skipped":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | "
+                f"SKIPPED | — | {d.get('reason','')} |")
+            continue
+        if d["status"] != "ok":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | "
+                f"ERROR | — | {d.get('error','')[:60]} |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} | {d.get('variant_note','')} |")
+    return "\n".join(lines)

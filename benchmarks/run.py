@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` enables the larger
+paper-scale sweeps (more workers / more grid points); default sizes are
+CPU-budget versions with identical structure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig1_waiting",
+    "fig3_commit_rate",
+    "fig4_convergence",
+    "fig5_heterogeneity",
+    "fig6_latency",
+    "appendix_extras",
+    "bench_kernels",
+    "roofline_table",
+]
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", nargs="*", help="subset of modules to run")
+    p.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    args = p.parse_args(argv)
+
+    mods = args.only if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            rows = mod.main(full=args.full)
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception as e:  # keep the harness running
+            import traceback
+
+            traceback.print_exc()
+            print(f"{name}/HARNESS_ERROR,0,error={type(e).__name__}")
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper-scale scenario: the EC2-like heterogeneous fleet (Table 1)
+training the CNN application, with the full ADSP control plane — online
+commit-rate search, check periods, timers — against the strongest
+baseline (Fixed ADACOMM). Reports the Fig. 5-style speedup and the
+search trace. ~2-4 min on CPU.
+
+    PYTHONPATH=src python examples/heterogeneous_edge.py [--workers 8]
+"""
+
+import argparse
+
+from repro.core.sync import make_policy
+from repro.core.theory import heterogeneity_degree
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ec2_profiles
+from repro.edgesim.tasks import cnn_task
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--workers", type=int, default=8)
+    p.add_argument("--target-loss", type=float, default=0.8)
+    args = p.parse_args()
+
+    profiles = ec2_profiles(o=0.2, scale=0.5)[: args.workers]
+    H = heterogeneity_degree([pr.v for pr in profiles])
+    print(f"# {args.workers} workers, heterogeneity H={H:.2f}")
+    task = cnn_task(args.workers, width=8)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    target_loss=args.target_loss, max_seconds=4000.0,
+                    local_lr=0.05)
+
+    results = {}
+    for name, kw in [
+        ("fixed_adacomm", {"tau": 8}),
+        ("adsp", {"search": True, "gamma": 20.0, "probe_seconds": 20.0}),
+    ]:
+        sim = Simulator(task, profiles, make_policy(name, **kw), cfg)
+        res = sim.train()
+        results[name] = res
+        print(f"{name:16s} t_conv={res.convergence_time:8.1f}s "
+              f"steps={res.total_steps} commits={res.total_commits} "
+              f"waiting={100*res.waiting_fraction:.1f}% cc={res.commit_counts}")
+        if name == "adsp":
+            for i, tr in enumerate(sim.policy.traces):
+                print(f"  search epoch {i}: candidates={tr.candidates} -> {tr.chosen}")
+
+    t_a = results["adsp"].convergence_time
+    t_f = results["fixed_adacomm"].convergence_time
+    if results["adsp"].converged and results["fixed_adacomm"].converged:
+        print(f"\nADSP speedup vs Fixed ADACOMM: {100*(1 - t_a/t_f):.1f}% "
+              f"(paper reports up to 62.4% at H=3.2)")
+
+
+if __name__ == "__main__":
+    main()

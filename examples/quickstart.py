@@ -1,0 +1,40 @@
+"""Quickstart: ADSP vs BSP on a heterogeneous 3-worker edge cluster.
+
+Runs in ~30 s on CPU. Shows the paper's core result: with a 1:1:3 speed
+spread, BSP wastes ~half of every worker's time at the barrier while ADSP
+keeps all workers training and converges faster in (virtual) wall-clock.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.sync import make_policy
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import svm_task
+
+
+def main():
+    profiles = ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)
+    task = svm_task(num_workers=3)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    target_loss=0.02, max_seconds=900.0)
+
+    print(f"{'policy':16s} {'converged':9s} {'t_conv(s)':>9s} {'steps':>6s} "
+          f"{'commits':>7s} {'waiting%':>8s}")
+    for name, kw in [
+        ("bsp", {}),
+        ("ssp", {"s": 8}),
+        ("fixed_adacomm", {"tau": 8}),
+        ("adsp", {"search": True, "gamma": 20.0, "probe_seconds": 20.0}),
+    ]:
+        sim = Simulator(task, profiles, make_policy(name, **kw), cfg)
+        res = sim.train()
+        print(f"{name:16s} {str(res.converged):9s} {res.convergence_time:9.1f} "
+              f"{res.total_steps:6d} {res.total_commits:7d} "
+              f"{100*res.waiting_fraction:8.1f}")
+    print("\nADSP: no waiting -> more steps/second -> faster convergence;")
+    print("commit counts stay equal across workers (Theorem 2 precondition).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + greedy decode with per-family
+caches (KV ring buffers for windowed attention, O(1) recurrent state for
+SSM/hybrid archs). Uses the reduced configs so every family runs on CPU.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ["rwkv6-3b", "recurrentgemma-9b", "granite-3-8b"]:
+        print(f"\n=== {arch} (reduced config) ===")
+        serve.main(["--arch", arch, "--smoke", "--batch", "4",
+                    "--prompt-len", "32", "--new-tokens", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end driver: train a ~100M-parameter decoder LM with the cluster
+ADSP commit layer (τ local microsteps between commit all-reduces) for a
+few hundred steps on whatever devices exist.
+
+The model is a granite-family reduction (12 layers, d_model 768, GQA 12/4,
+vocab 32k ≈ 107M params). On a 32-core CPU this runs ~1 s/commit at the
+default seq 64 / batch 4 / τ 2 — 300 steps in ~5 minutes. Loss should
+fall from ~10.4 (ln 32768) to ≤ 5.5 on the synthetic Markov-token stream.
+
+    PYTHONPATH=src python examples/train_lm_100m.py --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.commit import AdspState, CommitConfig, make_adsp_step
+from repro.data.synthetic import lm_tokens
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def make_100m_config() -> ModelConfig:
+    base = get_config("granite_3_8b")
+    return dataclasses.replace(
+        base, name="granite-100m", num_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=4, d_ff=2048, vocab_size=32_768, head_dim=64,
+        dtype="float32", adsp_granularity="data",
+    )
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--tau", type=int, default=2)
+    p.add_argument("--local-lr", type=float, default=0.05)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = make_100m_config()
+    print(f"# {cfg.name}: {cfg.total_params()/1e6:.1f}M params, "
+          f"tau={args.tau}, seq={args.seq}, batch={args.batch}")
+
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    ccfg = CommitConfig(tau=args.tau, local_lr=args.local_lr, global_lr=1.0,
+                        worker_axes=("data",))
+
+    def loss_fn(params, mb):
+        return lm.lm_loss(cfg, params, mb, remat=False)
+
+    from jax.sharding import PartitionSpec as P
+
+    step = jax.jit(make_adsp_step(loss_fn, ccfg, mesh,
+                                  batch_spec=P(None, "data")))
+    params = lm.lm_init(jax.random.PRNGKey(args.seed), cfg)
+    state = AdspState.create(params)
+    tau_arr = jnp.full((len(jax.devices()),), args.tau, jnp.int32)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        for i in range(args.steps):
+            toks = lm_tokens(args.seed, i * 65537, args.tau * args.batch,
+                             args.seq, cfg.vocab_size)[:, :-1]
+            mb = {"tokens": jnp.asarray(
+                toks.reshape(args.tau, args.batch, args.seq), jnp.int32)}
+            state, loss = step(state, mb, tau_arr)
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"commit {i:4d}  loss {float(loss):7.4f}  "
+                      f"({(time.time()-t0)/(i+1):.2f}s/commit)")
+    print(f"# done: {args.steps} commits = {args.steps*args.tau} microsteps "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

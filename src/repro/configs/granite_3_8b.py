@@ -1,0 +1,24 @@
+"""Granite-3 8B [hf:ibm-granite/granite-3.0-2b-base family] — dense GQA.
+
+40 layers, d_model 4096, 32 heads / 8 KV heads, d_ff 12800, vocab 49155
+(padded to 49408 for model-axis sharding). long_500k runs only with the
+beyond-paper sliding-window variant (window 4096), flagged in the dry-run.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    arch_type="dense",
+    source="hf:ibm-granite/granite-3.0-2b-base",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49_155,
+    layer_pattern=("global",),
+    mlp_variant="swiglu",
+    rope_theta=10_000.0,
+    adsp_granularity="data",
+)

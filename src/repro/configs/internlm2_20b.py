@@ -1,0 +1,23 @@
+"""InternLM2-20B [arXiv:2403.17297] — dense GQA.
+
+48 layers, d_model 6144, 48 heads / 8 KV, d_ff 16384, vocab 92544.
+long_500k via sliding-window variant only.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    arch_type="dense",
+    source="arXiv:2403.17297",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92_544,
+    layer_pattern=("global",),
+    mlp_variant="swiglu",
+    rope_theta=1_000_000.0,
+    adsp_granularity="data",
+)

@@ -1,0 +1,35 @@
+"""Llama-4 Maverick 400B-A17B [hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+48 layers, d_model 5120, 40 heads / 8 KV, vocab 202048. MoE with 128
+routed experts, top-1, d_expert 8192, one shared expert, interleaved every
+other layer (dense, moe) — Llama-4 style early-fusion decoder. At ~400B
+total / ~17B active this is the memory-critical arch: ADSP granularity is
+'pod' (one full replica per pod; within a pod weights shard over
+data×model — see DESIGN.md §5 on ADSP's replica-memory constraint).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    arch_type="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202_048,
+    layer_pattern=("dense", "moe"),
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=1,
+        d_expert=8192,
+        num_shared_experts=1,
+        d_shared=8192,
+        capacity_factor=1.25,
+    ),
+    mlp_variant="swiglu",
+    rope_theta=500_000.0,
+    adsp_granularity="pod",
+)

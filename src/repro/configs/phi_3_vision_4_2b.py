@@ -1,0 +1,28 @@
+"""Phi-3-vision 4.2B [hf:microsoft/Phi-3-vision-128k-instruct] — VLM.
+
+phi3-mini backbone: 32 layers, d_model 3072, MHA 32 heads (kv=32 per
+assignment), d_ff 8192, vocab 32064. The CLIP vision tower + projector is
+a STUB: precomputed patch embeddings (B, 576, 3072) are prepended to the
+token sequence; loss is masked to text positions. long_500k via the
+sliding-window variant only.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    arch_type="vlm",
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_064,
+    layer_pattern=("global",),
+    mlp_variant="swiglu",
+    rope_theta=10_000.0,
+    frontend="vision",
+    num_prefix_embeddings=576,
+    adsp_granularity="data",
+)

@@ -1,0 +1,25 @@
+"""Qwen2.5-32B [hf:Qwen/Qwen2.5-0.5B family] — dense GQA with QKV bias.
+
+64 layers, d_model 5120, 40 heads / 8 KV, d_ff 27648, vocab 152064.
+ADSP granularity 'pod' (replica ×3 state at 64 GB params is too large for
+a 16-chip model group). long_500k via sliding-window variant only.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152_064,
+    qkv_bias=True,
+    layer_pattern=("global",),
+    mlp_variant="swiglu",
+    rope_theta=1_000_000.0,
+    adsp_granularity="pod",
+)

@@ -1,0 +1,33 @@
+"""Qwen2-MoE A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B] — fine-grained MoE.
+
+24 layers, d_model 2048, 16 heads (kv=16, MHA), 60 routed experts top-4
+with d_expert 1408, plus 4 shared experts (fused 4×1408=5632 hidden),
+vocab 151936. Every layer is MoE.
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    arch_type="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151_936,
+    layer_pattern=("moe",),
+    moe=MoEConfig(
+        num_experts=60,
+        top_k=4,
+        d_expert=1408,
+        num_shared_experts=4,
+        d_shared=1408,  # fused shared MLP hidden = 4 x 1408 = 5632
+        capacity_factor=1.5,
+    ),
+    mlp_variant="swiglu",
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    adsp_granularity="data",
+)

@@ -1,0 +1,29 @@
+"""RecurrentGemma-9B [arXiv:2402.19427] — hybrid RG-LRU + local attention.
+
+38 layers in the Griffin 2:1 pattern (recurrent, recurrent, local attn);
+38 = 12×(rec,rec,local) + (rec,rec) remainder. GQA for the local-attention
+blocks with a single KV head (kv=1 per assignment), local window 2048.
+Attention-free recurrence ⇒ long_500k decode is native (O(1) state).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    source="arXiv:2402.19427",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256_000,
+    head_dim=256,
+    layer_pattern=("recurrent", "recurrent", "local"),
+    local_window=2048,
+    lru_width=4096,
+    conv1d_width=4,
+    mlp_variant="swiglu",
+    rope_theta=10_000.0,
+    adsp_granularity="data",
+)

@@ -1,0 +1,24 @@
+"""RWKV-6 "Finch" 3B [arXiv:2404.05892] — attention-free SSM.
+
+32 layers, d_model 2560 (40 heads × 64), channel-mix d_ff 8960, vocab
+65536. Data-dependent decay (ddlerp + decay LoRA). O(1) recurrent state ⇒
+long_500k decode is native.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    arch_type="ssm",
+    source="arXiv:2404.05892",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,        # wkv heads = d_model / rwkv_head_dim
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65_536,
+    layer_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    pos_variant="none",
+    adsp_granularity="data",
+)

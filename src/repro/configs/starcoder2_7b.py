@@ -1,0 +1,26 @@
+"""StarCoder2-7B [arXiv:2402.19173] — dense GQA with native sliding window.
+
+32 layers, d_model 4608, 36 heads / 4 KV, d_ff 18432, vocab 49152, RoPE,
+sliding-window attention 4096 (paper-native) ⇒ long_500k is valid without
+a variant flag.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    arch_type="dense",
+    source="arXiv:2402.19173",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49_152,
+    sliding_window=4096,
+    layer_pattern=("global",),
+    mlp_variant="gelu",
+    norm_variant="layernorm",
+    rope_theta=100_000.0,
+    adsp_granularity="data",
+)

@@ -1,0 +1,58 @@
+"""ADSP 'accum' granularity: τ-microstep gradient accumulation without a
+manual worker axis (single-pod runs of replica-heavy archs).
+
+The whole mesh acts as ONE ADSP worker: weights are fully sharded
+(FSDP × TP via GSPMD auto mode), each microstep computes a full-batch
+gradient (collectives inside), and the τ-step accumulation plays the role
+of the worker's local-update buffer — the commit is the state update at
+the end. Cross-step collective *frequency* is unchanged within the pod
+(the pod is internally homogeneous — there is no waiting to eliminate);
+ADSP's cross-worker saving appears only once a worker axis exists
+(granularity 'data'/'pod', core.commit).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .commit import AdspState, CommitConfig
+
+__all__ = ["make_accum_step"]
+
+
+def make_accum_step(loss_fn: Callable, cfg: CommitConfig, explicit_momentum: float = 0.0,
+                    remat: bool = False) -> Callable:
+    grad_fn = jax.value_and_grad(loss_fn)
+    if remat:
+        grad_fn = jax.remat(grad_fn)
+
+    def accum_step(state: AdspState, microbatches, tau_active):
+        zeros = jax.tree.map(jnp.zeros_like, state.params)
+
+        def body(carry, xs):
+            p, u = carry
+            mb, idx = xs
+            live = (idx < tau_active).astype(jnp.float32)
+            loss, g = grad_fn(p, mb)
+            p = jax.tree.map(
+                lambda a, b: (a - cfg.local_lr * live * b).astype(a.dtype), p, g
+            )
+            u = jax.tree.map(
+                lambda a, b: (a + cfg.local_lr * live * b).astype(a.dtype), u, g
+            )
+            return (p, u), loss * live
+
+        idxs = jnp.arange(cfg.tau, dtype=jnp.int32)
+        (_, u), losses = jax.lax.scan(body, (state.params, zeros), (microbatches, idxs))
+        loss = jnp.sum(losses) / jnp.maximum(tau_active.astype(jnp.float32), 1.0)
+        delta = jax.tree.map(
+            lambda d, uu: (explicit_momentum * d - cfg.global_lr * uu).astype(d.dtype),
+            state.prev_delta, u,
+        )
+        params = jax.tree.map(jnp.add, state.params, delta)
+        return AdspState(params, delta, state.step + 1), loss
+
+    return accum_step

@@ -1,0 +1,123 @@
+"""Alg. 1 — Commit-Rate Adjustment at the Scheduler (online search).
+
+The scheduler is substrate-agnostic: it talks to the running system through
+the ``OnlineSystem`` protocol, which both the edge simulator
+(``repro.edgesim``) and the cluster runtime (``repro.launch.train``)
+implement. ``evaluate`` runs the system *live* (no state reset — this is
+the paper's online search) for a probe window under a given C_target and
+returns the (time, loss) samples observed.
+
+DECIDECOMMITRATE starts from C_target = max_i c_i + 1 (the smallest value
+letting every worker commit ≥ once per period), compares the rewards of
+C_target and C_target+1, and climbs while the reward improves. §4.2 argues
+the optimum is to the right of the start point, so a one-directional climb
+suffices; we also add a patience/max-probe guard so a noisy plateau cannot
+climb forever.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence
+
+import numpy as np
+
+from .reward import log_slope_reward, reward
+
+__all__ = ["OnlineSystem", "SearchTrace", "decide_commit_rate", "Scheduler"]
+
+
+class OnlineSystem(Protocol):
+    """What Alg. 1 needs from the system under control."""
+
+    def commit_counts(self) -> Sequence[int]:
+        """Current cumulative commit count c_i per worker."""
+        ...
+
+    def evaluate(self, c_target: int, probe_seconds: float) -> tuple[Sequence[float], Sequence[float]]:
+        """Run live with commit rates ΔC_i = C_target − c_i for
+        ``probe_seconds`` (virtual) seconds; return (times, losses) sampled
+        during the window (≥3 samples: start / middle / end)."""
+        ...
+
+
+@dataclasses.dataclass
+class SearchTrace:
+    """Record of one epoch's search, for EXPERIMENTS.md and tests."""
+
+    candidates: list[int] = dataclasses.field(default_factory=list)
+    rewards: list[float] = dataclasses.field(default_factory=list)
+    chosen: int = -1
+
+
+def decide_commit_rate(
+    system: OnlineSystem,
+    probe_seconds: float = 60.0,
+    max_probes: int = 16,
+) -> tuple[int, SearchTrace]:
+    """DECIDECOMMITRATE (Alg. 1 lines 8–16), iterative form.
+
+    Returns the chosen C_target and the search trace. The paper probes each
+    candidate for ~1 minute; probe_seconds is virtual time in the simulator.
+    """
+    trace = SearchTrace()
+    c_target = int(max(system.commit_counts())) + 1
+
+    t1, l1 = system.evaluate(c_target, probe_seconds)
+    all_losses = list(l1)
+    trace.candidates.append(c_target)
+
+    probes = 1
+    while probes < max_probes:
+        t2, l2 = system.evaluate(c_target + 1, probe_seconds)
+        all_losses += list(l2)
+        probes += 1
+        # Normalized (drift-free) decay-rate reward; see
+        # core.reward.log_slope_reward for why this replaces the paper's
+        # absolute-time formula in sequential probing.
+        r1 = log_slope_reward(t1, l1)
+        r2 = log_slope_reward(t2, l2)
+        if not trace.rewards:
+            trace.rewards.append(r1)
+        trace.candidates.append(c_target + 1)
+        trace.rewards.append(r2)
+        if r2 > r1:
+            c_target, t1, l1 = c_target + 1, t2, l2
+        else:
+            break
+    trace.chosen = c_target
+    if not trace.rewards:  # max_probes == 1
+        trace.rewards.append(log_slope_reward(t1, l1))
+    return c_target, trace
+
+
+def _shared_ref(losses: Sequence[float]) -> float:
+    l = np.asarray(losses, dtype=np.float64)
+    drop = max(float(l[0] - l.min()), 1e-6)
+    return float(l.min() - 0.1 * drop)
+
+
+@dataclasses.dataclass
+class Scheduler:
+    """MAINFUNCTION (Alg. 1 lines 1–7): per-epoch commit-rate control.
+
+    Drives an OnlineSystem that additionally exposes ``run(seconds)`` and
+    ``set_c_target(c)``; the edgesim simulator satisfies this.
+    """
+
+    epoch_seconds: float = 1200.0  # paper default: 20-minute epochs
+    probe_seconds: float = 60.0
+    max_probes: int = 16
+    traces: list[SearchTrace] = dataclasses.field(default_factory=list)
+
+    def run_epoch(self, system) -> int:
+        c_target, trace = decide_commit_rate(
+            system, self.probe_seconds, self.max_probes
+        )
+        self.traces.append(trace)
+        spent = self.probe_seconds * len(trace.candidates)
+        remaining = max(self.epoch_seconds - spent, 0.0)
+        system.set_c_target(c_target)
+        if remaining > 0:
+            system.run(remaining)
+        return c_target

@@ -1,0 +1,202 @@
+"""Analytical results from the ADSP paper (Hu, Wang, Wu — AAAI 2020).
+
+Implements:
+  * Eqn. (3): the geometric-staleness parameter ``p`` and the implicit
+    momentum ``mu_implicit = 1 - p`` induced by accumulated local updates
+    (Theorem 1).
+  * Appendix C: closed-form average training speeds (steps/sec) of BSP,
+    SSP, Fixed ADACOMM and ADSP over a heterogeneous worker set, used both
+    by benchmarks and by the cluster scheduler's napkin math.
+  * The commit-interval / local-step-count transforms used by Alg. 2
+    (timer timeout Γ/ΔC_i − O_i) and by the reference sequence in the
+    convergence proof (D_i = Γ/(ΔC_i · v_i) — note the paper's Appendix B
+    writes this as a time quantity; the *step count* between commits is
+    τ_i = v_i · (Γ/ΔC_i − O_i), which is what a discrete simulator and the
+    TPU runtime use).
+
+Everything here is plain float math on Python/numpy scalars and arrays —
+no jax — so the scheduler can run on a CPU host thread without touching
+device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "WorkerProfile",
+    "staleness_p",
+    "mu_implicit",
+    "commit_interval_seconds",
+    "local_steps_between_commits",
+    "commit_rates_from_target",
+    "effective_step_time",
+    "heterogeneity_degree",
+    "speed_bsp",
+    "speed_ssp",
+    "speed_fixed_adacomm",
+    "speed_adsp",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerProfile:
+    """Static capability profile of one edge worker.
+
+    Attributes:
+      v: training speed, mini-batch steps per (virtual) second.
+      o: communication overhead per commit (push U_i + pull W), seconds.
+    """
+
+    v: float
+    o: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.v <= 0:
+            raise ValueError(f"worker speed must be positive, got {self.v}")
+        if self.o < 0:
+            raise ValueError(f"comm overhead must be >= 0, got {self.o}")
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 / Eqn. (3): implicit momentum
+# ---------------------------------------------------------------------------
+
+def staleness_p(
+    delta_c: Sequence[float],
+    v: Sequence[float],
+    gamma: float,
+) -> float:
+    """Eqn. (3): p = 1 / (1 + (1 - 1/m) * sum_i Γ / (ΔC_i · v_i)).
+
+    Args:
+      delta_c: per-worker commit rates ΔC_target^i (commits per check period).
+      v: per-worker speeds (steps/sec).
+      gamma: check-period length Γ (seconds).
+    Returns:
+      p ∈ (0, 1]; the staleness of commits is Geom(p).
+    """
+    delta_c = np.asarray(delta_c, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    if delta_c.shape != v.shape or delta_c.ndim != 1:
+        raise ValueError("delta_c and v must be equal-length 1-D sequences")
+    if np.any(delta_c <= 0) or np.any(v <= 0) or gamma <= 0:
+        raise ValueError("delta_c, v, gamma must be positive")
+    m = delta_c.shape[0]
+    s = float(np.sum(gamma / (delta_c * v)))
+    return 1.0 / (1.0 + (1.0 - 1.0 / m) * s)
+
+
+def mu_implicit(
+    delta_c: Sequence[float],
+    v: Sequence[float],
+    gamma: float,
+) -> float:
+    """Implicit momentum μ_implicit = 1 − p (Theorem 1).
+
+    Monotonically decreasing in each ΔC_i: more frequent commits → less
+    staleness → less implicit momentum.
+    """
+    return 1.0 - staleness_p(delta_c, v, gamma)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 transforms
+# ---------------------------------------------------------------------------
+
+def commit_interval_seconds(gamma: float, delta_c_i: float, o_i: float) -> float:
+    """Timer timeout used by worker i: Γ/ΔC_i − O_i  (Alg. 2 line 4).
+
+    Clamped at a small positive floor — if the worker's communication
+    overhead already exceeds its commit budget, it commits back-to-back.
+    """
+    if delta_c_i <= 0:
+        raise ValueError("commit rate must be positive")
+    return max(gamma / delta_c_i - o_i, 1e-9)
+
+
+def local_steps_between_commits(
+    profile: WorkerProfile, gamma: float, delta_c_i: float
+) -> int:
+    """τ_i: number of mini-batch steps worker i trains between two commits.
+
+    τ_i = v_i · (Γ/ΔC_i − O_i), floored at 1 (a worker always trains at
+    least one step per commit — committing an empty update is useless).
+    """
+    t = commit_interval_seconds(gamma, delta_c_i, profile.o)
+    return max(1, int(math.floor(profile.v * t)))
+
+
+def commit_rates_from_target(
+    c_target: int, commit_counts: Sequence[int]
+) -> np.ndarray:
+    """ΔC_target^i = C_target − c_i (floored at 1: every worker must commit
+    at least once per check period, per §4.2)."""
+    c = np.asarray(commit_counts, dtype=np.int64)
+    return np.maximum(c_target - c, 1)
+
+
+# ---------------------------------------------------------------------------
+# Appendix C: average-speed model
+# ---------------------------------------------------------------------------
+
+def effective_step_time(profile: WorkerProfile, tau_i: float) -> float:
+    """t′_i = t_i + O_i/τ_i — per-step time amortizing commit overhead
+    over τ_i local steps (Appendix C 'Conclusion'). For BSP τ_i = 1."""
+    if tau_i <= 0:
+        raise ValueError("tau must be positive")
+    return 1.0 / profile.v + profile.o / tau_i
+
+
+def heterogeneity_degree(v: Sequence[float]) -> float:
+    """H = mean(v) / min(v) (§5.2)."""
+    v = np.asarray(v, dtype=np.float64)
+    if np.any(v <= 0):
+        raise ValueError("speeds must be positive")
+    return float(np.mean(v) / np.min(v))
+
+
+def speed_bsp(profiles: Sequence[WorkerProfile]) -> float:
+    """V_BSP = 1 / max_i (t_i + O_i)  [steps/sec, per-worker synchronous]."""
+    return 1.0 / max(effective_step_time(p, 1.0) for p in profiles)
+
+
+def speed_fixed_adacomm(profiles: Sequence[WorkerProfile], tau: int) -> float:
+    """V_Fixed = 1 / max_i (t_i + O_i/τ).
+
+    Note the paper's Appendix C writes 1/(max_i τ(t_i + O_i/τ)) in units of
+    *rounds*; per-step speed divides the round time by the τ steps trained,
+    giving 1/max_i(t_i + O_i/τ).
+    """
+    return 1.0 / max(effective_step_time(p, float(tau)) for p in profiles)
+
+
+def speed_ssp(profiles: Sequence[WorkerProfile], s: int, tau: int = 1) -> float:
+    """SSP sits between BSP and Fixed ADACOMM (Appendix C):
+    V_BSP ≤ V_SSP ≤ V_Fixed, equal to BSP at s=1 (well, s=0 barrier) and to
+    Fixed at homogeneity. We model it as a linear interpolation in the
+    slack s (bounded by τ): a coarse but monotone surrogate used only for
+    napkin math — the edgesim measures SSP speed exactly by simulation.
+    """
+    lo, hi = speed_bsp(profiles), speed_fixed_adacomm(profiles, max(tau, 1))
+    frac = min(max(s, 0), tau) / max(tau, 1)
+    return lo + (hi - lo) * frac
+
+
+def speed_adsp(
+    profiles: Sequence[WorkerProfile],
+    gamma: float,
+    delta_c: Sequence[float],
+) -> float:
+    """V_ADSP = (1/m) Σ_i 1/(t_i + O_i/τ_i), with τ_i from the rate rule
+    t_i τ_i + O_i = Γ/ΔC_i. Every worker contributes its own full speed —
+    the no-waiting property."""
+    total = 0.0
+    for p, dc in zip(profiles, delta_c, strict=True):
+        tau_i = max((gamma / dc - p.o) * p.v, 1.0)
+        total += 1.0 / effective_step_time(p, tau_i)
+    return total / len(profiles)

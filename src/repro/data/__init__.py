@@ -1,0 +1,15 @@
+from .synthetic import (
+    cifar_like,
+    fatigue_like,
+    chiller_like,
+    lm_tokens,
+    WorkerShardedStream,
+)
+
+__all__ = [
+    "cifar_like",
+    "fatigue_like",
+    "chiller_like",
+    "lm_tokens",
+    "WorkerShardedStream",
+]

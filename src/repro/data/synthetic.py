@@ -1,0 +1,180 @@
+"""Synthetic stand-ins for the paper's three datasets (offline container).
+
+The paper trains (i) a CNN on Cifar-10, (ii) an RNN on a high-speed-rail
+fatigue dataset, (iii) a linear SVM on a chiller COP dataset. None are
+available offline, so we generate statistically-similar problems whose
+*relative* convergence behaviour is what the benchmarks compare:
+
+* ``cifar_like``: 10-class 24×24×3 images. Each class k has a smooth
+  class-specific template (mixture of 2-D Gaussian bumps, fixed by seed)
+  plus per-sample noise and random shifts — learnable by a small CNN but
+  not trivially linearly separable.
+* ``fatigue_like``: sequences of "stress" readings from an AR(1) process
+  whose drift/variance depend on a latent 3-level fatigue label,
+  plus static covariates (age, route, temperature) — an RNN problem.
+* ``chiller_like``: linear regression-ish COP labels from temperature /
+  electricity / age features with heteroscedastic noise — an SVM/linear
+  problem (we use hinge-free L2-regularized regression-SVM form).
+* ``lm_tokens``: uniform-ish Zipf token streams for the LM architectures'
+  smoke tests and the e2e 100M-parameter example.
+
+Every generator is a pure function of (seed, index range) — workers draw
+disjoint shards deterministically, so heterogeneous arrival *rates* (a
+worker property) are independent from data *content*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["cifar_like", "fatigue_like", "chiller_like", "lm_tokens", "WorkerShardedStream"]
+
+
+def _rng(seed: int, *salts: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, *salts]))
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-like images
+# ---------------------------------------------------------------------------
+
+_N_CLASSES = 10
+_IMG = 24
+
+
+def _class_templates(seed: int, img: int = _IMG) -> np.ndarray:
+    """(10, img, img, 3) smooth per-class patterns."""
+    rng = _rng(seed, 101)
+    yy, xx = np.mgrid[0:img, 0:img].astype(np.float64) / img
+    t = np.zeros((_N_CLASSES, img, img, 3))
+    for k in range(_N_CLASSES):
+        for _ in range(3):
+            cx, cy = rng.uniform(0.15, 0.85, size=2)
+            sx, sy = rng.uniform(0.08, 0.3, size=2)
+            amp = rng.uniform(0.5, 1.5, size=3)
+            bump = np.exp(-((xx - cx) ** 2 / (2 * sx**2) + (yy - cy) ** 2 / (2 * sy**2)))
+            t[k] += bump[..., None] * amp[None, None, :]
+    t -= t.mean(axis=(1, 2, 3), keepdims=True)
+    t /= t.std(axis=(1, 2, 3), keepdims=True) + 1e-8
+    return t
+
+
+def cifar_like(
+    seed: int, start: int, count: int, noise: float = 0.8, img: int = _IMG
+) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic (images[count, img, img, 3] f32, labels[count] i32)."""
+    templates = _class_templates(seed, img)
+    rng = _rng(seed, 202, start, count)
+    labels = rng.integers(0, _N_CLASSES, size=count)
+    shifts = rng.integers(-3, 4, size=(count, 2))
+    x = templates[labels]
+    # random circular shifts (cheap augmentation surrogate)
+    i = np.arange(count)[:, None, None]
+    rows = (np.arange(img)[None, :, None] + shifts[:, 0:1, None]) % img  # (N,img,1)
+    cols = (np.arange(img)[None, None, :] + shifts[:, 1:2, None]) % img  # (N,1,img)
+    x = x[i, rows, cols, :]
+    x = x + noise * rng.standard_normal(x.shape)
+    return x.astype(np.float32), labels.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fatigue-like sequences (RNN)
+# ---------------------------------------------------------------------------
+
+def fatigue_like(
+    seed: int, start: int, count: int, seq_len: int = 32
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(stress[count, seq_len] f32, covariates[count, 4] f32, label[count] i32).
+
+    Label ∈ {0,1,2}: fatigue level. Higher latent fatigue ⇒ higher stress
+    drift + variance; covariates (age, route one-hot-ish, temperature)
+    shift the thresholds.
+    """
+    rng = _rng(seed, 303, start, count)
+    level = rng.integers(0, 3, size=count)
+    age = rng.uniform(0, 1, size=count)
+    route = rng.uniform(0, 1, size=count)
+    temp = rng.uniform(-1, 1, size=count)
+    drift = 0.05 + 0.25 * level + 0.2 * age
+    sigma = 0.2 + 0.15 * level + 0.1 * np.abs(temp)
+    eps = rng.standard_normal((count, seq_len))
+    x = np.zeros((count, seq_len))
+    prev = rng.standard_normal(count) * 0.1
+    for t in range(seq_len):
+        prev = 0.9 * prev + drift + sigma * eps[:, t]
+        x[:, t] = prev
+    cov = np.stack([age, route, temp, np.ones_like(age)], axis=1)
+    return x.astype(np.float32), cov.astype(np.float32), level.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Chiller-like tabular (linear SVM / COP prediction)
+# ---------------------------------------------------------------------------
+
+def chiller_like(seed: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """(features[count, 6] f32, cop[count] f32). Near-linear ground truth."""
+    rng = _rng(seed, 404, start, count)
+    outlet = rng.uniform(5, 12, size=count)
+    outdoor = rng.uniform(10, 38, size=count)
+    kwh = rng.uniform(50, 400, size=count)
+    age = rng.uniform(0, 10, size=count)
+    load = rng.uniform(0.3, 1.0, size=count)
+    x = np.stack([outlet, outdoor, kwh / 100, age, load, np.ones_like(age)], axis=1)
+    cop = (
+        6.0
+        - 0.08 * (outdoor - 24)
+        + 0.12 * (outlet - 8)
+        - 0.06 * age
+        + 0.8 * load
+        - 0.15 * (kwh / 100 - 2) ** 2 * 0.2
+    )
+    cop = cop + 0.15 * rng.standard_normal(count)
+    mu, sd = x.mean(axis=0), x.std(axis=0) + 1e-8
+    x = (x - mu) / sd
+    x[:, -1] = 1.0  # keep bias column
+    return x.astype(np.float32), cop.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def lm_tokens(
+    seed: int, start: int, batch: int, seq_len: int, vocab: int
+) -> np.ndarray:
+    """(batch, seq_len+1) i32 Zipf-ish token ids — slice [:, :-1] as inputs
+    and [:, 1:] as labels. Markov-ish structure: each token biases the next
+    token's bucket, so a model can actually reduce loss below uniform."""
+    rng = _rng(seed, 505, start, batch)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = 1.0 / ranks**1.1
+    p /= p.sum()
+    toks = rng.choice(vocab, size=(batch, seq_len + 1), p=p)
+    # inject copy structure: with prob .3 next token = current token
+    mask = rng.uniform(size=(batch, seq_len)) < 0.3
+    toks[:, 1:][mask] = toks[:, :-1][mask]
+    return toks.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Worker-sharded stream
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerShardedStream:
+    """Deterministic per-worker mini-batch streams over a generator.
+
+    ``gen(seed, start, count) -> batch-tuple``; worker w's step s draws the
+    half-open index range [cursor, cursor+batch) from an interleaved
+    per-worker shard (disjoint across workers)."""
+
+    gen: Callable
+    seed: int
+    num_workers: int
+
+    def __call__(self, worker: int, step: int, batch_size: int):
+        start = (step * self.num_workers + worker) * batch_size
+        return self.gen(self.seed, start, batch_size)

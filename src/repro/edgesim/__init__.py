@@ -1,0 +1,27 @@
+"""Virtual-clock, event-driven simulator of heterogeneous edge training.
+
+Faithfully reproduces the paper's testbed semantics (M heterogeneous
+workers + 1 PS, per-worker speeds and commit overheads, waiting-time
+accounting) while doing *real* JAX gradient computation, so loss curves are
+real and only wall-clock is virtual (deterministic and seeded).
+"""
+
+from .simulator import Simulator, SimConfig, TrainTask, WorkerState, SimResult
+from .profiles import (
+    ec2_profiles,
+    ratio_profiles,
+    heterogeneity_profiles,
+    smartphone_profiles,
+)
+
+__all__ = [
+    "Simulator",
+    "SimConfig",
+    "TrainTask",
+    "WorkerState",
+    "SimResult",
+    "ec2_profiles",
+    "ratio_profiles",
+    "heterogeneity_profiles",
+    "smartphone_profiles",
+]

@@ -1,0 +1,103 @@
+"""Heterogeneity profiles mirroring the paper's testbeds.
+
+* Table 1 (Amazon EC2): 7× t2.large, 5× t2.xlarge, 4× t2.2xlarge,
+  2× t3.xlarge workers (+1 t3.2xlarge PS — the PS is not a worker).
+  We map vCPU count to relative training speed, which matches the paper's
+  observed ~1:1:3 spread for the CNN workload.
+* Table 2 (smartphone market share): Geekbench multi-core scores as
+  relative speeds, sampled by market share.
+* ``ratio_profiles``: the 1:1:3 motivating setup of Fig. 1/3.
+* ``heterogeneity_profiles``: profiles with a prescribed heterogeneity
+  degree H = mean(v)/min(v) (Fig. 5), built by slowing a subset of
+  workers ("sleep after each step"), exactly like the paper's experiment.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.theory import WorkerProfile, heterogeneity_degree
+
+__all__ = [
+    "ratio_profiles",
+    "ec2_profiles",
+    "smartphone_profiles",
+    "heterogeneity_profiles",
+]
+
+
+def ratio_profiles(
+    ratios=(1.0, 1.0, 3.0), base_v: float = 1.0, o: float = 0.2
+) -> list[WorkerProfile]:
+    """Workers whose *per-step times* have the given ratios (1:1:3 means the
+    third worker is 3× slower, as in the paper's Fig. 1/3 setup)."""
+    return [WorkerProfile(v=base_v / r, o=o) for r in ratios]
+
+
+# vCPUs of the EC2 instance types used in Table 1.
+_EC2 = [
+    ("t2.large", 2, 7),
+    ("t2.xlarge", 4, 5),
+    ("t2.2xlarge", 8, 4),
+    ("t3.xlarge", 4, 2),
+]
+
+
+def ec2_profiles(o: float = 0.2, scale: float = 0.5) -> list[WorkerProfile]:
+    """18 workers following Table 1 (the 19th instance is the PS).
+
+    Speed ∝ vCPUs × scale (t2.large ⇒ 1 step/s at scale 0.5)."""
+    out = []
+    for _name, vcpus, count in _EC2:
+        out.extend(WorkerProfile(v=vcpus * scale, o=o) for _ in range(count))
+    return out
+
+
+_PHONES = [  # (geekbench multicore, share) — Table 2
+    (2759, 0.0622),
+    (4459, 0.0777 + 0.0434 + 0.0389),
+    (5937, 0.1205 + 0.0996),
+    (6711, 0.0296),
+    (11421, 0.0568 + 0.0500 + 0.0404),
+]
+
+
+def smartphone_profiles(
+    m: int, o: float = 0.3, seed: int = 0, per_score: float = 1 / 4459
+) -> list[WorkerProfile]:
+    """Sample m phone-class workers by market share (Table 2)."""
+    rng = np.random.default_rng(seed)
+    scores = np.array([s for s, _ in _PHONES], dtype=np.float64)
+    shares = np.array([w for _, w in _PHONES], dtype=np.float64)
+    shares /= shares.sum()
+    picks = rng.choice(len(scores), size=m, p=shares)
+    return [WorkerProfile(v=float(scores[i]) * per_score, o=o) for i in picks]
+
+
+def heterogeneity_profiles(
+    m: int, H: float, base_v: float = 2.0, o: float = 0.2
+) -> list[WorkerProfile]:
+    """Build m workers with heterogeneity degree ≈ H (Fig. 5).
+
+    Half the workers run at base_v, half are slowed to v_slow chosen so
+    that mean(v)/min(v) = H (H ≥ 1). For H = 1 all run at base_v.
+    """
+    if H < 1.0:
+        raise ValueError("H must be >= 1")
+    if H == 1.0:
+        return [WorkerProfile(v=base_v, o=o) for _ in range(m)]
+    k = m // 2  # number of slow workers
+    # mean = ((m-k)*base + k*slow)/m ; mean/slow = H  =>
+    # slow = (m-k)*base / (m*H - k)
+    denom = m * H - k
+    if denom <= 0:
+        raise ValueError(f"H={H} unreachable with m={m}")
+    v_slow = (m - k) * base_v / denom
+    if v_slow > base_v:
+        raise ValueError(f"H={H} < 1 effective; increase H")
+    profiles = [WorkerProfile(v=base_v, o=o)] * (m - k) + [
+        WorkerProfile(v=v_slow, o=o)
+    ] * k
+    got = heterogeneity_degree([p.v for p in profiles])
+    assert abs(got - H) < 1e-6, (got, H)
+    return profiles

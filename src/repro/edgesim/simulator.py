@@ -1,0 +1,359 @@
+"""Event-driven virtual-clock simulator of PS-based edge training.
+
+Semantics (matching the paper's testbed + Alg. 2):
+
+* M workers with profiles (v_i steps/sec, O_i seconds per commit round
+  trip). Worker i trains mini-batches back to back; each step takes
+  ``batch_scale_i / v_i`` virtual seconds (batch_scale_i = 1 for equal
+  per-worker batches; BatchTune policies enlarge fast workers' batches).
+* After each step the active ``SyncPolicy`` decides whether the worker
+  commits its accumulated update U_i. A commit costs O_i/2 (push), the PS
+  applies ``W ← W − η_global · U_i`` (immediately, or after a barrier
+  collects the whole round), and the pull costs another O_i/2, after which
+  the worker resumes with fresh parameters.
+* The *waiting time* of a worker is everything that is not computation:
+  waiting_i = elapsed − steps_i · step_time_i  (the paper's definition —
+  communication counts as waiting).
+* A checkpoint hook fires every Γ; epochs are driven by ``train()``.
+* The global loss is evaluated (on held-out data, zero virtual cost) every
+  ``eval_interval`` seconds; convergence is declared when the last
+  ``converge_window`` evals vary by less than ``converge_tol`` (the
+  paper's criterion) or when the loss first reaches ``target_loss``.
+
+All randomness is seeded; two runs with the same config are bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sync import SyncPolicy
+from repro.core.theory import WorkerProfile
+
+__all__ = ["TrainTask", "SimConfig", "WorkerState", "Simulator", "SimResult"]
+
+Pytree = object
+
+
+@dataclasses.dataclass
+class TrainTask:
+    """The learning problem, expressed as jitted JAX callables.
+
+    grad_fn(params, batch) -> (loss, grads)
+    eval_fn(params, batch) -> loss
+    make_batch(worker_index, step, batch_size) -> batch   (seeded, cheap)
+    eval_batch: held-out batch for global-loss evaluation.
+    """
+
+    init_params: Pytree
+    grad_fn: Callable
+    eval_fn: Callable
+    make_batch: Callable
+    eval_batch: object
+    name: str = "task"
+
+
+@dataclasses.dataclass
+class SimConfig:
+    gamma: float = 60.0  # check period Γ
+    epoch_seconds: float = 1200.0  # paper: 20 min
+    eval_interval: float = 5.0
+    local_lr: float = 0.1  # η′ initial (paper default)
+    local_lr_decay: float = 0.98  # exponential decay per check period
+    global_lr: float | None = None  # default 1/M (paper default)
+    base_batch: int = 128  # per-worker mini-batch at equal split
+    max_seconds: float = 3600.0
+    target_loss: float | None = None
+    converge_window: int = 10
+    converge_tol: float = 1e-3
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class WorkerState:
+    index: int
+    profile: WorkerProfile
+    params: Pytree
+    update: Pytree  # accumulated U_i
+    steps: int = 0
+    steps_since_commit: int = 0
+    commits: int = 0
+    computation_time: float = 0.0
+    comm_time: float = 0.0
+    blocked_since: float = -1.0
+    delta_c_target: int = 1
+    next_commit_time: float = math.inf
+    status: str = "idle"  # idle | computing | committing | awaiting_release | blocked
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    times: np.ndarray  # eval times
+    losses: np.ndarray  # global loss at eval times
+    converged: bool
+    convergence_time: float  # virtual seconds (inf if not converged)
+    total_steps: int
+    total_commits: int
+    elapsed: float
+    computation_time: float  # summed over workers
+    waiting_time: float  # summed over workers (elapsed*M − computation)
+    bytes_to_ps: float  # commits × model size (bandwidth proxy)
+    commit_counts: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def waiting_fraction(self) -> float:
+        tot = self.computation_time + self.waiting_time
+        return self.waiting_time / tot if tot > 0 else 0.0
+
+
+class Simulator:
+    """See module docstring."""
+
+    def __init__(self, task: TrainTask, profiles: Sequence[WorkerProfile],
+                 policy: SyncPolicy, config: SimConfig | None = None):
+        self.task = task
+        self.policy = policy
+        self.cfg = config or SimConfig()
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.num_workers = len(profiles)
+        self._zero = jax.tree.map(jnp.zeros_like, task.init_params)
+        self.global_params = task.init_params
+        self.workers = [
+            WorkerState(i, p, task.init_params, self._zero)
+            for i, p in enumerate(profiles)
+        ]
+        self.global_lr = (
+            self.cfg.global_lr if self.cfg.global_lr is not None else 1.0 / self.num_workers
+        )
+        self.loss_history: list[tuple[float, float]] = []
+        self.converged = False
+        self.convergence_time = math.inf
+        self.total_commits = 0
+        self._barrier_buf: dict[int, Pytree] = {}
+        self._param_sizes = sum(
+            int(np.prod(x.shape)) for x in jax.tree.leaves(task.init_params)
+        )
+        self._next_eval = 0.0
+        self._next_checkpoint = self.cfg.gamma
+        self._local_lr = self.cfg.local_lr
+        # jitted helpers -----------------------------------------------------
+        self._accum = jax.jit(
+            lambda u, g, lr: jax.tree.map(lambda a, b: a + lr * b, u, g)
+        )
+        self._sgd = jax.jit(
+            lambda p, g, lr: jax.tree.map(lambda a, b: a - lr * b, p, g)
+        )
+        self._apply_commit = jax.jit(
+            lambda w, u, lr: jax.tree.map(lambda a, b: a - lr * b, w, u)
+        )
+        self.policy.on_sim_start(self)
+        for w in self.workers:
+            self._start_step(w)
+        self._eval_global()
+
+    # ------------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, wid: int) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, wid))
+
+    def _step_time(self, w: WorkerState) -> float:
+        frac = self.policy.batch_fraction(self, w.index)
+        batch_scale = frac * self.num_workers
+        return batch_scale / w.profile.v
+
+    def _batch_size(self, w: WorkerState) -> int:
+        frac = self.policy.batch_fraction(self, w.index)
+        return max(1, int(round(frac * self.num_workers * self.cfg.base_batch)))
+
+    def _start_step(self, w: WorkerState) -> None:
+        if self.policy.may_start_next_step(self, w):
+            w.status = "computing"
+            self._push(self.now + self._step_time(w), "step_done", w.index)
+        else:
+            w.status = "blocked"
+            w.blocked_since = self.now
+
+    def _retry_blocked(self) -> None:
+        for w in self.workers:
+            if w.status == "blocked" and self.policy.may_start_next_step(self, w):
+                w.status = "computing"
+                self._push(self.now + self._step_time(w), "step_done", w.index)
+
+    # ------------------------------------------------------------------ handlers
+    def _on_step_done(self, w: WorkerState) -> None:
+        w.steps += 1
+        w.steps_since_commit += 1
+        w.computation_time += self._step_time(w)
+        batch = self.task.make_batch(w.index, w.steps, self._batch_size(w))
+        _loss, grads = self.task.grad_fn(w.params, batch)
+        w.params = self._sgd(w.params, grads, self._local_lr)
+        w.update = self._accum(w.update, grads, self._local_lr)
+        if self.policy.should_commit(self, w):
+            w.status = "committing"
+            w.comm_time += w.profile.o
+            self._push(self.now + w.profile.o / 2.0, "commit_arrive", w.index)
+        else:
+            self._start_step(w)
+        self._retry_blocked()
+
+    def _on_commit_arrive(self, w: WorkerState) -> None:
+        if self.policy.apply_mode == "barrier":
+            self._barrier_buf[w.index] = w.update
+            w.status = "awaiting_release"
+            if len(self._barrier_buf) == self.num_workers:
+                for wid in sorted(self._barrier_buf):
+                    self._do_apply(self.workers[wid])
+                self._barrier_buf.clear()
+                for ww in self.workers:
+                    self._push(self.now + ww.profile.o / 2.0, "pull_done", ww.index)
+        else:
+            self._do_apply(w)
+            self._push(self.now + w.profile.o / 2.0, "pull_done", w.index)
+
+    def _do_apply(self, w: WorkerState) -> None:
+        self.global_params = self._apply_commit(
+            self.global_params, w.update, self.global_lr
+        )
+        self.total_commits += 1
+
+    def _on_pull_done(self, w: WorkerState) -> None:
+        w.params = self.global_params
+        w.update = self._zero
+        w.steps_since_commit = 0
+        w.commits += 1
+        self.policy.on_commit_applied(self, w)
+        self._start_step(w)
+        self._retry_blocked()
+
+    # ------------------------------------------------------------------ loop
+    def _run_until(self, t_end: float) -> None:
+        while self._heap and not self.converged:
+            t = self._heap[0][0]
+            # Fire evals/checkpoints that precede the next worker event.
+            while self._next_eval <= min(t, t_end):
+                self.now = self._next_eval
+                self._eval_global()
+                self._next_eval += self.cfg.eval_interval
+                if self.converged:
+                    return
+            while self._next_checkpoint <= min(t, t_end):
+                self.now = self._next_checkpoint
+                self._local_lr = self.cfg.local_lr * (
+                    self.cfg.local_lr_decay ** (self.now / self.cfg.gamma)
+                )
+                self.policy.on_checkpoint(self)
+                self._next_checkpoint += self.cfg.gamma
+            if t > t_end:
+                self.now = t_end
+                return
+            t, _, kind, wid = heapq.heappop(self._heap)
+            self.now = t
+            w = self.workers[wid]
+            if kind == "step_done":
+                self._on_step_done(w)
+            elif kind == "commit_arrive":
+                self._on_commit_arrive(w)
+            elif kind == "pull_done":
+                self._on_pull_done(w)
+        self.now = min(t_end, self.now) if self._heap else t_end
+
+    def _eval_global(self) -> None:
+        loss = float(self.task.eval_fn(self.global_params, self.task.eval_batch))
+        self.loss_history.append((self.now, loss))
+        if self.cfg.target_loss is not None and loss <= self.cfg.target_loss:
+            self._declare_converged()
+            return
+        k = self.cfg.converge_window
+        if (
+            len(self.loss_history) >= k
+            and self.cfg.target_loss is None
+            # Variance-based convergence only counts once the global model
+            # has actually been trained (≥1 commit per worker on average)
+            # and improved on its initial loss — otherwise the flat
+            # pre-first-commit plateau would trigger it.
+            and self.total_commits >= self.num_workers
+            and loss < self.loss_history[0][1]
+        ):
+            recent = [l for _, l in self.loss_history[-k:]]
+            if max(recent) - min(recent) < self.cfg.converge_tol:
+                self._declare_converged()
+
+    def _declare_converged(self) -> None:
+        if not self.converged:
+            self.converged = True
+            self.convergence_time = self.now
+
+    # ------------------------------------------------------------------ API
+    def recent_global_loss(self) -> float | None:
+        if not self.loss_history:
+            return None
+        tail = self.loss_history[-3:]
+        return float(np.mean([l for _, l in tail]))
+
+    def run_window(self, seconds: float) -> tuple[list[float], list[float]]:
+        """Run live for `seconds`; return (times, losses) sampled within —
+        the OnlineEvaluate primitive of Alg. 1."""
+        start = self.now
+        self._eval_global()
+        self._run_until(start + seconds)
+        if not self.converged:  # don't jump the clock past a finished run
+            self.now = max(self.now, start + seconds)
+        self._eval_global()
+        ts = [t for t, _ in self.loss_history if t >= start]
+        ls = [l for t, l in self.loss_history if t >= start]
+        if len(ts) < 3:  # force a midpoint sample for the curve fit
+            ts.insert(1, (ts[0] + ts[-1]) / 2)
+            ls.insert(1, (ls[0] + ls[-1]) / 2)
+        return ts, ls
+
+    def run(self, seconds: float) -> None:
+        self._run_until(self.now + seconds)
+
+    def set_c_target(self, c: int) -> None:
+        if hasattr(self.policy, "c_target"):
+            self.policy.c_target = int(c)
+            self.policy._assign_rates(self)
+
+    def train(self, max_seconds: float | None = None) -> SimResult:
+        """Drive epochs until convergence or the time budget."""
+        budget = max_seconds if max_seconds is not None else self.cfg.max_seconds
+        while self.now < budget and not self.converged:
+            self.policy.on_epoch(self)  # may consume probe windows
+            if self.converged:
+                break
+            t_epoch_end = min(self.now + self.cfg.epoch_seconds, budget)
+            self._run_until(t_epoch_end)
+            if not self._heap:
+                break
+        return self.result()
+
+    def result(self) -> SimResult:
+        times = np.array([t for t, _ in self.loss_history])
+        losses = np.array([l for _, l in self.loss_history])
+        comp = sum(w.computation_time for w in self.workers)
+        elapsed = self.now
+        waiting = max(elapsed * self.num_workers - comp, 0.0)
+        return SimResult(
+            policy=self.policy.name,
+            times=times,
+            losses=losses,
+            converged=self.converged,
+            convergence_time=self.convergence_time,
+            total_steps=sum(w.steps for w in self.workers),
+            total_commits=self.total_commits,
+            elapsed=elapsed,
+            computation_time=comp,
+            waiting_time=waiting,
+            bytes_to_ps=4.0 * self._param_sizes * self.total_commits,
+            commit_counts=[w.commits for w in self.workers],
+        )

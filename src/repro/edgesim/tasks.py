@@ -1,0 +1,53 @@
+"""Ready-made TrainTasks binding the paper's three applications to the
+simulator: CNN/cifar-like, RNN/fatigue-like, SVM/chiller-like."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.data.synthetic import cifar_like, fatigue_like, chiller_like, WorkerShardedStream
+from repro.models.small import CNN, RNN, LinearSVM, make_task_fns
+from .simulator import TrainTask
+
+__all__ = ["cnn_task", "rnn_task", "svm_task", "make_task"]
+
+
+def cnn_task(
+    num_workers: int, seed: int = 0, width: int = 16, noise: float = 2.5
+) -> TrainTask:
+    """noise=2.5 gives a Cifar-10-like difficulty: a few hundred steps to
+    cross loss 0.5 — tens of ADSP check periods, like the paper's runs."""
+    model = CNN(width=width)
+    grad_fn, eval_fn = make_task_fns(model)
+    params = model.init(jax.random.PRNGKey(seed))
+    gen = functools.partial(cifar_like, noise=noise)
+    stream = WorkerShardedStream(gen, seed, num_workers)
+    ex, ey = gen(seed, 10**9, 512)  # same concept (seed), held-out index range
+    return TrainTask(params, grad_fn, eval_fn, stream, (ex, ey), name="cnn_cifar_like")
+
+
+def rnn_task(num_workers: int, seed: int = 0, hidden: int = 32) -> TrainTask:
+    model = RNN(hidden=hidden)
+    grad_fn, eval_fn = make_task_fns(model)
+    params = model.init(jax.random.PRNGKey(seed))
+    stream = WorkerShardedStream(fatigue_like, seed, num_workers)
+    ex, ecov, ey = fatigue_like(seed, 10**9, 512)
+    return TrainTask(params, grad_fn, eval_fn, stream, (ex, ecov, ey), name="rnn_fatigue_like")
+
+
+def svm_task(num_workers: int, seed: int = 0) -> TrainTask:
+    model = LinearSVM()
+    grad_fn, eval_fn = make_task_fns(model)
+    params = model.init(jax.random.PRNGKey(seed))
+    stream = WorkerShardedStream(chiller_like, seed, num_workers)
+    ex, ey = chiller_like(seed, 10**9, 1024)
+    return TrainTask(params, grad_fn, eval_fn, stream, (ex, ey), name="svm_chiller_like")
+
+
+_TASKS = {"cnn": cnn_task, "rnn": rnn_task, "svm": svm_task}
+
+
+def make_task(name: str, num_workers: int, seed: int = 0, **kw) -> TrainTask:
+    return _TASKS[name](num_workers, seed, **kw)

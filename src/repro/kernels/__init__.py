@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper with padding/dispatch), ref.py (pure-jnp oracle used by
+tests). Kernels target TPU VMEM tiling and are validated on CPU with
+interpret=True.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,161 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, dtype plumbing, pytree dispatch for
+the commit ops, and the interpret-mode switch: ``interpret=None`` (the
+default) auto-selects interpret=True unless a TPU backend is present, so
+the same call sites work in the CPU container (validation) and on real
+hardware (performance).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import fused_commit as _fc
+from . import rglru_scan as _rg
+from . import rwkv6_scan as _rw
+
+__all__ = [
+    "flash_attention",
+    "rglru_scan",
+    "rwkv6_scan",
+    "accumulate_tree",
+    "ps_apply_tree",
+]
+
+
+def _interp(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
+                    block_k=512, interpret=None):
+    """(B, S, Hq, D) GQA flash attention; pads S to a block multiple.
+
+    Padding queries attend only to padding keys (causal mask handles the
+    real→pad direction; pad-query outputs are sliced off)."""
+    s = q.shape[1]
+    bq = min(block_q, max(s, 16))
+    bk = min(block_k, max(s, 16))
+    mult = max(bq, bk)
+    qp, pad = _pad_to(q, 1, mult)
+    kp, _ = _pad_to(k, 1, mult)
+    vp, _ = _pad_to(v, 1, mult)
+    out = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=_interp(interpret),
+    )
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# recurrences
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_s", "interpret"))
+def rglru_scan(a, b, *, block_w=1024, block_s=256, interpret=None):
+    """(B, S, W) h_t = a_t h_{t−1} + b_t; pads W (neutral) and S (a=1, b=0)."""
+    bsz, s, w = a.shape
+    bw = min(block_w, w)
+    bs = min(block_s, s)
+    ap, padw = _pad_to(a, 2, bw)
+    bp, _ = _pad_to(b, 2, bw)
+    # pad time with identity steps (a=1, b=0) — state preserved
+    padt = (-s) % bs
+    if padt:
+        ap = jnp.concatenate([ap, jnp.ones((bsz, padt, ap.shape[2]), ap.dtype)], axis=1)
+        bp = jnp.concatenate([bp, jnp.zeros((bsz, padt, bp.shape[2]), bp.dtype)], axis=1)
+    h = _rg.rglru_scan(ap, bp, block_w=bw, block_s=bs, interpret=_interp(interpret))
+    return h[:, :s, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def rwkv6_scan(r, k, v, w, bonus, *, block_s=256, interpret=None):
+    """(B, S, H, N) WKV recurrence → (out, final_state (B, H, N, N))."""
+    b, s, h, n = r.shape
+    bs = min(block_s, s)
+    padt = (-s) % bs
+    if padt:
+        zeros = jnp.zeros((b, padt, h, n), r.dtype)
+        ones = jnp.ones((b, padt, h, n), jnp.float32)
+        r = jnp.concatenate([r, zeros], axis=1)
+        k = jnp.concatenate([k, zeros], axis=1)  # k=0 ⇒ kv=0 ⇒ state kept
+        v = jnp.concatenate([v, zeros], axis=1)
+        w = jnp.concatenate([w, ones], axis=1)  # w=1 ⇒ no decay
+    out, st = _rw.rwkv6_scan(r, k, v, w, bonus, block_s=bs, interpret=_interp(interpret))
+    return out[:, :s], st
+
+
+# ---------------------------------------------------------------------------
+# ADSP commit ops over parameter pytrees
+# ---------------------------------------------------------------------------
+
+def _as_tiles(x):
+    """Flatten to (R, 1024·k) aligned 2-D; returns (tiled, orig_size)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = _fc.BLOCK[1]
+    rows = -(-n // cols)
+    rows_pad = (-rows) % _fc.BLOCK[0]
+    total = (rows + rows_pad) * cols
+    flat = jnp.pad(flat, (0, total - n))
+    return flat.reshape(rows + rows_pad, cols), n
+
+
+def _from_tiles(t, n, shape, dtype):
+    return t.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def accumulate_tree(u, g, local_lr, *, interpret=None):
+    """U ← U + η′·g leaf-wise via the fused Pallas kernel."""
+    interp = _interp(interpret)
+
+    def per_leaf(ul, gl):
+        t, n = _as_tiles(ul)
+        gt, _ = _as_tiles(gl.astype(ul.dtype))
+        out = _fc.accumulate(t, gt, local_lr, interpret=interp)
+        return _from_tiles(out, n, ul.shape, ul.dtype)
+
+    return jax.tree.map(per_leaf, u, g)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ps_apply_tree(w, prev_delta, u, global_lr, momentum, *, interpret=None):
+    """W ← W + (μ·δ − η·U); returns (new_w, new_delta) pytrees."""
+    interp = _interp(interpret)
+
+    def per_leaf(wl, dl, ul):
+        t, n = _as_tiles(wl)
+        dt, _ = _as_tiles(dl.astype(wl.dtype))
+        ut, _ = _as_tiles(ul.astype(wl.dtype))
+        nw, nd = _fc.ps_apply(t, dt, ut, global_lr, momentum, interpret=interp)
+        return (
+            _from_tiles(nw, n, wl.shape, wl.dtype),
+            _from_tiles(nd, n, wl.shape, wl.dtype),
+        )
+
+    pairs = jax.tree.map(per_leaf, w, prev_delta, u)
+    new_w = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_d = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_w, new_d

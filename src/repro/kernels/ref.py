@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically-direct implementation the kernels in
+this package must match (assert_allclose in tests/test_kernels.py, with
+hypothesis sweeps over shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "fused_accumulate",
+    "fused_ps_apply",
+    "flash_attention",
+    "rglru_scan",
+    "rwkv6_scan",
+]
+
+
+# ---------------------------------------------------------------------------
+# ADSP commit ops (the paper's hot loop: Alg. 2 lines 7 and PS line 4)
+# ---------------------------------------------------------------------------
+
+def fused_accumulate(u: jax.Array, g: jax.Array, local_lr: float) -> jax.Array:
+    """U ← U + η′ · g   (worker-side accumulative update)."""
+    return u + local_lr * g
+
+
+def fused_ps_apply(
+    w: jax.Array,
+    prev_delta: jax.Array,
+    u: jax.Array,
+    global_lr: float,
+    momentum: float,
+) -> tuple[jax.Array, jax.Array]:
+    """PS update with explicit momentum (Eqn. 1, μ possibly reduced by the
+    implicit-momentum correction): δ ← μ·δ_prev − η·U ; W ← W + δ."""
+    delta = momentum * prev_delta - global_lr * u
+    return w + delta, delta
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (GQA, causal, optional sliding window)
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,  # (B, S, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return ctx.reshape(b, s, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence
+# ---------------------------------------------------------------------------
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t ⊙ h_{t−1} + b_t, over axis 1. a, b: (B, S, W) float32."""
+    bsz, s, w = a.shape
+    h = h0 if h0 is not None else jnp.zeros((bsz, w), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV recurrence
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(
+    r: jax.Array,  # (B, S, H, N)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay ∈ (0,1), float32
+    bonus: jax.Array,  # (H, N)
+    state0: jax.Array | None = None,  # (B, H, N, N)
+) -> tuple[jax.Array, jax.Array]:
+    b, s, h, n = r.shape
+    st = state0 if state0 is not None else jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhn,bhnm->bhm", rt, st + bonus[None, :, :, None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    stT, outs = jax.lax.scan(step, st, xs)
+    return jnp.moveaxis(outs, 0, 1), stT

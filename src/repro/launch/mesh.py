@@ -1,0 +1,51 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is the
+ADSP worker axis for replica-heavy architectures (cross-pod links are the
+slow/heterogeneous resource ADSP's commit schedule protects).
+
+Functions, not module constants — importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "worker_axes_for", "WORKER_AXES"]
+
+WORKER_AXES = {"single": ("data",), "multi": ("pod", "data")}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, max(model, 1)), ("data", "model"))
+
+
+def worker_axes_for(granularity: str, mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """ADSP worker axes for an arch's granularity on a given mesh.
+
+    granularity 'data'  → every (pod×)data index is a worker.
+    granularity 'pod'   → each pod is one worker (replica memory too large
+                          for a 16-chip model group); on a single-pod mesh
+                          this degenerates to 'accum' (no worker axis).
+    granularity 'accum' → no worker axis: τ-step gradient accumulation.
+    """
+    has_pod = "pod" in mesh.axis_names
+    if granularity == "data":
+        return ("pod", "data") if has_pod else ("data",)
+    if granularity == "pod":
+        return ("pod",) if has_pod else ()
+    if granularity == "accum":
+        return ()
+    raise ValueError(f"unknown adsp granularity {granularity!r}")

@@ -1,0 +1,230 @@
+"""Input shapes, abstract (no-allocation) state builders, and sharding
+rules for the dry-run and the launchers.
+
+Assigned input shapes:
+    train_4k     seq 4096,   global_batch 256   (train_step)
+    prefill_32k  seq 32768,  batch 32           (prefill_step)
+    decode_32k   seq 32768,  batch 128          (serve_step, 1 new token)
+    long_500k    seq 524288, batch 1            (serve_step, sub-quadratic)
+
+Everything here returns jax.ShapeDtypeStruct pytrees (weak-type-correct,
+shardable, zero device allocation) plus NamedSharding pytrees assembled
+from generic rules:
+
+  * params: largest dim divisible by |model| → 'model'; when the arch has
+    no worker axis spanning 'data' (granularity pod/accum), an additional
+    large dim is sharded over 'data' (FSDP/ZeRO-3);
+  * decode caches: batch → worker axes when divisible, else replicated;
+    kv-heads → 'model' when divisible, else the seq dim → 'model';
+  * train batches: (tau, B, ...) with B → worker axes (manual) and, for
+    pod/accum granularity, B → remaining data axes as auto sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from .mesh import worker_axes_for
+
+__all__ = [
+    "SHAPES",
+    "ShapeSpec",
+    "abstract_params",
+    "abstract_train_batch",
+    "abstract_decode_state",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "shape_supported",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not / variant note)."""
+    if shape == "long_500k":
+        if cfg.is_encoder_decoder:
+            return False, "enc-dec audio decoder: 512k decode out of family (see DESIGN.md)"
+        if not cfg.supports_long_decode:
+            kinds = set(cfg.layer_pattern)
+            if kinds & {"recurrent", "rwkv"}:
+                return True, ""
+            return True, "variant: sliding_window(4096) attention (beyond-paper)"
+    return True, ""
+
+
+def effective_config(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Apply the sliding-window variant for dense archs at long_500k."""
+    if shape == "long_500k" and not cfg.supports_long_decode and not cfg.is_encoder_decoder:
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# abstract state
+# ---------------------------------------------------------------------------
+
+def _cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+        else jax.ShapeDtypeStruct(x.shape, x.dtype),
+        tree,
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStructs of lm_init output, cast to cfg.dtype (bf16 at
+    scale: the paper's plain-SGD PS needs no f32 master copy)."""
+    shapes = jax.eval_shape(partial(lm.lm_init, cfg=cfg), jax.random.PRNGKey(0))
+    return _cast(shapes, jnp.dtype(cfg.dtype))
+
+
+def abstract_train_batch(cfg: ModelConfig, spec: ShapeSpec, tau: int):
+    b, s = spec.batch, spec.seq
+    batch = {"tokens": jax.ShapeDtypeStruct((tau, b, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (tau, b, cfg.num_prefix_embeddings, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (tau, b, e.num_frames, e.d_model), jnp.dtype(cfg.dtype)
+        )
+    return batch
+
+
+def abstract_prefill_batch(cfg: ModelConfig, spec: ShapeSpec):
+    batch = {"tokens": jax.ShapeDtypeStruct((spec.batch, spec.seq), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (spec.batch, cfg.num_prefix_embeddings, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (spec.batch, e.num_frames, e.d_model), jnp.dtype(cfg.dtype)
+        )
+    return batch
+
+
+def abstract_decode_state(cfg: ModelConfig, spec: ShapeSpec):
+    """(tokens (B,1), caches) — cache capacity = spec.seq (the assignment:
+    one new token against a KV cache of seq_len)."""
+    caches = jax.eval_shape(
+        partial(lm.init_decode_caches, cfg, spec.batch, spec.seq)
+    )
+    tokens = {"tokens": jax.ShapeDtypeStruct((spec.batch, 1), jnp.int32)}
+    return tokens, caches
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _pick_dim(shape, divisor, taken=()) -> int | None:
+    """Largest dim divisible by divisor, preferring trailing dims."""
+    best, best_size = None, 0
+    for i in reversed(range(len(shape))):
+        if i in taken:
+            continue
+        if shape[i] % divisor == 0 and shape[i] >= divisor and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    return best
+
+
+def param_shardings(cfg: ModelConfig, mesh, granularity: str | None = None):
+    """NamedSharding pytree for the parameter pytree."""
+    granularity = granularity or cfg.adsp_granularity
+    worker_axes = worker_axes_for(granularity, mesh)
+    model_n = _axis_size(mesh, "model")
+    # FSDP axes: any non-model mesh axis NOT used as an ADSP worker axis.
+    fsdp_axes = [a for a in mesh.axis_names if a != "model" and a not in worker_axes]
+    fsdp_n = int(np.prod([_axis_size(mesh, a) for a in fsdp_axes])) if fsdp_axes else 1
+
+    def leaf_sharding(x):
+        spec = [None] * len(x.shape)
+        md = _pick_dim(x.shape, model_n)
+        if md is not None:
+            spec[md] = "model"
+        if fsdp_axes and x.size * 2 >= (1 << 22):  # FSDP only for ≥4 MiB leaves
+            fd = _pick_dim(x.shape, fsdp_n, taken=(md,) if md is not None else ())
+            if fd is not None:
+                spec[fd] = tuple(fsdp_axes) if len(fsdp_axes) > 1 else fsdp_axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf_sharding, abstract_params(cfg))
+
+
+def batch_shardings(cfg: ModelConfig, mesh, batch_tree, *, batch_dim: int = 1,
+                    granularity: str | None = None):
+    """Shard the batch dim over every non-model axis (worker axes manual +
+    any remaining data axes auto — GSPMD splits them the same way)."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+
+    def leaf(x):
+        spec = [None] * len(x.shape)
+        if x.shape[batch_dim] % n == 0:
+            spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_tree):
+    """Decode-cache sharding: batch → non-model axes when divisible;
+    kv-heads → 'model' when divisible, else seq → 'model'."""
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    data_n = int(np.prod([_axis_size(mesh, a) for a in data_axes]))
+    model_n = _axis_size(mesh, "model")
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def leaf(x):
+        spec = [None] * len(x.shape)
+        nd = len(x.shape)
+        # leading dim may be the stacked-layer dim (reps) — cache leaves are
+        # (reps, B, ...) for scanned groups.
+        bdim = 1 if nd >= 2 else 0
+        if nd >= 2 and x.shape[bdim] % data_n == 0 and x.shape[bdim] >= data_n:
+            spec[bdim] = da
+        # model axis: prefer a heads-like dim (size % model == 0), scanning
+        # from the trailing side, skipping the batch dim.
+        md = None
+        for i in reversed(range(bdim + 1, nd)):
+            if x.shape[i] % model_n == 0 and x.shape[i] >= model_n:
+                md = i
+                break
+        if md is not None:
+            spec[md] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, cache_tree)

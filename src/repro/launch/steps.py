@@ -1,0 +1,199 @@
+"""Step builders: bind an architecture + mesh + ADSP config into the jit-
+ready train / prefill / serve step functions with full sharding pytrees.
+
+Returns StepBundle(fn, args (abstract), in_shardings, out_shardings) — the
+dry-run lowers these; launchers call them with real arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.accum import make_accum_step
+from repro.core.commit import AdspState, CommitConfig, make_adsp_step
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.layers import default_rules
+from .mesh import worker_axes_for
+from . import specs as S
+
+__all__ = ["StepBundle", "build_train_step", "build_prefill_step", "build_serve_step", "build"]
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Any  # callable (not yet jitted)
+    args: tuple  # abstract ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()  # argnums aliased in-place (train state / kv caches)
+    static: dict = dataclasses.field(default_factory=dict)
+
+    def jitted(self):
+        return jax.jit(
+            self.fn, in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings, donate_argnums=self.donate,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def _num_workers(mesh, worker_axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in worker_axes])) if worker_axes else 1
+
+
+def _rules_for(mesh, worker_axes):
+    """Model rules: 'model' axis always auto; batch over the auto data axes
+    (those not consumed as manual worker axes)."""
+    auto_data = tuple(a for a in mesh.axis_names if a != "model" and a not in worker_axes)
+    da = auto_data if len(auto_data) > 1 else (auto_data[0] if auto_data else None)
+    return default_rules("model", da)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh,
+    shape: str = "train_4k",
+    tau: int = 4,
+    attn_impl: str = "scan",
+    local_lr: float = 0.05,
+    global_lr: float = 1.0,
+    explicit_momentum: float = 0.0,
+    remat: bool = True,
+    granularity: str | None = None,
+    commit_dtype: str = "float32",
+    attn_block: int = 512,
+) -> StepBundle:
+    spec = S.SHAPES[shape]
+    granularity = granularity or cfg.adsp_granularity
+    worker_axes = worker_axes_for(granularity, mesh)
+    n_workers = _num_workers(mesh, worker_axes)
+    rules = _rules_for(mesh, worker_axes)
+    ccfg = CommitConfig(
+        tau=tau, local_lr=local_lr, global_lr=global_lr,
+        worker_axes=worker_axes, commit_dtype=commit_dtype,
+    )
+
+    def loss_fn(params, mb):
+        # remat=True ⇒ jax.checkpoint around each scanned layer-group body:
+        # backward recomputes layer internals instead of saving stacked
+        # (layers × S × S) attention buffers — without it the train step
+        # stores ~86 GB/chip of probabilities (measured, §Perf iteration 1).
+        return lm.lm_loss(cfg, params, mb, rules=rules, attn_impl=attn_impl,
+                          remat=remat, attn_block=attn_block)
+
+    if worker_axes:
+        batch_spec_manual = jax.tree.map(
+            lambda _: P(None, worker_axes if len(worker_axes) > 1 else worker_axes[0]),
+            S.abstract_train_batch(cfg, spec, tau),
+        )
+        step = make_adsp_step(
+            loss_fn, ccfg, mesh,
+            batch_spec=batch_spec_manual,
+            explicit_momentum=explicit_momentum,
+            remat=False,  # remat lives inside lm_loss (per layer group)
+        )
+    else:
+        accum = make_accum_step(loss_fn, ccfg, explicit_momentum, remat=False)
+
+        def step(state, microbatches, tau_per_worker):
+            return accum(state, microbatches, tau_per_worker[0])
+
+    # --- abstract args + shardings ---------------------------------------
+    pshard = S.param_shardings(cfg, mesh, granularity)
+    ap = S.abstract_params(cfg)
+    state = AdspState(
+        params=ap,
+        prev_delta=ap,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    rep = NamedSharding(mesh, P())
+    state_shard = AdspState(params=pshard, prev_delta=pshard, step=rep)
+    batch = S.abstract_train_batch(cfg, spec, tau)
+    bshard = S.batch_shardings(cfg, mesh, batch, batch_dim=1)
+    tau_arr = jax.ShapeDtypeStruct((n_workers,), jnp.int32)
+
+    return StepBundle(
+        name=f"train:{cfg.name}:{shape}",
+        fn=step,
+        args=(state, batch, tau_arr),
+        in_shardings=(state_shard, bshard, rep),
+        out_shardings=(state_shard, rep),
+        donate=(0,),  # AdspState updated in place
+        static=dict(tau=tau, worker_axes=worker_axes, granularity=granularity,
+                    n_workers=n_workers),
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: str = "prefill_32k",
+                       attn_impl: str = "scan") -> StepBundle:
+    cfg = S.effective_config(cfg, shape)
+    spec = S.SHAPES[shape]
+    rules = _rules_for(mesh, ())
+
+    def prefill(params, batch):
+        return lm.lm_prefill(cfg, params, batch, rules=rules, attn_impl=attn_impl)
+
+    ap = S.abstract_params(cfg)
+    pshard = S.param_shardings(cfg, mesh, "accum")
+    batch = S.abstract_prefill_batch(cfg, spec)
+    bshard = S.batch_shardings(cfg, mesh, batch, batch_dim=0)
+    out_logits, out_caches = jax.eval_shape(prefill, ap, batch)
+    cshard = S.cache_shardings(cfg, mesh, out_caches)
+    lshard = S.batch_shardings(cfg, mesh, out_logits, batch_dim=0)
+    return StepBundle(
+        name=f"prefill:{cfg.name}:{shape}",
+        fn=prefill,
+        args=(ap, batch),
+        in_shardings=(pshard, bshard),
+        out_shardings=(lshard, cshard),
+    )
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape: str = "decode_32k") -> StepBundle:
+    cfg = S.effective_config(cfg, shape)
+    spec = S.SHAPES[shape]
+    rules = _rules_for(mesh, ())
+
+    def serve_step(params, tokens, caches):
+        logits, new_caches = lm.lm_decode_step(cfg, params, tokens, caches, rules=rules)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+
+    ap = S.abstract_params(cfg)
+    pshard = S.param_shardings(cfg, mesh, "accum")
+    tokens, caches = S.abstract_decode_state(cfg, spec)
+    tshard = S.batch_shardings(cfg, mesh, tokens, batch_dim=0)
+    cshard = S.cache_shardings(cfg, mesh, caches)
+    nt_shape = jax.ShapeDtypeStruct((spec.batch,), jnp.int32)
+    nt_shard = S.batch_shardings(cfg, mesh, nt_shape, batch_dim=0)
+    return StepBundle(
+        name=f"serve:{cfg.name}:{shape}",
+        fn=serve_step,
+        args=(ap, tokens, caches),
+        in_shardings=(pshard, tshard, cshard),
+        out_shardings=(nt_shard, cshard),
+        donate=(2,),  # KV caches updated in place
+    )
+
+
+def build(cfg: ModelConfig, mesh, shape: str, **kw) -> StepBundle:
+    kind = S.SHAPES[shape].kind
+    if kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if kind == "prefill":
+        kw.pop("tau", None)
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    kw.pop("tau", None)
+    kw.pop("attn_impl", None)
+    return build_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,3 @@
+from .small import CNN, RNN, LinearSVM, make_task_fns
+
+__all__ = ["CNN", "RNN", "LinearSVM", "make_task_fns"]

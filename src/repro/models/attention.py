@@ -1,0 +1,251 @@
+"""GQA attention: init, train/prefill (blockwise flash in pure JAX or the
+Pallas TPU kernel), and single-token decode against a KV cache.
+
+Implementations (cfg-selectable, all numerically interchangeable):
+  * ``naive``  — materializes (S, S) logits; smoke tests only.
+  * ``scan``   — q-block × kv-block online-softmax flash in pure JAX
+                 (lax.scan over kv blocks inside a scan over q blocks);
+                 never materializes more than (block_q, block_k) logits per
+                 head. Default for the dry-run so 32k-token prefill fits.
+  * ``pallas`` — kernels/flash_attention.py (TPU target; interpret=True in
+                 tests). Same blockwise algorithm with VMEM BlockSpecs.
+
+Sliding-window (``window > 0``) restricts keys to (qpos − window, qpos].
+Decode uses a ring-buffer cache when the window is finite (cache length =
+window) and a dense cache otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import annotate, dense_init, rope
+
+__all__ = [
+    "attention_init",
+    "attention_apply",
+    "decode_attention_apply",
+    "flash_attention_jax",
+]
+
+NEG_INF = -1e30
+
+
+def attention_init(rng, cfg, d_model: int | None = None, num_heads: int | None = None,
+                   num_kv_heads: int | None = None):
+    d = d_model or cfg.d_model
+    hq = num_heads or cfg.num_heads
+    hkv = num_kv_heads or cfg.num_kv_heads
+    hd = cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq, hd),
+        "wk": dense_init(ks[1], d, hkv, hd),
+        "wv": dense_init(ks[2], d, hkv, hd),
+        "wo": dense_init(ks[3], hq * hd, d, scale=1.0 / np.sqrt(hq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg, p, x, positions, rules, use_rope=True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if use_rope and cfg.pos_variant == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = annotate(q, ("batch", "seq", "heads", None), rules)
+    k = annotate(k, ("batch", "seq", "kv_heads", None), rules)
+    v = annotate(v, ("batch", "seq", "kv_heads", None), rules)
+    return q, k, v
+
+
+def _out_proj(p, ctx, rules):
+    b, s, hq, hd = ctx.shape
+    ctx = annotate(ctx, ("batch", "seq", "heads", None), rules)
+    return ctx.reshape(b, s, hq * hd) @ p["wo"].astype(ctx.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_apply(cfg, p, x, positions, *, window: int = 0, causal: bool = True,
+                    rules=None, impl: str = "scan", block_q: int = 512,
+                    block_k: int = 512):
+    """x: (B, S, d). Returns (B, S, d)."""
+    rules = rules or {}
+    q, k, v = _project_qkv(cfg, p, x, positions, rules)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        ctx = kops.flash_attention(q, k, v, causal=causal, window=window)
+    elif impl == "naive":
+        ctx = _naive_attention(q, k, v, positions, causal, window)
+    else:
+        ctx = flash_attention_jax(
+            q, k, v, positions, causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+        )
+    return _out_proj(p, ctx, rules)
+
+
+def _gqa_expand(q, k):
+    """Reshape q to expose the kv-group dim: (B,S,Hkv,G,hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    return q.reshape(b, s, hkv, g, hd), g
+
+
+def _naive_attention(q, k, v, positions, causal, window):
+    b, s, hq, hd = q.shape
+    qg, g = _gqa_expand(q, k)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqhgk,bkhk_->bhgqk_".replace("k_", "t"), qg, k) * scale
+    qpos, kpos = positions[:, :, None], positions[:, None, :]
+    mask = jnp.ones((b, s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bhgqt,bthk->bqhgk", w, v)
+    return ctx.reshape(b, s, hq, hd)
+
+
+def flash_attention_jax(q, k, v, positions, *, causal=True, window=0,
+                        block_q=512, block_k=512):
+    """Blockwise online-softmax attention, pure JAX (the ref algorithm the
+    Pallas kernel mirrors). Pads S to a block multiple; positions carry the
+    true indices so padding keys are masked out by the causal test.
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    bq, bk = min(block_q, s), min(block_k, s)
+    pad_q = (-s) % bq
+    pad_k = (-s) % bk
+    if pad_q or pad_k:
+        qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        # padding positions: -1 for keys (always masked), big for queries
+        posq = jnp.pad(positions, ((0, 0), (0, pad_q)), constant_values=2**30)
+        posk = jnp.pad(positions, ((0, 0), (0, pad_k)), constant_values=-1)
+    else:
+        qp, kp, vp, posq, posk = q, k, v, positions, positions
+    sq, sk = s + pad_q, s + pad_k
+    nq, nk = sq // bq, sk // bk
+
+    qb = qp.reshape(b, nq, bq, hkv, g, hd)
+    kb = kp.reshape(b, nk, bk, hkv, hd)
+    vb = vp.reshape(b, nk, bk, hkv, hd)
+    pq = posq.reshape(b, nq, bq)
+    pk = posk.reshape(b, nk, bk)
+
+    def per_qblock(q_i, pq_i):
+        # q_i: (b, bq, hkv, g, hd); scan over kv blocks
+        def body(carry, xs):
+            m, l, acc = carry
+            k_j, v_j, pk_j = xs  # (b, bk, hkv, hd), ..., (b, bk)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j) * scale
+            logits = logits.astype(jnp.float32)
+            valid = pk_j[:, None, :] >= 0
+            mask = valid
+            if causal:
+                mask &= pk_j[:, None, :] <= pq_i[:, :, None]
+            if window:
+                mask &= pq_i[:, :, None] - pk_j[:, None, :] < window
+            logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", pexp.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.moveaxis(pk, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhgqd->bqhgd", out)  # (b, bq, hkv, g, hd)
+
+    outs = jax.lax.map(
+        lambda xs: per_qblock(*xs),
+        (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(pq, 1, 0)),
+    )  # (nq, b, bq, hkv, g, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, hd)[:, :s]
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention_apply(cfg, p, x, cache, *, window: int = 0, rules=None):
+    """x: (B, 1, d); cache: dict(k=(B, C, Hkv, hd), v=..., pos=(B,) int32).
+
+    Returns (out (B, 1, d), new_cache). C is the cache capacity: full
+    seq_len for dense attention, ``window`` (ring buffer) when windowed.
+    """
+    rules = rules or {}
+    b, _, d = x.shape
+    cap = cache["k"].shape[1]
+    pos = cache["pos"]  # (B,) — number of tokens already cached
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None], rules)
+
+    slot = (pos % cap) if window else jnp.minimum(pos, cap - 1)
+    oh = jax.nn.one_hot(slot, cap, dtype=k_new.dtype)  # (B, C)
+    k = cache["k"] * (1 - oh[..., None, None]) + oh[..., None, None] * k_new
+    v = cache["v"] * (1 - oh[..., None, None]) + oh[..., None, None] * v_new
+
+    qg, g = _gqa_expand(q, k)  # (B,1,Hkv,G,hd)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhgd,bchd->bhgqc", qg, k) * scale  # (B,Hkv,G,1,C)
+    logits = logits.astype(jnp.float32)
+
+    if window:
+        idx = jnp.arange(cap)[None, :]  # ring slots
+        # slot i holds absolute position: derive from pos (tokens 0..pos)
+        abs_pos = jnp.where(
+            idx <= (pos[:, None] % cap), pos[:, None] - (pos[:, None] % cap) + idx,
+            pos[:, None] - (pos[:, None] % cap) - cap + idx,
+        )
+        valid = (abs_pos >= 0) & (abs_pos <= pos[:, None]) & (
+            pos[:, None] - abs_pos < window
+        )
+    else:
+        idx = jnp.arange(cap)[None, :]
+        valid = idx <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bhgqc,bchd->bqhgd", w, v)
+    hq = cfg_num_heads_from(qg)
+    ctx = ctx.reshape(b, 1, -1, q.shape[-1])
+    out = _out_proj(p, ctx, rules)
+    new_cache = {"k": k, "v": v, "pos": pos + 1}
+    return out, new_cache
+
+
+def cfg_num_heads_from(qg):
+    return qg.shape[2] * qg.shape[3]

@@ -1,0 +1,226 @@
+"""Architecture configuration for the assigned model zoo.
+
+One frozen dataclass describes every architecture family we support:
+dense GQA decoders, MoE decoders, RWKV6 (attention-free), RG-LRU hybrids,
+encoder–decoder (whisper), and VLM/audio variants whose modality frontend
+is a stub (precomputed embeddings, per the assignment carve-out).
+
+``layer_pattern`` drives composition: a cycle of block kinds, e.g.
+``("recurrent", "recurrent", "local")`` for RecurrentGemma or
+``("dense", "moe")`` for Llama-4 style interleaving. Layers are grouped
+into repeats of the pattern and scanned (scan-over-layers) so compile time
+stays bounded at 38–64 layers; a non-divisible remainder becomes a second,
+shorter scan group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["MoEConfig", "EncoderConfig", "ModelConfig", "SMOKE_OVERRIDES", "smoke_variant"]
+
+BlockKind = Literal["global", "local", "recurrent", "rwkv", "dense", "moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden size
+    num_shared_experts: int = 0
+    d_shared: int = 0  # hidden size of the fused shared-expert MLP
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01  # load-balance loss weight
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder consuming precomputed frame embeddings."""
+
+    num_layers: int
+    num_frames: int  # e.g. 1500 for whisper (30 s @ 50 Hz after conv stub)
+    d_model: int
+    num_heads: int
+    d_ff: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    source: str = ""  # citation (paper / model card)
+    head_dim: int = 0  # 0 ⇒ d_model // num_heads
+    # --- attention ---------------------------------------------------------
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    sliding_window: int = 0  # 0 ⇒ full attention for "global" blocks
+    local_window: int = 2048  # window for "local" blocks (hybrid archs)
+    # --- block composition --------------------------------------------------
+    layer_pattern: tuple[str, ...] = ("global",)
+    mlp_variant: str = "swiglu"  # swiglu | gelu
+    norm_variant: str = "rmsnorm"  # rmsnorm | layernorm
+    pos_variant: str = "rope"  # rope | learned | none
+    # --- families -----------------------------------------------------------
+    moe: MoEConfig | None = None
+    encoder: EncoderConfig | None = None
+    # RG-LRU (hybrid)
+    lru_width: int = 0  # 0 ⇒ d_model
+    conv1d_width: int = 4
+    # RWKV6
+    rwkv_head_dim: int = 64
+    # --- modality stub -------------------------------------------------------
+    frontend: str = ""  # "" | "audio" | "vision"
+    num_prefix_embeddings: int = 0  # vision patch tokens prepended
+    # --- distribution --------------------------------------------------------
+    adsp_granularity: str = "data"  # data | pod | accum (see core.commit)
+    # --- misc ----------------------------------------------------------------
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    max_seq_len: int = 524_288
+    dtype: str = "bfloat16"
+
+    # -------------------------------------------------------------- helpers
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def lru_width_(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so the 'model' axis shards it."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def layer_groups(self) -> list[tuple[tuple[str, ...], int]]:
+        """[(pattern, repeats), ...] covering num_layers; the remainder (if
+        the pattern does not divide num_layers) becomes a trailing group."""
+        pat = self.layer_pattern
+        n = len(pat)
+        full, rem = divmod(self.num_layers, n)
+        groups: list[tuple[tuple[str, ...], int]] = []
+        if full:
+            groups.append((pat, full))
+        if rem:
+            groups.append((pat[:rem], 1))
+        return groups
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True if serve at 500k+ context is sub-quadratic AND O(seq) cache
+        is avoidable: SSM/hybrid/local-attention archs natively; dense archs
+        only via the sliding-window variant (flagged by the dry-run)."""
+        kinds = set(self.layer_pattern)
+        if kinds <= {"recurrent", "rwkv", "local"} or "global" not in kinds and "dense" not in kinds and "moe" not in kinds:
+            return True
+        return self.sliding_window > 0
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder is not None
+
+    def active_params(self) -> int:
+        """Approximate active parameter count (MoE: top_k experts only)."""
+        return _param_count(self, active_only=True)
+
+    def total_params(self) -> int:
+        return _param_count(self, active_only=False)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.head_dim_
+    n_q, n_kv = cfg.num_heads, cfg.num_kv_heads
+    emb = cfg.padded_vocab * d * (1 if cfg.tie_embeddings else 2)
+    total = emb
+    mlp_mult = 3 if cfg.mlp_variant == "swiglu" else 2
+    for kind in _expand_layers(cfg):
+        if kind in ("global", "local", "dense"):
+            attn = d * (n_q * hd + 2 * n_kv * hd) + n_q * hd * d
+            total += attn + mlp_mult * d * cfg.d_ff
+        elif kind == "moe":
+            attn = d * (n_q * hd + 2 * n_kv * hd) + n_q * hd * d
+            total += attn
+            m = cfg.moe
+            n_e = m.top_k if active_only else m.num_experts
+            total += n_e * mlp_mult * d * m.d_expert + d * m.num_experts
+            if m.num_shared_experts:
+                total += mlp_mult * d * m.d_shared
+        elif kind == "recurrent":
+            w = cfg.lru_width_
+            total += 2 * d * w + w * d + cfg.conv1d_width * w + 3 * w
+            total += mlp_mult * d * cfg.d_ff
+        elif kind == "rwkv":
+            total += 6 * d * d + 2 * d * cfg.d_ff  # time-mix ~5dd + out, channel-mix
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        total += e.num_layers * (4 * e.d_model**2 + 2 * e.d_model * e.d_ff)
+        # cross-attention in every decoder layer
+        total += cfg.num_layers * 4 * d * d
+    return total
+
+
+def _expand_layers(cfg: ModelConfig) -> list[str]:
+    out: list[str] = []
+    for pat, reps in cfg.layer_groups:
+        out.extend(list(pat) * reps)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reduced smoke variants (CPU tests): ≤2 layers of every distinct kind,
+# d_model ≤ 512, ≤4 experts — same code paths, tiny tensors.
+# ---------------------------------------------------------------------------
+
+SMOKE_OVERRIDES = dict(
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    head_dim=32,
+    lru_width=128,
+    local_window=64,
+    max_seq_len=4096,
+    dtype="float32",
+)
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: keeps the layer pattern (one full cycle),
+    shrinks every width, caps experts at 4."""
+    pat = cfg.layer_pattern
+    n_layers = max(2, len(pat))
+    over = dict(SMOKE_OVERRIDES)
+    over["num_layers"] = n_layers
+    over["num_kv_heads"] = min(cfg.num_kv_heads, 2) or 1
+    if cfg.num_kv_heads == cfg.num_heads:  # MHA archs stay MHA
+        over["num_kv_heads"] = over["num_heads"] = 4
+    if cfg.num_kv_heads == 1:
+        over["num_kv_heads"] = 1
+    if cfg.moe is not None:
+        over["moe"] = MoEConfig(
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=64,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            d_shared=64 if cfg.moe.num_shared_experts else 0,
+            capacity_factor=2.0,
+        )
+    if cfg.encoder is not None:
+        over["encoder"] = EncoderConfig(
+            num_layers=2, num_frames=16, d_model=128, num_heads=4, d_ff=256
+        )
+    if cfg.sliding_window:
+        over["sliding_window"] = 64
+    if cfg.num_prefix_embeddings:
+        over["num_prefix_embeddings"] = 8
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **over)

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Token routing is the classic Switch/GShard scheme adapted to be
+compile-friendly on TPU without ragged ops:
+
+  1. router logits → top-k experts + gates per token;
+  2. for each of the k slots, tokens are *sorted* by expert id (argsort —
+     a TPU-friendly dispatch that avoids the (T, E, C) one-hot dispatch
+     tensor, which at 65k tokens × 128 experts would be terabytes);
+  3. each expert processes a fixed ``capacity = ceil(T/E · cf)`` slice of
+     its sorted tokens — overflow tokens are dropped (standard);
+  4. expert outputs are scattered back and combined with the gate weights;
+  5. optional shared experts (Qwen-MoE style) run densely and are added.
+
+An auxiliary load-balance loss (Switch §4) is returned so training keeps
+routing spread out; it is weighted by cfg.moe.router_aux_weight upstream.
+
+Expert weights are annotated onto the 'model' axis over the *expert* dim
+when divisible (expert parallelism) — else over d_expert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import annotate, dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(rng, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    e, de = m.num_experts, m.d_expert
+    # Stacked expert weights (E, d, de) with *per-expert* fan-in scaling.
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "wi": jax.random.truncated_normal(ks[1], -2, 2, (e, d, de), jnp.float32) / np.sqrt(d),
+        "wg": jax.random.truncated_normal(ks[2], -2, 2, (e, d, de), jnp.float32) / np.sqrt(d),
+        "wo": jax.random.truncated_normal(ks[3], -2, 2, (e, de, d), jnp.float32) / np.sqrt(de),
+    }
+    if m.num_shared_experts:
+        ds = m.d_shared * m.num_shared_experts
+        p["shared_wi"] = dense_init(ks[4], d, ds)
+        p["shared_wg"] = dense_init(jax.random.fold_in(ks[4], 1), d, ds)
+        p["shared_wo"] = dense_init(jax.random.fold_in(ks[4], 2), ds, d)
+    return p
+
+
+def moe_apply(cfg, p, x, rules):
+    """x: (B, S, d) → (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    dt = x.dtype
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # Switch aux loss: E · Σ_e f_e · p_e  (f = token fraction, p = mean prob)
+    f = jnp.zeros((m.num_experts,), jnp.float32).at[expert_ids[:, 0]].add(1.0) / t
+    aux = m.num_experts * jnp.sum(f * probs.mean(axis=0))
+
+    capacity = int(np.ceil(t / m.num_experts * m.capacity_factor))
+    # Small-T (decode) safety: with a handful of tokens the statistical
+    # capacity bound is far too tight — give every expert room for up to
+    # min(T, 8) tokens so single-token decode never drops.
+    capacity = max(capacity, min(t, 8), 1)
+
+    # Combine accumulates in the compute dtype and scatters expert outputs
+    # straight back to token order (one scatter-add) instead of a second
+    # argsort + two gathers — §Perf llama4 iteration: the (T, d) f32
+    # accumulator and inverse-permutation gathers were ~1.3 GB/layer/
+    # microstep of pure HBM traffic.
+    out = jnp.zeros((t, d), dt)
+    for slot in range(m.top_k):
+        eid = expert_ids[:, slot]  # (T,)
+        gate = gate_vals[:, slot]
+        order = jnp.argsort(eid)  # tokens grouped by expert
+        eid_s = eid[order]
+        # rank within expert group: position − first index of the group
+        # (eid_s is sorted, so searchsorted gives each group's start).
+        first = jnp.searchsorted(eid_s, jnp.arange(m.num_experts))
+        rank = jnp.arange(t) - first[eid_s]
+        keep = rank < capacity
+        dst = eid_s * capacity + jnp.minimum(rank, capacity - 1)  # (T,)
+        disp = jnp.zeros((m.num_experts * capacity, d), dt)
+        disp = disp.at[dst].add(jnp.where(keep[:, None], xt[order], 0).astype(dt))
+        disp = disp.reshape(m.num_experts, capacity, d)
+        disp = annotate(disp, ("experts", None, "embed"), rules)
+
+        h = jnp.einsum("ecd,edf->ecf", disp, p["wi"].astype(dt))
+        g = jnp.einsum("ecd,edf->ecf", disp, p["wg"].astype(dt))
+        h = jax.nn.silu(h) * g
+        eo = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+        eo = eo.reshape(m.num_experts * capacity, d)
+
+        contrib = (eo[dst] * keep[:, None]) * gate[order][:, None].astype(dt)
+        out = out.at[order].add(contrib)  # scatter back to token order
+
+    if m.num_shared_experts:
+        h = jax.nn.silu(xt @ p["shared_wi"].astype(dt)) * (xt @ p["shared_wg"].astype(dt))
+        out = out + h @ p["shared_wo"].astype(dt)
+
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t W_r + b_r)            # recurrence gate
+    i_t = sigmoid(x_t W_i + b_i)            # input gate
+    a_t = exp(−c · softplus(Λ) · r_t)       # data-dependent decay, c = 8
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+wrapped in Griffin's recurrent block:
+    u = W_x · x ; v = gelu(W_g · x)
+    u = conv1d_k4(u)  (causal, depthwise)
+    y = RG-LRU(u)
+    out = W_o (y ⊙ v)
+
+Train/prefill runs the recurrence as an associative scan (h_t = a_t h_{t−1}
++ b_t is linear ⇒ jax.lax.associative_scan over (a, b) pairs — O(log S)
+depth, TPU-friendly); decode carries (h,) state and a (k−1)-sample conv
+tail. A Pallas chunked-scan kernel (kernels/rglru_scan.py) is the TPU
+fast path for the same computation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import annotate, dense_init
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "rglru_init_state", "lru_scan"]
+
+_C = 8.0  # decay sharpness constant from the paper
+
+
+def rglru_init(rng, cfg):
+    d, w = cfg.d_model, cfg.lru_width_
+    ks = jax.random.split(rng, 6)
+    # Λ init so that a = exp(−c·softplus(Λ)·0.5) spreads over (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) * 2.0 / _C))  # softplus⁻¹
+    return {
+        "wx": dense_init(ks[1], d, w),
+        "wg": dense_init(ks[2], d, w),
+        "wo": dense_init(ks[3], w, d),
+        "conv": dense_init(ks[4], cfg.conv1d_width, w, scale=1.0 / np.sqrt(cfg.conv1d_width)),
+        "wr": dense_init(ks[5], w, w, scale=0.02),
+        "br": jnp.zeros((w,), jnp.float32),
+        "wi": dense_init(jax.random.fold_in(ks[5], 1), w, w, scale=0.02),
+        "bi": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def _gates(p, u, dt):
+    r = jax.nn.sigmoid(u @ p["wr"].astype(dt) + p["br"].astype(dt))
+    i = jax.nn.sigmoid(u @ p["wi"].astype(dt) + p["bi"].astype(dt))
+    log_a = -_C * jax.nn.softplus(p["lam"]).astype(jnp.float32) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * u.astype(jnp.float32)
+    )
+    return a, b  # float32 (B, S, w)
+
+
+def lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t−1} + b_t via associative scan over (S) axis=1."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br_ = r
+        return al * ar, ar * bl + br_
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv, kernel (K, width): y_t = Σ_k w[k]·u_{t−K+1+k}."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + u.shape[1]] * w[i].astype(u.dtype) for i in range(k))
+
+
+def rglru_apply(cfg, p, x, rules, impl: str = "scan"):
+    """x: (B, S, d) → (B, S, d). Full-sequence (train / prefill)."""
+    dt = x.dtype
+    u = x @ p["wx"].astype(dt)
+    v = jax.nn.gelu(x @ p["wg"].astype(dt))
+    u = annotate(u, ("batch", "seq", "lru"), rules)
+    u = _causal_conv(u, p["conv"])
+    a, b = _gates(p, u, dt)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        h = kops.rglru_scan(a, b)
+    else:
+        h = lru_scan(a, b)
+    y = (h.astype(dt) * v)
+    return y @ p["wo"].astype(dt)
+
+
+def rglru_init_state(cfg, batch: int):
+    w = cfg.lru_width_
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv_tail": jnp.zeros((batch, cfg.conv1d_width - 1, w), jnp.float32),
+    }
+
+
+def rglru_decode(cfg, p, x, state, rules):
+    """x: (B, 1, d); O(1) state update. Returns (out, new_state)."""
+    dt = x.dtype
+    u = x @ p["wx"].astype(dt)  # (B,1,w)
+    v = jax.nn.gelu(x @ p["wg"].astype(dt))
+    tail = state["conv_tail"].astype(dt)  # (B, K−1, w)
+    window = jnp.concatenate([tail, u], axis=1)  # (B, K, w)
+    k = cfg.conv1d_width
+    uc = sum(window[:, i : i + 1] * p["conv"][i].astype(dt) for i in range(k))
+    a, b = _gates(p, uc, dt)
+    h = a[:, 0] * state["h"] + b[:, 0]  # (B, w)
+    y = (h[:, None].astype(dt) * v) @ p["wo"].astype(dt)
+    new_state = {"h": h, "conv_tail": window[:, 1:].astype(jnp.float32)}
+    return y, new_state

@@ -1,0 +1,208 @@
+"""RWKV-6 "Finch" time-mix + channel-mix blocks (arXiv:2404.05892).
+
+Per head (head dim N), with per-token data-dependent decay w_t:
+
+    S_t = diag(w_t) · S_{t−1} + k_tᵀ · v_t            (state: N×N)
+    o_t = r_t · (S_{t−1} + u ⊙ (k_tᵀ v_t))            (u: learned bonus)
+
+r, k, v, g and the decay w are produced by token-shift interpolation
+(lerp between x_t and x_{t−1} with learned + data-dependent mixes, the
+LoRA-style "ddlerp" of the paper, here with a single low-rank projection
+per stream for tractability). The channel-mix is the standard RWKV
+squared-ReLU FFN with token shift.
+
+Train/prefill: a lax.scan over time carrying the (B, H, N, N) state —
+linear in S. The Pallas kernel (kernels/rwkv6_scan.py) implements the
+chunked form for TPU. Decode carries (state, last_x) and is O(1)/token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import annotate, dense_init
+
+__all__ = [
+    "rwkv_time_init",
+    "rwkv_time_apply",
+    "rwkv_time_decode",
+    "rwkv_channel_init",
+    "rwkv_channel_apply",
+    "rwkv_channel_decode",
+    "rwkv_init_state",
+    "wkv_scan",
+]
+
+_LORA = 32  # low-rank size of the data-dependent mixes
+
+
+def rwkv_time_init(rng, cfg):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    ks = jax.random.split(rng, 10)
+    decay_base = jnp.linspace(-7.0, -4.5, d).astype(jnp.float32)  # per-channel
+    return {
+        "mix_base": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,w,g lerp bases
+        "mix_lora_a": dense_init(ks[0], d, _LORA, scale=0.02),
+        "mix_lora_b": dense_init(ks[1], _LORA, 5 * d, scale=0.02),
+        "wr": dense_init(ks[2], d, d),
+        "wk": dense_init(ks[3], d, d),
+        "wv": dense_init(ks[4], d, d),
+        "wg": dense_init(ks[5], d, d),
+        "wo": dense_init(ks[6], d, d),
+        "decay_base": decay_base,
+        "decay_lora_a": dense_init(ks[7], d, _LORA, scale=0.02),
+        "decay_lora_b": dense_init(ks[8], _LORA, d, scale=0.02),
+        "bonus": jax.random.normal(ks[9], (h, n), jnp.float32) * 0.02,
+        "ln_gamma": jnp.ones((d,), jnp.float32),  # group-norm on out
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t−1} (zeros / `last` for t = 0). x: (B, S, d)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        prev = prev.at[:, 0].set(last)
+    return prev
+
+
+def _streams(p, x, prev, dt):
+    """r,k,v,w,g streams via ddlerp token-shift."""
+    delta = (prev - x).astype(jnp.float32)
+    lora = jnp.tanh(x.astype(jnp.float32) @ p["mix_lora_a"]) @ p["mix_lora_b"]
+    b, s, d = x.shape
+    lora = lora.reshape(b, s, 5, d)
+    mixes = p["mix_base"][None, None] + lora  # (B,S,5,d)
+    xm = x.astype(jnp.float32)[:, :, None] + delta[:, :, None] * jax.nn.sigmoid(mixes)
+    xr, xk, xv, xw, xg = [xm[:, :, i].astype(dt) for i in range(5)]
+    r = xr @ p["wr"].astype(dt)
+    k = xk @ p["wk"].astype(dt)
+    v = xv @ p["wv"].astype(dt)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    dec = p["decay_base"][None, None] + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["decay_lora_a"]) @ p["decay_lora_b"]
+    )
+    w = jnp.exp(-jnp.exp(dec))  # (B,S,d) ∈ (0,1), data-dependent decay
+    return r, k, v, w, g
+
+
+def _heads(x, n):
+    b, s, d = x.shape
+    return x.reshape(b, s, d // n, n)
+
+
+def wkv_scan(r, k, v, w, bonus, state0=None):
+    """Sequential WKV recurrence.
+
+    r,k,v,w: (B, S, H, N) (w in float32); bonus: (H, N).
+    Returns (out (B,S,H,N) float32, final state (B,H,N,N) float32).
+    """
+    b, s, h, n = r.shape
+    st0 = state0 if state0 is not None else jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, st + bonus[None, :, :, None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w)
+    )
+    stT, outs = jax.lax.scan(step, st0, xs)
+    return jnp.moveaxis(outs, 0, 1), stT  # (B,S,H,N)
+
+
+def _groupnorm(x, gamma, n):
+    """Per-head layer norm on the flattened head outputs."""
+    b, s, h, hd = x.shape
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return y.reshape(b, s, h * hd) * gamma[None, None]
+
+
+def rwkv_time_apply(cfg, p, x, rules, impl: str = "scan"):
+    dt = x.dtype
+    n = cfg.rwkv_head_dim
+    prev = _token_shift(x)
+    r, k, v, w, g = _streams(p, x, prev, dt)
+    r, k, v, w = (_heads(t, n) for t in (r, k, v, w))
+    k = k * (1.0 / np.sqrt(n)).astype(jnp.float32).item()
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        out, _ = kops.rwkv6_scan(r, k, v, w.astype(jnp.float32), p["bonus"])
+    elif impl == "chunked":
+        from .rwkv_chunked import wkv_chunked
+
+        out, _ = wkv_chunked(r, k, v, w.astype(jnp.float32), p["bonus"])
+    else:
+        out, _ = wkv_scan(r, k, v, w.astype(jnp.float32), p["bonus"])
+    y = _groupnorm(out, p["ln_gamma"], n).astype(dt) * g
+    y = annotate(y, ("batch", "seq", "embed"), rules)
+    return y @ p["wo"].astype(dt)
+
+
+def rwkv_init_state(cfg, batch: int):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((batch, d // n, n, n), jnp.float32),
+        "last_x_time": jnp.zeros((batch, d), jnp.float32),
+        "last_x_chan": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def rwkv_time_decode(cfg, p, x, state, rules):
+    """x: (B, 1, d) — one token; O(1) state update."""
+    dt = x.dtype
+    n = cfg.rwkv_head_dim
+    prev = state["last_x_time"].astype(dt)[:, None]
+    r, k, v, w, g = _streams(p, x, prev, dt)
+    r, k, v, w = (_heads(t, n) for t in (r, k, v, w))
+    k = k * (1.0 / np.sqrt(n)).astype(jnp.float32).item()
+    st = state["wkv"]
+    rt, kt, vt, wt = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    kv = kt[..., :, None] * vt[..., None, :]
+    out = jnp.einsum("bhn,bhnm->bhm", rt, st + p["bonus"][None, :, :, None] * kv)
+    new_st = wt[..., :, None] * st + kv
+    y = _groupnorm(out[:, None], p["ln_gamma"], n).astype(dt) * g
+    y = y @ p["wo"].astype(dt)
+    new_state = dict(state, wkv=new_st, last_x_time=x[:, 0].astype(jnp.float32))
+    return y, new_state
+
+
+def rwkv_channel_init(rng, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], d, f),
+        "wr": dense_init(ks[1], d, d, scale=0.02),
+        "wv": dense_init(ks[2], f, d),
+    }
+
+
+def _channel_core(p, x, prev, dt, rules):
+    xk = x + (prev - x) * jax.nn.sigmoid(p["mix_k"]).astype(dt)
+    xr = x + (prev - x) * jax.nn.sigmoid(p["mix_r"]).astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    k = annotate(k, ("batch", "seq", "mlp"), rules)
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(dt))
+    return r * (k @ p["wv"].astype(dt))
+
+
+def rwkv_channel_apply(cfg, p, x, rules):
+    return _channel_core(p, x, _token_shift(x).astype(x.dtype), x.dtype, rules)
+
+
+def rwkv_channel_decode(cfg, p, x, state, rules):
+    prev = state["last_x_chan"].astype(x.dtype)[:, None]
+    y = _channel_core(p, x, prev, x.dtype, rules)
+    return y, dict(state, last_x_chan=x[:, 0].astype(jnp.float32))

@@ -1,0 +1,100 @@
+"""Chunked (matmul-form) RWKV6 WKV — the §Perf optimization for the
+sequential scan (see EXPERIMENTS.md, rwkv6-3b × train_4k iteration).
+
+The naive recurrence scans S tokens, moving the (B, H, N, N) state through
+HBM every step: traffic ∝ S · B·H·N² — 5+ TB per train step at 4k×batch.
+Within a chunk of length L the recurrence has a closed matmul form
+(the GLA/linear-attention chunking):
+
+    A_t = ∏_{u≤t} w_u                      (per-channel cumulative decay)
+    o_t = (r_t ⊙ A_{t−1}) · S_in                     [carry-in term]
+        + Σ_{s<t} (Σ_n r_tn · (A_{t−1,n}/A_{s,n}) · k_sn) v_s   [intra]
+        + (Σ_n r_tn u_n k_tn) v_t                    [bonus diagonal]
+    S_out = diag(A_L) · S_in + Σ_s (A_L/A_s ⊙ k_s)ᵀ v_s
+
+so the outer scan runs S/L steps instead of S — state traffic drops by L
+while the intra-chunk work becomes dense (L², N)-shaped einsums (MXU food
+on TPU). Decay ratios are exponentiated only under the causal mask, so
+nothing overflows even for strong decays.
+
+Numerically exact (f32) vs the sequential oracle — validated in
+tests/test_kernels.py::test_rwkv_chunked_matches_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_chunked"]
+
+NEG = -1e30
+
+
+def wkv_chunked(r, k, v, w, bonus, state0=None, chunk: int = 32):
+    """r,k,v,w: (B, S, H, N); w = decay ∈ (0,1) float32; bonus: (H, N).
+
+    Returns (out (B,S,H,N) float32, final state (B,H,N,N) float32).
+    """
+    b, s, h, n = r.shape
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        zeros = jnp.zeros((b, pad, h, n), r.dtype)
+        ones = jnp.ones((b, pad, h, n), jnp.float32)
+        r = jnp.concatenate([r, zeros], axis=1)
+        k = jnp.concatenate([k, zeros], axis=1)
+        v = jnp.concatenate([v, zeros], axis=1)
+        w = jnp.concatenate([w, ones], axis=1)
+    sp = s + pad
+    nc = sp // L
+
+    f32 = jnp.float32
+    # (B, nc, L, H, N) → scan over nc with (B, H, N, N) carry
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.astype(f32).reshape(b, nc, L, h, n), 2, 3
+        )  # (B, nc, H, L, N)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    u = bonus.astype(f32)  # (H, N)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))  # (B, nc, H, L, N)
+    logA = jnp.cumsum(logw, axis=3)  # inclusive: logA_t = Σ_{u≤t} log w_u
+    logA_prev = logA - logw  # logA_{t−1} (t=0 ⇒ 0)
+
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)  # s < t
+
+    st0 = (
+        state0.astype(f32)
+        if state0 is not None
+        else jnp.zeros((b, h, n, n), f32)
+    )
+
+    def step(st, xs):
+        rC, kC, vC, lA, lAp = xs  # (B, H, L, N) each
+        # carry-in: (r ⊙ A_{t−1}) · S_in
+        rA = rC * jnp.exp(lAp)
+        o1 = jnp.einsum("bhtn,bhnm->bhtm", rA, st)
+        # intra-chunk: exponentiate decay ratios only where causal
+        logD = lAp[:, :, :, None, :] - lA[:, :, None, :, :]  # (B,H,t,s,N)
+        D = jnp.exp(jnp.where(mask[None, None, :, :, None], logD, NEG))
+        tmp = jnp.einsum("bhtn,bhtsn,bhsn->bhts", rC, D, kC)
+        o2 = jnp.einsum("bhts,bhsm->bhtm", tmp, vC)
+        # bonus diagonal
+        coeff = jnp.sum(rC * u[None, :, None, :] * kC, axis=-1)  # (B,H,L)
+        o3 = coeff[..., None] * vC
+        out = o1 + o2 + o3
+        # state to next chunk
+        lA_L = lA[:, :, -1:, :]  # (B,H,1,N)
+        k_scaled = kC * jnp.exp(lA_L - lA)  # (B,H,L,N): A_L/A_s ⊙ k_s
+        st_new = jnp.exp(lA_L[:, :, 0, :, None]) * st + jnp.einsum(
+            "bhsn,bhsm->bhnm", k_scaled, vC
+        )
+        return st_new, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, logA, logA_prev))
+    stT, outs = jax.lax.scan(step, st0, xs)
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nc, H, L, N)
+    out = jnp.moveaxis(out, 2, 3).reshape(b, sp, h, n)[:, :s]
+    return out, stT

@@ -1,0 +1,156 @@
+"""The paper's three application models, in plain JAX pytrees.
+
+* ``CNN`` — TensorFlow-tutorial-style Cifar-10 CNN (2 conv + 2 dense),
+  scaled down by default for CPU simulation speed (width configurable).
+* ``RNN`` — GRU over stress sequences + static covariates → 3-way fatigue
+  level (paper application ii).
+* ``LinearSVM`` — L2-regularized multiclass/regression SVM for COP
+  prediction (paper application iii). We use the squared-hinge/regression
+  form so the loss is smooth (SGD-friendly), as is standard.
+
+Each model exposes ``init(rng) -> params`` and ``apply(params, *inputs)``,
+plus ``loss_fn(params, batch)`` used by the simulator's grad function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CNN", "RNN", "LinearSVM", "make_task_fns"]
+
+
+def _dense_init(rng, fan_in, fan_out, scale=None):
+    scale = scale if scale is not None else float(np.sqrt(2.0 / fan_in))
+    k1, _ = jax.random.split(rng)
+    return {
+        "w": jax.random.normal(k1, (fan_in, fan_out), jnp.float32) * scale,
+        "b": jnp.zeros((fan_out,), jnp.float32),
+    }
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    scale = float(np.sqrt(2.0 / (kh * kw * cin)))
+    k1, _ = jax.random.split(rng)
+    return {
+        "w": jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32) * scale,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CNN:
+    num_classes: int = 10
+    width: int = 16  # conv channels (tutorial uses 64; 16 is CPU-friendly)
+    dense: int = 64
+    img: int = 24
+
+    def init(self, rng):
+        k = jax.random.split(rng, 4)
+        flat = (self.img // 4) ** 2 * self.width
+        return {
+            "c1": _conv_init(k[0], 5, 5, 3, self.width),
+            "c2": _conv_init(k[1], 5, 5, self.width, self.width),
+            "d1": _dense_init(k[2], flat, self.dense),
+            "d2": _dense_init(k[3], self.dense, self.num_classes, scale=0.01),
+        }
+
+    def apply(self, params, x):
+        h = _maxpool(jax.nn.relu(_conv(x, params["c1"])))
+        h = _maxpool(jax.nn.relu(_conv(h, params["c2"])))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params["d1"]["w"] + params["d1"]["b"])
+        return h @ params["d2"]["w"] + params["d2"]["b"]
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        logits = self.apply(params, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@dataclasses.dataclass(frozen=True)
+class RNN:
+    hidden: int = 32
+    num_classes: int = 3
+    cov_dim: int = 4
+
+    def init(self, rng):
+        k = jax.random.split(rng, 5)
+        h = self.hidden
+        return {
+            "wz": _dense_init(k[0], 1 + h, h),
+            "wr": _dense_init(k[1], 1 + h, h),
+            "wh": _dense_init(k[2], 1 + h, h),
+            "cov": _dense_init(k[3], self.cov_dim, h),
+            "out": _dense_init(k[4], h, self.num_classes, scale=0.01),
+        }
+
+    def apply(self, params, x, cov):
+        """x: (B, T) stress sequence; cov: (B, cov_dim)."""
+        b = x.shape[0]
+        h0 = jnp.tanh(cov @ params["cov"]["w"] + params["cov"]["b"])
+
+        def cell(h, xt):
+            inp = jnp.concatenate([xt[:, None], h], axis=1)
+            z = jax.nn.sigmoid(inp @ params["wz"]["w"] + params["wz"]["b"])
+            r = jax.nn.sigmoid(inp @ params["wr"]["w"] + params["wr"]["b"])
+            inp2 = jnp.concatenate([xt[:, None], r * h], axis=1)
+            hh = jnp.tanh(inp2 @ params["wh"]["w"] + params["wh"]["b"])
+            h = (1 - z) * h + z * hh
+            return h, None
+
+        hT, _ = jax.lax.scan(cell, h0, x.T)
+        return hT @ params["out"]["w"] + params["out"]["b"]
+
+    def loss_fn(self, params, batch):
+        x, cov, y = batch
+        logits = self.apply(params, x, cov)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSVM:
+    """ε-insensitive L2 regression SVM (smooth squared form)."""
+
+    dim: int = 6
+    eps: float = 0.1
+    reg: float = 1e-3
+
+    def init(self, rng):
+        return {"w": jnp.zeros((self.dim,), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+
+    def apply(self, params, x):
+        return x @ params["w"] + params["b"]
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        pred = self.apply(params, x)
+        slack = jnp.maximum(jnp.abs(pred - y) - self.eps, 0.0)
+        return jnp.mean(slack**2) + self.reg * jnp.sum(params["w"] ** 2)
+
+
+def make_task_fns(model):
+    """(jitted grad_fn, jitted eval_fn) for a model with loss_fn."""
+    grad_fn = jax.jit(jax.value_and_grad(model.loss_fn))
+    eval_fn = jax.jit(model.loss_fn)
+    return grad_fn, eval_fn

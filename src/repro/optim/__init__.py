@@ -1,0 +1,4 @@
+from .sgd import sgd_momentum, SGDState, exp_decay
+from .adamw import adamw, AdamWState
+
+__all__ = ["sgd_momentum", "SGDState", "exp_decay", "adamw", "AdamWState"]

@@ -1,0 +1,50 @@
+"""AdamW for the LM training examples (the paper's PS uses plain SGD; the
+e2e 100M-parameter example trains with AdamW at the worker level and
+commits accumulated parameter deltas, showing ADSP composes with modern
+optimizers — the commit is optimizer-agnostic: it ships ΔW, not grads)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: object
+    nu: object
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params):
+        z = lambda: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return cls(z(), z(), jnp.zeros((), jnp.int32))
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01):
+    def init(params):
+        return AdamWState.create(params)
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        eta = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return (p - eta * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(mu, nu, step)
+
+    return init, update

@@ -1,0 +1,55 @@
+"""SGD + momentum in the paper's form (Eqn. 1):
+
+    W_{t+1} = W_t − η ∇ℓ(W_t) + μ (W_t − W_{t−1})
+
+State carries the previous delta (W_t − W_{t−1}) — the same buffer the
+ADSP PS uses, so core.commit and this optimizer share semantics. Plus the
+paper's exponentially-decaying local learning rate schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SGDState", "sgd_momentum", "exp_decay"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SGDState:
+    prev_delta: object
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params):
+        return cls(jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+
+def sgd_momentum(lr: float | Callable = 0.1, momentum: float = 0.0):
+    """Returns (init, update): update(grads, state, params) -> (new_params, state)."""
+
+    def init(params):
+        return SGDState.create(params)
+
+    def update(grads, state: SGDState, params):
+        eta = lr(state.step) if callable(lr) else lr
+        delta = jax.tree.map(
+            lambda d, g: momentum * d - eta * g, state.prev_delta, grads
+        )
+        new_params = jax.tree.map(jnp.add, params, delta)
+        return new_params, SGDState(delta, state.step + 1)
+
+    return init, update
+
+
+def exp_decay(initial: float, decay: float, period_steps: int) -> Callable:
+    """η(t) = initial · decay^(t / period) — the paper's local-lr schedule."""
+
+    def fn(step):
+        return initial * decay ** (step.astype(jnp.float32) / period_steps)
+
+    return fn

@@ -1,0 +1,15 @@
+from .analysis import (
+    HW_V5E,
+    collective_bytes,
+    roofline_terms,
+    model_flops,
+    RooflineReport,
+)
+
+__all__ = [
+    "HW_V5E",
+    "collective_bytes",
+    "roofline_terms",
+    "model_flops",
+    "RooflineReport",
+]

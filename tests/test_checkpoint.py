@@ -1,0 +1,37 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree, save_train_state, load_train_state
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(10, dtype=jnp.float32),
+        "b": {"c": jnp.ones((3, 4), jnp.bfloat16), "d": jnp.asarray(3, jnp.int32)},
+        "e": [jnp.zeros(2), jnp.ones(2)],
+    }
+    p = tmp_path / "ckpt.npz"
+    save_pytree(p, tree, metadata={"step": 7})
+    restored, meta = load_pytree(p, like=tree)
+    assert meta["step"] == 7
+    for a, b in zip(__import__("jax").tree.leaves(tree), __import__("jax").tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_missing_leaf_raises(tmp_path):
+    p = tmp_path / "c.npz"
+    save_pytree(p, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        load_pytree(p, like={"a": jnp.zeros(3), "b": jnp.zeros(3)})
+
+
+def test_train_state_helpers(tmp_path):
+    from repro.core.commit import AdspState
+
+    state = AdspState.create({"w": jnp.ones((4, 4))})
+    p = tmp_path / "s.npz"
+    save_train_state(p, state, step=42, extra={"arch": "granite"})
+    restored, meta = load_train_state(p, like=state)
+    assert meta == {"step": 42, "arch": "granite"}
+    np.testing.assert_array_equal(np.asarray(restored.params["w"]), np.ones((4, 4)))

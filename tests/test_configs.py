@@ -1,0 +1,95 @@
+"""Architecture configs: exact assigned hyper-parameters + invariants."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, get_smoke
+from repro.launch.specs import SHAPES, shape_supported
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+    "whisper_small": (12, 768, 12, 12, 3072, 51865),
+    "granite_3_8b": (40, 4096, 32, 8, 12800, 49155),
+    "llama4_maverick_400b_a17b": (48, 5120, 40, 8, 8192, 202048),
+    "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+    "qwen2_5_32b": (64, 5120, 40, 8, 27648, 152064),
+    "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+    "phi_3_vision_4_2b": (32, 3072, 32, 32, 8192, 32064),
+    "starcoder2_7b": (32, 4608, 36, 4, 18432, 49152),
+    "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151936),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_hyperparameters_exact(arch):
+    c = get_config(arch)
+    exp = EXPECTED[arch]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == exp
+    assert c.source  # citation present
+
+
+def test_moe_configs():
+    l4 = get_config("llama4_maverick_400b_a17b").moe
+    assert (l4.num_experts, l4.top_k) == (128, 1)
+    q = get_config("qwen2_moe_a2_7b").moe
+    assert (q.num_experts, q.top_k, q.num_shared_experts) == (60, 4, 4)
+
+
+def test_param_counts_in_model_card_range():
+    c = all_configs()
+    assert 8.5e9 < c["recurrentgemma_9b"].total_params() < 11e9
+    assert 0.2e9 < c["whisper_small"].total_params() < 0.4e9
+    assert 7e9 < c["granite_3_8b"].total_params() < 9.5e9
+    assert 350e9 < c["llama4_maverick_400b_a17b"].total_params() < 450e9
+    assert 12e9 < c["llama4_maverick_400b_a17b"].active_params() < 20e9
+    assert 2.5e9 < c["rwkv6_3b"].total_params() < 3.6e9
+    assert 30e9 < c["qwen2_5_32b"].total_params() < 35e9
+    assert 18e9 < c["internlm2_20b"].total_params() < 22e9
+    assert 3e9 < c["phi_3_vision_4_2b"].total_params() < 4.6e9
+    assert 6.5e9 < c["starcoder2_7b"].total_params() < 8e9
+    assert 12e9 < c["qwen2_moe_a2_7b"].total_params() < 16e9
+    assert 1.8e9 < c["qwen2_moe_a2_7b"].active_params() < 3.5e9
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_layer_groups_cover_all_layers(arch):
+    c = get_config(arch)
+    total = sum(len(pat) * reps for pat, reps in c.layer_groups)
+    assert total == c.num_layers
+
+
+def test_vocab_padding_multiple_of_256():
+    for c in all_configs().values():
+        assert c.padded_vocab % 256 == 0
+        assert 0 <= c.padded_vocab - c.vocab_size < 256
+
+
+def test_long_500k_support_policy():
+    assert not shape_supported(get_config("whisper_small"), "long_500k")[0]
+    ok, note = shape_supported(get_config("rwkv6_3b"), "long_500k")
+    assert ok and note == ""
+    ok, note = shape_supported(get_config("recurrentgemma_9b"), "long_500k")
+    assert ok and note == ""
+    ok, note = shape_supported(get_config("starcoder2_7b"), "long_500k")
+    assert ok and note == ""  # native sliding window
+    ok, note = shape_supported(get_config("granite_3_8b"), "long_500k")
+    assert ok and "sliding_window" in note  # beyond-paper variant
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_variants_reduced(arch):
+    s = get_smoke(arch)
+    assert s.d_model <= 512
+    assert s.vocab_size <= 512
+    if s.moe:
+        assert s.moe.num_experts <= 4
+    # same family: pattern kinds preserved
+    assert set(s.layer_pattern) <= set(get_config(arch).layer_pattern)
+
+
+def test_assigned_shapes():
+    assert SHAPES["train_4k"].seq == 4096 and SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].seq == 32768 and SHAPES["prefill_32k"].batch == 32
+    assert SHAPES["decode_32k"].seq == 32768 and SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524288 and SHAPES["long_500k"].batch == 1

@@ -1,0 +1,39 @@
+"""Cross-pod collective attribution (roofline.hlo_cost replica-group
+parsing) — the machinery behind the §Perf multi-pod finding."""
+
+from repro.roofline.hlo_cost import _group_crosses_boundary, module_cost
+
+
+def test_iota_groups_within_pod():
+    # [32,16]<=[512]: contiguous groups of 16 — never cross the 256 edge
+    attrs = ", replica_groups=[32,16]<=[512], channel_id=1"
+    assert not _group_crosses_boundary(attrs, 256)
+
+
+def test_iota_groups_crossing_pod():
+    # [256,2]<=[2,256]T(1,0): pairs (i, i+256) — every group crosses
+    attrs = ", replica_groups=[256,2]<=[2,256]T(1,0), channel_id=1"
+    assert _group_crosses_boundary(attrs, 256)
+
+
+def test_explicit_groups():
+    within = ", replica_groups={{0,1,2,3},{4,5,6,7}}, channel_id=2"
+    across = ", replica_groups={{0,256},{1,257}}, channel_id=2"
+    assert not _group_crosses_boundary(within, 256)
+    assert _group_crosses_boundary(across, 256)
+
+
+def test_module_cost_cross_pod_accounting():
+    hlo = """
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ar1 = f32[1024]{0} all-reduce(%p), replica_groups=[32,16]<=[512], to_apply=%s
+  %ar2 = f32[1024]{0} all-reduce(%p), replica_groups=[256,2]<=[2,256]T(1,0), to_apply=%s
+}
+"""
+    c = module_cost(hlo, pod_boundary=256)
+    # both ARs weighted 2×4096 bytes; only ar2 is cross-pod
+    assert c.coll["all-reduce"] == 2 * 2 * 4096
+    assert c.coll_cross == 2 * 4096
+    c0 = module_cost(hlo, pod_boundary=0)  # single-pod: no attribution
+    assert c0.coll_cross == 0

@@ -1,0 +1,119 @@
+"""Sliding-window attention + ring-buffer decode caches — the machinery
+behind long_500k for dense archs and local attention in hybrids."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm
+from repro.launch import specs as S
+
+
+def test_window_equals_full_when_window_covers_seq():
+    """window ≥ S ⇒ identical to full causal attention."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 48, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 48, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 48, 2, 16)), jnp.float32)
+    full = ref.flash_attention(q, k, v, causal=True, window=0)
+    win = ops.flash_attention(q, k, v, causal=True, window=48, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(full), atol=2e-5)
+
+
+def test_window_restricts_receptive_field():
+    """A key outside the window must not influence the output."""
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(1)
+    s, w = 32, 8
+    q = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+    out1 = ref.flash_attention(q, k, v, window=w)
+    # perturb an early key/value: positions ≥ w later must be unchanged
+    k2 = k.at[:, 0].set(k[:, 0] + 10.0)
+    v2 = v.at[:, 0].set(v[:, 0] - 5.0)
+    out2 = ref.flash_attention(q, k2, v2, window=w)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, w:]), np.asarray(out2[:, w:]), atol=1e-5
+    )
+    assert float(jnp.max(jnp.abs(out1[:, 0] - out2[:, 0]))) > 1e-3
+
+
+def test_ring_cache_decode_matches_full_forward_beyond_window():
+    """Decode with a ring cache of size `window` must agree with the full
+    forward even after the prompt exceeds the window (starcoder2 family)."""
+    cfg = get_smoke("starcoder2_7b")
+    assert cfg.sliding_window == 64
+    cfg = dataclasses.replace(cfg, sliding_window=16)  # small ring
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    B, s = 1, 40  # prompt 2.5× the window
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s + 2)), jnp.int32)
+
+    ref_logits, _ = lm.lm_logits(cfg, params, {"tokens": toks}, remat=False)
+    last, caches = lm.lm_prefill(cfg, params, {"tokens": toks[:, :s]}, reserve=2)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(ref_logits[:, s - 1]), atol=3e-5, rtol=3e-5
+    )
+    dec, caches = lm.lm_decode_step(cfg, params, {"tokens": toks[:, s:s+1]}, caches)
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(ref_logits[:, s]), atol=5e-5, rtol=5e-5
+    )
+    dec2, _ = lm.lm_decode_step(cfg, params, {"tokens": toks[:, s+1:s+2]}, caches)
+    np.testing.assert_allclose(
+        np.asarray(dec2[:, 0]), np.asarray(ref_logits[:, s + 1]), atol=5e-5, rtol=5e-5
+    )
+
+
+def test_long_500k_variant_config():
+    """effective_config applies the sliding-window variant exactly for the
+    dense full-attention archs and leaves native/sub-quadratic archs alone."""
+    from repro.configs import get_config
+
+    g = S.effective_config(get_config("granite_3_8b"), "long_500k")
+    assert g.sliding_window == 4096
+    g2 = S.effective_config(get_config("granite_3_8b"), "decode_32k")
+    assert g2.sliding_window == 0
+    r = S.effective_config(get_config("rwkv6_3b"), "long_500k")
+    assert r.sliding_window == 0
+    sc = S.effective_config(get_config("starcoder2_7b"), "long_500k")
+    assert sc.sliding_window == 4096  # paper-native, unchanged
+
+
+def test_decode_cache_sizes():
+    """long_500k decode caches must be O(window)/O(1), never O(seq)."""
+    from repro.configs import get_config
+
+    cfg = S.effective_config(get_config("granite_3_8b"), "long_500k")
+    tokens, caches = S.abstract_decode_state(cfg, S.SHAPES["long_500k"])
+    leaves = jax.tree.leaves(caches)
+    total = sum(l.size * l.dtype.itemsize for l in leaves)
+    assert total < 3e9  # ring buffers only — not the 85 GB dense cache
+    cfg2 = S.effective_config(get_config("rwkv6_3b"), "long_500k")
+    _, caches2 = S.abstract_decode_state(cfg2, S.SHAPES["long_500k"])
+    total2 = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(caches2))
+    assert total2 < 1e9  # O(1) recurrent state
+
+
+def test_rwkv_chunked_matches_ref():
+    from repro.kernels import ref
+    from repro.models.rwkv_chunked import wkv_chunked
+
+    rng = np.random.default_rng(3)
+    b, s, h, n = 2, 100, 2, 8
+    r = jnp.asarray(rng.normal(size=(b, s, h, n)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, n)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, n)) * 0.5, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.4, 0.999, size=(b, s, h, n)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, n)) * 0.1, jnp.float32)
+    out, st = wkv_chunked(r, k, v, w, u, chunk=32)
+    oute, ste = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oute), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste), atol=1e-5)

@@ -1,0 +1,101 @@
+"""Simulator-level invariants of every synchronization policy."""
+
+import numpy as np
+import pytest
+
+from repro.core.sync import make_policy
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import svm_task
+
+PROFILES = ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)
+
+
+def run(policy, seconds=240.0, profiles=PROFILES, **cfg_kw):
+    cfg = SimConfig(max_seconds=seconds, base_batch=32, gamma=20.0,
+                    epoch_seconds=80.0, **cfg_kw)
+    task = svm_task(len(profiles))
+    sim = Simulator(task, profiles, policy, cfg)
+    res = sim.train(seconds)
+    return sim, res
+
+
+def test_bsp_equal_steps_and_commits():
+    sim, res = run(make_policy("bsp"))
+    assert len(set(res.commit_counts)) == 1  # barrier ⇒ identical counts
+    steps = [w.steps for w in sim.workers]
+    assert max(steps) - min(steps) <= 1
+
+
+def test_ssp_staleness_bound():
+    s = 4
+    sim, res = run(make_policy("ssp", s=s))
+    steps = [w.steps for w in sim.workers]
+    assert max(steps) - min(steps) <= s
+
+
+def test_tap_never_blocks():
+    sim, res = run(make_policy("tap"))
+    assert all(w.status != "blocked" for w in sim.workers)
+    # fast workers commit ~3x as often as the slow one
+    assert res.commit_counts[0] > 2 * res.commit_counts[2] * 0.8
+
+
+def test_fixed_adacomm_commits_every_tau_steps():
+    tau = 8
+    sim, res = run(make_policy("fixed_adacomm", tau=tau))
+    for w in sim.workers:
+        assert w.steps_since_commit <= tau
+        # every completed commit corresponds to τ local steps
+        assert w.steps >= w.commits * tau
+
+
+def test_adsp_commit_counts_roughly_equal():
+    """Theorem 2 precondition: |c_i − c_j| ≤ ε at checkpoints."""
+    sim, res = run(make_policy("adsp", search=False, gamma=20.0), seconds=400)
+    cc = res.commit_counts
+    assert max(cc) - min(cc) <= 2, cc
+    assert min(cc) >= 3  # actually committing
+
+
+def test_adsp_no_waiting():
+    _, res_adsp = run(make_policy("adsp", search=False, gamma=20.0), seconds=300)
+    _, res_bsp = run(make_policy("bsp"), seconds=300)
+    assert res_adsp.waiting_fraction < 0.05
+    assert res_bsp.waiting_fraction > 0.3
+    # no-waiting ⇒ strictly more training steps in the same wall time
+    assert res_adsp.total_steps > 1.5 * res_bsp.total_steps
+
+
+def test_adsp_bandwidth_between_adacomm_and_bsp():
+    """Appendix D Fig. 10(a): bytes(ADACOMM) ≤ bytes(ADSP) ≤ bytes(BSP)."""
+    _, r_fixed = run(make_policy("fixed_adacomm", tau=16), seconds=300)
+    _, r_adsp = run(make_policy("adsp", search=False, gamma=20.0), seconds=300)
+    _, r_bsp = run(make_policy("bsp"), seconds=300)
+    assert r_fixed.bytes_to_ps <= r_adsp.bytes_to_ps * 1.2
+    assert r_adsp.bytes_to_ps < r_bsp.bytes_to_ps
+
+
+def test_batchtune_equalizes_step_times():
+    sim, res = run(make_policy("batchtune_bsp"), seconds=200)
+    # batch ∝ speed ⇒ all step times equal ⇒ barrier wait ≈ comm only
+    assert res.waiting_fraction < 0.25
+    steps = [w.steps for w in sim.workers]
+    assert max(steps) - min(steps) <= 1
+
+
+def test_determinism():
+    r1 = run(make_policy("adsp", search=False, gamma=20.0), seconds=150)[1]
+    r2 = run(make_policy("adsp", search=False, gamma=20.0), seconds=150)[1]
+    np.testing.assert_array_equal(r1.losses, r2.losses)
+    assert r1.total_steps == r2.total_steps
+    assert r1.commit_counts == r2.commit_counts
+
+
+def test_heterogeneity_profiles_match_H():
+    from repro.core.theory import heterogeneity_degree
+    from repro.edgesim.profiles import heterogeneity_profiles
+
+    for H in (1.0, 1.6, 2.4, 3.2):
+        profs = heterogeneity_profiles(6, H)
+        assert heterogeneity_degree([p.v for p in profs]) == pytest.approx(H)

@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the ADSP system (the paper's headline
+claims, at test scale)."""
+
+import numpy as np
+import pytest
+
+from repro.core.sync import make_policy
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import cnn_task, svm_task
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    return ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)
+
+
+def _run(task, profiles, policy, target_loss, max_seconds=3000):
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    target_loss=target_loss, max_seconds=max_seconds,
+                    local_lr=0.05)
+    sim = Simulator(task, profiles, policy, cfg)
+    return sim, sim.train()
+
+
+@pytest.mark.slow
+def test_adsp_beats_bsp_and_fixed_adacomm_on_cnn(profiles):
+    """Fig. 4: ADSP converges faster in wall-clock than BSP and Fixed
+    ADACOMM under 1:1:3 heterogeneity (test-scale CNN)."""
+    task = cnn_task(3, width=8)
+    _, res_adsp = _run(task, profiles, make_policy(
+        "adsp", search=True, gamma=20.0, probe_seconds=20.0, max_probes=8),
+        target_loss=0.6)
+    _, res_bsp = _run(task, profiles, make_policy("bsp"), target_loss=0.6)
+    _, res_fixed = _run(task, profiles, make_policy("fixed_adacomm", tau=8),
+                        target_loss=0.6)
+    assert res_adsp.converged
+    assert res_adsp.convergence_time < res_bsp.convergence_time
+    assert res_adsp.convergence_time < res_fixed.convergence_time
+    assert res_adsp.waiting_fraction < 0.05 < res_bsp.waiting_fraction
+
+
+def test_adsp_end_to_end_svm(profiles):
+    """Full pipeline (scheduler + search + timers) on the fast SVM task."""
+    task = svm_task(3)
+    sim, res = _run(task, profiles, make_policy(
+        "adsp", search=True, gamma=20.0, probe_seconds=20.0, max_probes=4),
+        target_loss=0.02, max_seconds=900)
+    assert res.converged
+    assert max(res.commit_counts) - min(res.commit_counts) <= 2
+    assert res.losses[-1] <= 0.03
+    # the online search ran and recorded traces
+    assert sim.policy.traces and sim.policy.traces[0].chosen >= 1
+
+
+def test_loss_decreases_under_all_policies(profiles):
+    task = svm_task(3)
+    for name, kw in (("bsp", {}), ("ssp", {}), ("tap", {}),
+                     ("fixed_adacomm", {"tau": 4}),
+                     ("adsp", {"search": False, "gamma": 20.0})):
+        _, res = _run(task, profiles, make_policy(name, **kw),
+                      target_loss=None, max_seconds=250)
+        assert res.losses[-1] < res.losses[0] * 0.7, name

@@ -1,0 +1,90 @@
+"""Property tests for the paper's analytical results (core.theory)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+pos_floats = st.floats(0.1, 100.0, allow_nan=False)
+
+
+@given(
+    st.lists(st.floats(0.5, 50.0), min_size=2, max_size=20),
+    st.lists(st.floats(1.0, 32.0), min_size=2, max_size=20),
+    st.floats(1.0, 600.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_staleness_p_in_unit_interval(v, dc, gamma):
+    m = min(len(v), len(dc))
+    p = theory.staleness_p(dc[:m], v[:m], gamma)
+    assert 0.0 < p <= 1.0
+    assert 0.0 <= theory.mu_implicit(dc[:m], v[:m], gamma) < 1.0
+
+
+@given(st.floats(1.0, 20.0), st.floats(1.0, 300.0))
+@settings(max_examples=100, deadline=None)
+def test_mu_implicit_decreases_with_commit_rate(v, gamma):
+    """Fig. 3(b): higher ΔC_target ⇒ smaller implicit momentum."""
+    mus = [
+        theory.mu_implicit([dc, dc, dc], [v, v, v], gamma) for dc in (1, 2, 4, 8, 16)
+    ]
+    assert all(a > b for a, b in zip(mus, mus[1:]))
+
+
+def test_eqn3_exact_value():
+    # hand-computed: m=2, Γ=60, ΔC=[2,3], v=[1,2] →
+    # sum = 60/(2·1) + 60/(3·2) = 30 + 10 = 40 ; p = 1/(1+0.5·40) = 1/21
+    p = theory.staleness_p([2, 3], [1, 2], 60.0)
+    assert np.isclose(p, 1 / 21)
+
+
+@given(st.integers(1, 50), st.lists(st.integers(0, 40), min_size=1, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_commit_rates_floor(c_target, counts):
+    rates = theory.commit_rates_from_target(c_target, counts)
+    assert (rates >= 1).all()
+    for r, c in zip(rates, counts):
+        assert r == max(c_target - c, 1)
+
+
+@given(
+    st.lists(
+        st.tuples(st.floats(0.2, 10.0), st.floats(0.0, 2.0)), min_size=2, max_size=12
+    ),
+    st.integers(1, 32),
+)
+@settings(max_examples=100, deadline=None)
+def test_speed_ordering_appendix_c(profs, tau):
+    """V_BSP ≤ V_Fixed(τ) — commit amortization never hurts (App. C)."""
+    profiles = [theory.WorkerProfile(v=v, o=o) for v, o in profs]
+    assert theory.speed_bsp(profiles) <= theory.speed_fixed_adacomm(profiles, tau) + 1e-12
+
+
+def test_adsp_speed_beats_bsp_under_heterogeneity():
+    profiles = [
+        theory.WorkerProfile(v=1.0, o=0.2),
+        theory.WorkerProfile(v=1.0, o=0.2),
+        theory.WorkerProfile(v=1 / 3, o=0.2),
+    ]
+    v_adsp = theory.speed_adsp(profiles, gamma=60.0, delta_c=[2, 2, 2])
+    assert v_adsp > theory.speed_bsp(profiles)
+    # ADSP's average speed = mean of worker capacities 1/(t_i + O_i/τ_i)
+    # with τ_i = (Γ/ΔC − O_i)·v_i: fast τ=29.8, slow τ=29.8/3.
+    expect = (2 * 1 / (1 + 0.2 / 29.8) + 1 / (3 + 0.2 / (29.8 / 3))) / 3
+    assert v_adsp == pytest.approx(expect, rel=0.02)
+
+
+def test_heterogeneity_degree():
+    assert theory.heterogeneity_degree([2.0, 2.0, 1.0]) == pytest.approx(5 / 3)
+    with pytest.raises(ValueError):
+        theory.heterogeneity_degree([1.0, -1.0])
+
+
+def test_local_steps_between_commits():
+    prof = theory.WorkerProfile(v=2.0, o=0.5)
+    # Γ/ΔC − O = 60/4 − 0.5 = 14.5 s → 29 steps
+    assert theory.local_steps_between_commits(prof, 60.0, 4) == 29
+    # overload: interval floor keeps ≥1 step
+    prof2 = theory.WorkerProfile(v=2.0, o=100.0)
+    assert theory.local_steps_between_commits(prof2, 60.0, 4) == 1
