@@ -5,13 +5,18 @@ Every benchmark emits CSV rows ``name,us_per_call,derived`` where
 benchmark harness cost) and ``derived`` is a ';'-separated key=value list
 holding the figure's actual quantities (convergence time, waiting
 fraction, speedups, roofline terms, ...).
+
+Policies come from the unified cluster runtime (``repro.cluster``): each
+``run_sim`` drives the event-driven ClusterEngine through the simulator
+backend, so benchmark numbers exercise the same Alg. 1/Alg. 2 code path
+as the real mesh loop (``repro.launch.train``).
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core.sync import make_policy
+from repro.cluster import make_policy
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles
 from repro.edgesim.tasks import cnn_task, make_task

@@ -4,10 +4,15 @@ Runs in ~30 s on CPU. Shows the paper's core result: with a 1:1:3 speed
 spread, BSP wastes ~half of every worker's time at the barrier while ADSP
 keeps all workers training and converges faster in (virtual) wall-clock.
 
+Each run drives the unified cluster runtime: an event-driven policy
+(``repro.cluster``) steered by the ClusterEngine over the virtual-clock
+simulator backend — the same control plane that drives real mesh
+training in ``repro.launch.train``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core.sync import make_policy
+from repro.cluster import make_policy
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles
 from repro.edgesim.tasks import svm_task

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.commit import AdspState, CommitConfig, make_adsp_step
+from repro.core.jaxcompat import use_mesh
 from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -63,7 +64,7 @@ def main():
     tau_arr = jnp.full((len(jax.devices()),), args.tau, jnp.int32)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for i in range(args.steps):
             toks = lm_tokens(args.seed, i * 65537, args.tau * args.batch,
                              args.seq, cfg.vocab_size)[:, :-1]

@@ -1,0 +1,61 @@
+"""Unified event-driven cluster runtime (DESIGN.md).
+
+One control plane — Alg. 1's commit-rate search + Alg. 2's per-worker
+timers, expressed as typed events and commands — executed by a single
+ClusterEngine over pluggable backends: the virtual-clock edge simulator
+(``repro.edgesim.Simulator``) and the real-hardware mesh loop
+(``repro.cluster.mesh_backend.MeshBackend``, used by
+``repro.launch.train``).
+"""
+
+from .churn import ChurnAction, ChurnSchedule, join, leave, speed
+from .engine import ClusterEngine, LegacyPolicyAdapter, coerce_policy
+from .policies import (
+    ADSP,
+    ADSPPlus,
+    AdaComm,
+    BatchTuneBSP,
+    BatchTuneFixedAdaComm,
+    BSP,
+    FixedAdaComm,
+    SSP,
+    TAP,
+    make_policy,
+)
+from .protocol import (
+    ArmTimer,
+    Block,
+    Checkpoint,
+    ClusterPolicy,
+    ClusterStarted,
+    Command,
+    Commit,
+    CommitApplied,
+    EpochEnd,
+    Event,
+    Resume,
+    Search,
+    SetBatchFraction,
+    SetRate,
+    SpeedChanged,
+    StepDone,
+    WorkerJoined,
+    WorkerLeft,
+    WorkerView,
+)
+
+__all__ = [
+    # engine
+    "ClusterEngine", "LegacyPolicyAdapter", "coerce_policy",
+    # policies
+    "ClusterPolicy", "BSP", "SSP", "TAP", "FixedAdaComm", "AdaComm",
+    "ADSP", "ADSPPlus", "BatchTuneBSP", "BatchTuneFixedAdaComm",
+    "make_policy",
+    # protocol
+    "Event", "ClusterStarted", "StepDone", "CommitApplied", "Checkpoint",
+    "EpochEnd", "WorkerJoined", "WorkerLeft", "SpeedChanged",
+    "Command", "Commit", "Block", "Resume", "ArmTimer", "SetRate",
+    "SetBatchFraction", "Search", "WorkerView",
+    # churn
+    "ChurnAction", "ChurnSchedule", "join", "leave", "speed",
+]

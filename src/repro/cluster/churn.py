@@ -1,0 +1,73 @@
+"""Elastic-churn schedules: scripted worker joins/leaves/speed shifts.
+
+The paper (§6) argues ADSP adapts to changing worker populations and
+speeds; a ChurnSchedule makes that testable: it is a time-sorted list of
+actions a backend applies at the given (virtual) times, each of which
+lands in the engine as a WorkerJoined / WorkerLeft / SpeedChanged event
+so the policy re-derives commit rates on the spot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.theory import WorkerProfile
+
+__all__ = ["ChurnAction", "ChurnSchedule", "join", "leave", "speed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnAction:
+    at: float  # virtual time
+    kind: str  # "join" | "leave" | "speed"
+    profile: WorkerProfile | None = None  # join
+    worker: int | None = None  # leave / speed (stable worker id)
+    v: float | None = None  # speed
+
+    def __post_init__(self):
+        if self.kind not in ("join", "leave", "speed"):
+            raise ValueError(f"unknown churn kind {self.kind!r}")
+        if self.kind == "join" and self.profile is None:
+            raise ValueError("join requires a profile")
+        if self.kind in ("leave", "speed") and self.worker is None:
+            raise ValueError(f"{self.kind} requires a worker id")
+        if self.kind == "speed" and (self.v is None or self.v <= 0):
+            raise ValueError("speed requires a positive v")
+
+
+def join(at: float, profile: WorkerProfile) -> ChurnAction:
+    return ChurnAction(at=at, kind="join", profile=profile)
+
+
+def leave(at: float, worker: int) -> ChurnAction:
+    return ChurnAction(at=at, kind="leave", worker=worker)
+
+
+def speed(at: float, worker: int, v: float) -> ChurnAction:
+    return ChurnAction(at=at, kind="speed", worker=worker, v=v)
+
+
+@dataclasses.dataclass
+class ChurnSchedule:
+    """Time-sorted actions; backends pop them as the clock passes ``at``."""
+
+    actions: Sequence[ChurnAction] = ()
+
+    def __post_init__(self):
+        self.actions = sorted(self.actions, key=lambda a: a.at)
+        self._i = 0
+
+    def due(self, now: float) -> list[ChurnAction]:
+        """Actions with at ≤ now that have not been handed out yet."""
+        out = []
+        while self._i < len(self.actions) and self.actions[self._i].at <= now:
+            out.append(self.actions[self._i])
+            self._i += 1
+        return out
+
+    def next_time(self) -> float | None:
+        """Time of the next pending action (None when exhausted)."""
+        if self._i < len(self.actions):
+            return self.actions[self._i].at
+        return None

@@ -1,0 +1,234 @@
+"""ClusterEngine: the single control-plane executor (DESIGN.md §2).
+
+The engine sits between exactly one policy and exactly one backend:
+
+    backend occurrences ──► engine.dispatch(Event) ──► policy.handle()
+    policy commands     ──► engine executes (timers, rates, parking,
+                            batch fractions, Alg. 1 search) against the
+                            shared worker bookkeeping + backend hooks
+
+Both backends — the virtual-clock ``edgesim.Simulator`` and the real
+mesh loop (``cluster.mesh_backend.MeshBackend``) — report through the
+same entry points, so Alg. 1/Alg. 2 logic exists exactly once. The
+engine also implements ``core.search.OnlineSystem`` (``commit_counts`` /
+``evaluate``), which is how a ``Search`` command turns into live probe
+windows on whichever backend is attached.
+
+Elastic churn: ``worker_joined`` / ``worker_left`` / ``speed_changed``
+keep the policy's rate rule current while workers come and go. A joining
+worker inherits the minimum cumulative commit count of its peers, so the
+rate rule ΔC_i = C_target − c_i ramps it in at the shared pace instead of
+forcing a catch-up burst.
+"""
+
+from __future__ import annotations
+
+from repro.core.search import decide_commit_rate
+
+from .protocol import (
+    ArmTimer,
+    Block,
+    Checkpoint,
+    ClusterPolicy,
+    ClusterStarted,
+    Command,
+    Commit,
+    CommitApplied,
+    EpochEnd,
+    Event,
+    Resume,
+    Search,
+    SetBatchFraction,
+    SetRate,
+    SpeedChanged,
+    StepDone,
+    WorkerJoined,
+    WorkerLeft,
+)
+
+__all__ = ["ClusterEngine", "LegacyPolicyAdapter", "coerce_policy"]
+
+
+class LegacyPolicyAdapter(ClusterPolicy):
+    """Wraps a pre-engine strategy object (should_commit /
+    may_start_next_step / on_* hooks) as a ClusterPolicy, for third-party
+    policies not yet ported to the protocol. The old hooks mutate worker
+    state directly, which still works: the engine's bookkeeping objects
+    are the same ones the backend exposes."""
+
+    def __init__(self, inner):
+        super().__init__(name=getattr(inner, "name", "legacy"),
+                         apply_mode=getattr(inner, "apply_mode", "immediate"),
+                         gates=True, tunes_batches=True)
+        self.inner = inner
+
+    def wants_commit(self, view, w) -> bool:
+        return self.inner.should_commit(view, w)
+
+    def may_start(self, view, w) -> bool:
+        return self.inner.may_start_next_step(view, w)
+
+    def fraction_for(self, view, index: int) -> float:
+        # Legacy batch_fraction takes a *positional* worker index; under
+        # churn the stable id diverges from the position, so translate.
+        pos = next(i for i, ws in enumerate(view.workers) if ws.index == index)
+        return self.inner.batch_fraction(view, pos)
+
+    def on_started(self, view) -> list[Command]:
+        self.inner.on_sim_start(view)
+        return self.batch_fractions(view)
+
+    def on_commit_applied(self, view, w) -> list[Command]:
+        self.inner.on_commit_applied(view, w)
+        return self.gating(view)
+
+    def on_checkpoint(self, view) -> list[Command]:
+        self.inner.on_checkpoint(view)
+        return []
+
+    def on_epoch_end(self, view) -> list[Command]:
+        self.inner.on_epoch(view)
+        return []
+
+
+def coerce_policy(policy) -> ClusterPolicy:
+    if isinstance(policy, ClusterPolicy):
+        return policy
+    if hasattr(policy, "should_commit"):
+        return LegacyPolicyAdapter(policy)
+    raise TypeError(f"not a synchronization policy: {policy!r}")
+
+
+class ClusterEngine:
+    """See module docstring. The engine is also the ClusterView handed to
+    policies and the OnlineSystem handed to Alg. 1."""
+
+    def __init__(self, policy, backend):
+        self.policy = coerce_policy(policy)
+        self.backend = backend
+        self.parked: set[int] = set()
+        backend.bind(self)
+
+    # ------------------------------------------------------------ view
+    @property
+    def now(self) -> float:
+        return self.backend.now
+
+    @property
+    def workers(self):
+        return self.backend.workers
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.backend.workers)
+
+    def worker(self, index: int):
+        lookup = getattr(self.backend, "worker_by_id", None)
+        if lookup is not None:  # O(1) when the backend keeps an id map
+            return lookup(index)
+        for w in self.backend.workers:
+            if w.index == index:
+                return w
+        raise KeyError(f"no alive worker with id {index}")
+
+    def recent_global_loss(self):
+        return self.backend.recent_global_loss()
+
+    def batch_fraction(self, w) -> float:
+        f = getattr(w, "batch_fraction", None)
+        return f if f is not None else 1.0 / max(self.num_workers, 1)
+
+    def may_start(self, w) -> bool:
+        return w.index not in self.parked
+
+    # ------------------------------------------------- backend entry points
+    def start(self) -> None:
+        self.dispatch(ClusterStarted())
+
+    def step_done(self, w) -> bool:
+        """Report a finished step; returns True iff ``w`` must commit."""
+        cmds = self.dispatch(StepDone(w.index))
+        return any(isinstance(c, Commit) and c.worker == w.index for c in cmds)
+
+    def commit_applied(self, w) -> None:
+        self.dispatch(CommitApplied(w.index))
+
+    def checkpoint(self) -> None:
+        self.dispatch(Checkpoint(self.now))
+
+    def epoch_end(self) -> None:
+        self.dispatch(EpochEnd(self.now))
+
+    # ------------------------------------------------------------ churn
+    def worker_joined(self, w) -> None:
+        """``w`` is already present in backend.workers.
+
+        The joiner inherits the minimum peer commit count so the rate rule
+        ΔC_i = C_target − c_i ramps it in at the shared pace, and the
+        minimum peer step count so step-gap policies (SSP) don't stall the
+        veterans behind it. Both credits are recorded so reporting can
+        subtract them (SimResult counts only real work)."""
+        peers = [p for p in self.workers if p.index != w.index]
+        if peers:
+            w.commit_credit = min(p.commits for p in peers)
+            w.commits = w.commit_credit
+            w.step_credit = min(p.steps for p in peers)
+            w.steps = w.step_credit
+        self.dispatch(WorkerJoined(w.index))
+
+    def worker_left(self, index: int) -> None:
+        """Called after the backend removed the worker."""
+        self.parked.discard(index)
+        self.dispatch(WorkerLeft(index))
+
+    def speed_changed(self, w) -> None:
+        self.dispatch(SpeedChanged(w.index, w.profile.v))
+
+    # --------------------------------------------------------- dispatching
+    def dispatch(self, event: Event) -> list[Command]:
+        cmds = self.policy.handle(self, event)
+        self.execute(cmds)
+        return cmds
+
+    def execute(self, cmds: list[Command]) -> None:
+        for c in cmds:
+            if isinstance(c, ArmTimer):
+                self.worker(c.worker).next_commit_time = c.deadline
+            elif isinstance(c, SetRate):
+                self.worker(c.worker).delta_c_target = int(c.delta_c)
+            elif isinstance(c, SetBatchFraction):
+                self.worker(c.worker).batch_fraction = c.fraction
+            elif isinstance(c, Block):
+                self.parked.add(c.worker)
+            elif isinstance(c, Resume):
+                if c.worker in self.parked:
+                    self.parked.discard(c.worker)
+                    self.backend.wake(self.worker(c.worker))
+            elif isinstance(c, Search):
+                self._run_search(c)
+            elif isinstance(c, Commit):
+                pass  # interpreted by the backend caller (step_done)
+            else:
+                raise TypeError(f"unknown command {c!r}")
+
+    # ------------------------------------------------ Alg. 1 (OnlineSystem)
+    def commit_counts(self) -> list[int]:
+        return [w.commits for w in self.workers]
+
+    def evaluate(self, c_target: int, probe_seconds: float):
+        """Probe a candidate C_target live for a window (Alg. 1 line 10)."""
+        self.execute(self.policy.retarget(self, int(c_target)))
+        return self.backend.run_window(probe_seconds)
+
+    def run_window(self, seconds: float):
+        return self.backend.run_window(seconds)
+
+    def set_c_target(self, c_target: int) -> None:
+        """Adopt a target outright (Scheduler / Fig. 3 sweep support)."""
+        self.execute(self.policy.retarget(self, int(c_target)))
+
+    def _run_search(self, cmd: Search) -> None:
+        chosen, trace = decide_commit_rate(self, cmd.probe_seconds, cmd.max_probes)
+        if hasattr(self.policy, "traces"):
+            self.policy.traces.append(trace)
+        self.execute(self.policy.retarget(self, chosen))

@@ -1,0 +1,224 @@
+"""Real-hardware backend of the ClusterEngine: the ADSP commit step on a
+JAX mesh (DESIGN.md §3–§4).
+
+One *commit round* = every worker runs its τ_i local microsteps (fused,
+no cross-worker collective — the no-waiting property) and then all commit
+at once via the ``core.commit.make_adsp_step`` all-reduce. Heterogeneity
+is realized through the τ_i vector: the engine's SetRate commands carry
+ΔC_i from the policy's rate rule, and the backend converts them to local
+step counts τ_i = v_i·(Γ/ΔC_i − O_i), bounded to [1, cfg.tau] (the
+compiled step bound).
+
+Clock: ``now`` advances ``round_seconds`` per commit round, so the same
+policy object (same Γ, same probe windows) drives this backend and the
+virtual-clock simulator. Checkpoint/epoch cadence is driven by
+``train(..., check_period=, epoch_rounds=)``.
+
+Churn: mid-run SpeedChanged is fully supported (speeds only shape τ_i).
+WorkerJoined/WorkerLeft are rejected — the worker set is baked into the
+compiled SPMD program; elastic membership needs a recompile, which the
+virtual-clock backend models instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import theory
+from repro.core.accum import make_accum_step
+from repro.core.commit import AdspState, CommitConfig, make_adsp_step
+from repro.core.theory import WorkerProfile
+
+from .engine import ClusterEngine
+from .protocol import WorkerView
+
+__all__ = ["MeshTask", "MeshBackend"]
+
+Pytree = object
+
+
+@dataclasses.dataclass
+class MeshTask:
+    """The learning problem for the mesh backend, as pure callables.
+
+    loss_fn(params, microbatch) -> scalar loss
+    make_microbatches(round_idx, tau, n_workers) -> pytree whose arrays
+        have leading dims (tau, global_batch, ...); the batch dim is
+        sharded over the worker axes by the compiled step.
+    """
+
+    init_params: Pytree
+    loss_fn: Callable
+    make_microbatches: Callable
+    name: str = "mesh_task"
+
+
+class MeshBackend:
+    """See module docstring. Drive with ``train()`` (or ``run_round``)
+    after wrapping in a ClusterEngine — the backend dispatches
+    ClusterStarted itself on the first round, so do not call
+    ``engine.start()`` directly::
+
+        backend = MeshBackend(task, mesh, tau=4)
+        engine = ClusterEngine(policy, backend)
+        backend.train(rounds=50, check_period=policy.gamma)
+    """
+
+    def __init__(
+        self,
+        task: MeshTask,
+        mesh: jax.sharding.Mesh,
+        *,
+        worker_axes: tuple[str, ...] = ("data",),
+        tau: int = 4,
+        local_lr: float = 0.05,
+        global_lr: float = 1.0,
+        commit_dtype: str = "float32",
+        profiles: Sequence[WorkerProfile] | None = None,
+        round_seconds: float = 1.0,
+        batch_spec: P | None = None,
+    ):
+        self.task = task
+        self.mesh = mesh
+        self.tau = tau
+        self.round_seconds = round_seconds
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_workers = int(np.prod([sizes[a] for a in worker_axes])) if worker_axes else 1
+        if profiles is None:
+            profiles = [WorkerProfile(v=1.0, o=0.0)] * n_workers
+        if len(profiles) != n_workers:
+            raise ValueError(f"{len(profiles)} profiles for {n_workers} workers")
+        self.workers = [WorkerView(index=i, profile=p) for i, p in enumerate(profiles)]
+        self.now = 0.0
+        self.losses: list[tuple[float, float]] = []
+        self.engine: ClusterEngine | None = None
+        self._round = 0
+        self._started = False
+
+        ccfg = CommitConfig(
+            tau=tau, local_lr=local_lr, global_lr=global_lr,
+            worker_axes=worker_axes, commit_dtype=commit_dtype,
+        )
+        if worker_axes:
+            spec = batch_spec if batch_spec is not None else P(
+                None, worker_axes if len(worker_axes) > 1 else worker_axes[0]
+            )
+            step = make_adsp_step(task.loss_fn, ccfg, mesh, batch_spec=spec)
+        else:
+            accum = make_accum_step(task.loss_fn, ccfg)
+
+            def step(state, microbatches, tau_per_worker):
+                return accum(state, microbatches, tau_per_worker[0])
+
+        self.step_fn = jax.jit(step)
+        self.state = AdspState.create(task.init_params)
+
+    # ------------------------------------------------------------ backend API
+    def bind(self, engine: ClusterEngine) -> None:
+        self.engine = engine
+
+    def wake(self, w) -> None:  # rounds are synchronous; nothing is parked
+        pass
+
+    def recent_global_loss(self) -> float | None:
+        if not self.losses:
+            return None
+        return float(np.mean([l for _, l in self.losses[-3:]]))
+
+    def run_window(self, seconds: float) -> tuple[list[float], list[float]]:
+        """Alg. 1 probe: run live for ``seconds`` of round time."""
+        start = self.now
+        rounds = max(int(math.ceil(seconds / self.round_seconds)), 2)
+        for _ in range(rounds):
+            self.run_round()
+        from repro.core.search import pad_probe_samples
+
+        ts = [t for t, _ in self.losses if t >= start]
+        ls = [l for t, l in self.losses if t >= start]
+        return pad_probe_samples(ts, ls)
+
+    # ---------------------------------------------------------------- rounds
+    def tau_per_worker(self) -> np.ndarray:
+        """Rate rule → local step counts: τ_i = v_i·(Γ/ΔC_i − O_i), bounded
+        to [1, tau]. Γ here is the policy's check period in round time; with
+        no check period yet (before the first SetRate) every worker runs the
+        full tau."""
+        out = np.empty(len(self.workers), np.int64)
+        gamma = getattr(self.engine.policy, "gamma", None) if self.engine else None
+        for i, w in enumerate(self.workers):
+            if gamma is None:
+                out[i] = self.tau
+                continue
+            t = theory.local_steps_between_commits(
+                w.profile, gamma, max(w.delta_c_target, 1)
+            )
+            out[i] = min(max(t, 1), self.tau)
+        return out
+
+    def _ensure_started(self) -> None:
+        if not self._started:
+            self._started = True
+            self.engine.start()
+
+    def run_round(self) -> float:
+        """One fused commit round; dispatches CommitApplied per worker."""
+        self._ensure_started()
+        tau_arr = self.tau_per_worker()
+        mbs = self.task.make_microbatches(self._round, self.tau, len(self.workers))
+        self.state, loss = self.step_fn(self.state, mbs, jnp.asarray(tau_arr, jnp.int32))
+        self._round += 1
+        self.now = self._round * self.round_seconds
+        loss = float(loss)
+        self.losses.append((self.now, loss))
+        for w, t in zip(self.workers, tau_arr):
+            w.steps += int(t)
+            w.steps_since_commit = 0
+            w.commits += 1
+            self.engine.commit_applied(w)
+        return loss
+
+    # ----------------------------------------------------------------- churn
+    def set_speed(self, index: int, v: float) -> None:
+        """Mid-run speed shift: re-derives τ_i through the policy."""
+        w = self.engine.worker(index)
+        w.profile = dataclasses.replace(w.profile, v=v)
+        self.engine.speed_changed(w)
+
+    # ----------------------------------------------------------------- drive
+    def train(
+        self,
+        rounds: int,
+        *,
+        check_period: float | None = None,
+        epoch_rounds: int = 0,
+        on_round: Callable[[int, float], None] | None = None,
+    ) -> list[tuple[float, float]]:
+        """Run ``rounds`` commit rounds with checkpoint/epoch cadence.
+
+        check_period: Γ in round time (fire engine.checkpoint each Γ);
+        epoch_rounds: fire engine.epoch_end every N rounds (0 = never —
+        note Alg. 1's search consumes probe rounds beyond ``rounds``).
+        on_round receives the count of *scheduled* rounds completed
+        (1-based, probe rounds excluded) and the round's loss.
+        """
+        self._ensure_started()
+        next_check = check_period if check_period else math.inf
+        done = 0
+        while done < rounds:
+            if epoch_rounds and done and done % epoch_rounds == 0:
+                self.engine.epoch_end()
+            loss = self.run_round()
+            done += 1
+            if on_round is not None:
+                on_round(done, loss)
+            if self.now >= next_check:
+                self.engine.checkpoint()
+                next_check += check_period
+        return self.losses

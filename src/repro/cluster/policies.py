@@ -1,0 +1,309 @@
+"""The nine synchronization policies (§2.2, §4, §5 baselines), ported to
+the event/command protocol.
+
+Each policy is pure control logic: typed events in, typed commands out
+(see protocol.py). Training state lives in the backend; scheduler scalars
+(C_target, τ, loss smoothing) live here, so policies stay trivially
+serializable and unit-testable, and the same object can drive the edge
+simulator or the real mesh loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import theory
+from repro.core.search import SearchTrace  # noqa: F401  (re-export for callers)
+
+from .protocol import (
+    ArmTimer,
+    ClusterPolicy,
+    Command,
+    Search,
+    SetRate,
+)
+
+__all__ = [
+    "BSP",
+    "SSP",
+    "TAP",
+    "FixedAdaComm",
+    "AdaComm",
+    "ADSP",
+    "ADSPPlus",
+    "BatchTuneBSP",
+    "BatchTuneFixedAdaComm",
+    "make_policy",
+]
+
+
+# ---------------------------------------------------------------------------
+# Classic baselines
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BSP(ClusterPolicy):
+    """Bulk Synchronous Parallel: commit every step, strict barrier."""
+
+    name: str = "bsp"
+    apply_mode: str = "barrier"
+
+    def wants_commit(self, view, w) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class SSP(ClusterPolicy):
+    """Stale Synchronous Parallel with slack ``s``: commit every step, a
+    worker may run ahead of the slowest by at most ``s`` steps."""
+
+    name: str = "ssp"
+    apply_mode: str = "immediate"
+    gates: bool = True
+    s: int = 8
+
+    def wants_commit(self, view, w) -> bool:
+        return True
+
+    def may_start(self, view, w) -> bool:
+        slowest = min(ws.steps for ws in view.workers)
+        return w.steps - slowest < self.s
+
+
+@dataclasses.dataclass
+class TAP(ClusterPolicy):
+    """Totally Asynchronous Parallel: commit every step, never block.
+    No convergence guarantee (Hsieh et al. 2017) — kept for completeness."""
+
+    name: str = "tap"
+    apply_mode: str = "immediate"
+
+    def wants_commit(self, view, w) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class FixedAdaComm(ClusterPolicy):
+    """Wang & Joshi (2018), fixed-τ variant: every worker accumulates τ
+    local updates, then synchronizes with a BSP-style barrier."""
+
+    name: str = "fixed_adacomm"
+    apply_mode: str = "barrier"
+    tau: int = 8
+
+    def wants_commit(self, view, w) -> bool:
+        return w.steps_since_commit >= self.tau
+
+
+@dataclasses.dataclass
+class AdaComm(FixedAdaComm):
+    """ADACOMM with the paper-described periodic τ tuning: re-evaluated at
+    every checkpoint; if the smoothed global loss failed to decrease since
+    the previous checkpoint, multiply τ by ``tau_decay`` (<1 ⇒ commit more
+    often). Follows AdaComm's τ(t) = ceil(τ0 · sqrt(loss_t/loss_0)) schedule
+    as the base, which the paper criticizes for its rapidly-declining rate."""
+
+    name: str = "adacomm"
+    tau0: int = 16
+    tau_decay: float = 0.5
+    _loss0: float = dataclasses.field(default=math.nan, init=False)
+    _last_loss: float = dataclasses.field(default=math.nan, init=False)
+
+    def on_started(self, view) -> list[Command]:
+        self.tau = self.tau0
+        return super().on_started(view)
+
+    def on_checkpoint(self, view) -> list[Command]:
+        loss = view.recent_global_loss()
+        if loss is None:
+            return []
+        if math.isnan(self._loss0):
+            self._loss0, self._last_loss = loss, loss
+            return []
+        # AdaComm schedule: τ ∝ sqrt(current/initial loss).
+        self.tau = max(1, math.ceil(self.tau0 * math.sqrt(max(loss, 1e-9) / self._loss0)))
+        if loss >= self._last_loss:  # stagnation → commit more often
+            self.tau = max(1, int(self.tau * self.tau_decay))
+        self._last_loss = loss
+        return []
+
+
+# ---------------------------------------------------------------------------
+# ADSP (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ADSP(ClusterPolicy):
+    """ADaptive Synchronous Parallel (Alg. 1 + Alg. 2), event-driven.
+
+    * no-waiting: workers always train; commits triggered by per-worker
+      timers with timeout Γ/ΔC_i − O_i (Alg. 2 → ArmTimer commands);
+    * at every Checkpoint (period Γ) commit rates are re-derived as
+      ΔC_i = C_target − c_i, equalizing cumulative commit counts
+      (→ SetRate commands);
+    * at every EpochEnd the scheduler runs the online search (Alg. 1 /
+      core.search.decide_commit_rate → a Search command the engine
+      executes, calling ``retarget`` with the winner).
+
+    ``search=False`` freezes C_target (used by unit tests and by the
+    Fig. 3 commit-rate sweep where ΔC is set exogenously). Elastic churn:
+    WorkerJoined/WorkerLeft/SpeedChanged all re-derive rates, so a joining
+    worker is folded into the rate rule immediately.
+    """
+
+    name: str = "adsp"
+    apply_mode: str = "immediate"
+    gamma: float = 60.0  # check period Γ (virtual seconds); paper: 60 s
+    initial_c_target: int = 1
+    search: bool = True
+    probe_seconds: float = 60.0
+    max_probes: int = 8
+    # Fixed commit-rate mode (Fig. 3 sweep): with search=False the target
+    # advances by `delta_per_period` each check period, pinning every
+    # worker's ΔC_target ≈ delta_per_period.
+    delta_per_period: int = 1
+    c_target: int = dataclasses.field(default=0, init=False)
+    traces: list = dataclasses.field(default_factory=list, init=False)
+
+    def wants_commit(self, view, w) -> bool:
+        return view.now >= w.next_commit_time
+
+    def on_started(self, view) -> list[Command]:
+        self.c_target = max(self.initial_c_target, 1)
+        return super().on_started(view) + self.rate_commands(view)
+
+    def on_commit_applied(self, view, w) -> list[Command]:
+        # Alg. 2 TIMEOUT: restart the timer.
+        dc = max(w.delta_c_target, 1)
+        deadline = view.now + theory.commit_interval_seconds(
+            self.gamma, dc, w.profile.o
+        )
+        return [ArmTimer(w.index, deadline)]
+
+    def on_checkpoint(self, view) -> list[Command]:
+        # New check period: move the target forward so every worker is
+        # expected to add ≥ delta_per_period commits, then re-derive rates.
+        counts = [ws.commits for ws in view.workers]
+        self.c_target = max(self.c_target, max(counts) + self.delta_per_period)
+        return self.rate_commands(view)
+
+    def on_epoch_end(self, view) -> list[Command]:
+        if not self.search:
+            return []
+        return [Search(self.probe_seconds, self.max_probes)]
+
+    def on_worker_joined(self, view, w) -> list[Command]:
+        return super().on_worker_joined(view, w) + self.rate_commands(view)
+
+    def on_worker_left(self, view, index: int) -> list[Command]:
+        return super().on_worker_left(view, index) + self.rate_commands(view)
+
+    def on_speed_changed(self, view, w) -> list[Command]:
+        return super().on_speed_changed(view, w) + self.rate_commands(view)
+
+    def retarget(self, view, c_target: int) -> list[Command]:
+        self.c_target = int(c_target)
+        return self.rate_commands(view)
+
+    def rate_commands(self, view) -> list[Command]:
+        """Alg. 2 rate rule: ΔC_i = C_target − c_i, timers re-armed.
+
+        A timer already armed *earlier* than the new interval is kept (do
+        not extend); shrink if the new rate demands faster commits.
+        """
+        counts = [ws.commits for ws in view.workers]
+        rates = theory.commit_rates_from_target(self.c_target, counts)
+        cmds: list[Command] = []
+        for ws, dc in zip(view.workers, rates):
+            interval = theory.commit_interval_seconds(
+                self.gamma, int(dc), ws.profile.o
+            )
+            deadline = min(ws.next_commit_time, view.now + interval)
+            cmds.append(SetRate(ws.index, int(dc)))
+            cmds.append(ArmTimer(ws.index, deadline))
+        return cmds
+
+    def mu_implicit(self, view) -> float:
+        """Current implicit momentum per Eqn. (3)."""
+        dc = [max(ws.delta_c_target, 1) for ws in view.workers]
+        v = [ws.profile.v for ws in view.workers]
+        return theory.mu_implicit(dc, v, self.gamma)
+
+
+@dataclasses.dataclass
+class ADSPPlus(ADSP):
+    """ADSP⁺ (Appendix D): offline oracle that, for a fixed C_target, grid
+    searches per-worker local-step counts τ_i ≤ no-waiting τ_i. Used to
+    verify that ADSP's no-waiting choice is near-optimal; the benchmark
+    driver performs the outer offline grid, this policy simply enforces a
+    τ cap per worker."""
+
+    name: str = "adsp_plus"
+    search: bool = False
+    tau_cap: tuple = ()  # per-worker max local steps between commits
+
+    def wants_commit(self, view, w) -> bool:
+        if self.tau_cap:
+            cap = self.tau_cap[w.index]
+            if w.steps_since_commit >= cap:
+                return True
+        return view.now >= w.next_commit_time
+
+
+# ---------------------------------------------------------------------------
+# BatchTune baselines (Appendix D, R²SP-style)
+# ---------------------------------------------------------------------------
+
+
+def _speed_fraction(view, index: int) -> float:
+    """Batch share ∝ v_i over the currently alive fleet."""
+    total = float(np.sum([ws.profile.v for ws in view.workers]))
+    me = next(ws for ws in view.workers if ws.index == index)
+    return float(me.profile.v) / total
+
+
+@dataclasses.dataclass
+class BatchTuneBSP(BSP):
+    """BSP with per-worker batch sizes ∝ v_i (global batch fixed), so step
+    times equalize and the barrier costs ~nothing."""
+
+    name: str = "batchtune_bsp"
+    tunes_batches: bool = True
+
+    def fraction_for(self, view, index: int) -> float:
+        return _speed_fraction(view, index)
+
+
+@dataclasses.dataclass
+class BatchTuneFixedAdaComm(FixedAdaComm):
+    name: str = "batchtune_fixed_adacomm"
+    tunes_batches: bool = True
+
+    def fraction_for(self, view, index: int) -> float:
+        return _speed_fraction(view, index)
+
+
+_POLICIES = {
+    "bsp": BSP,
+    "ssp": SSP,
+    "tap": TAP,
+    "adacomm": AdaComm,
+    "fixed_adacomm": FixedAdaComm,
+    "adsp": ADSP,
+    "adsp_plus": ADSPPlus,
+    "batchtune_bsp": BatchTuneBSP,
+    "batchtune_fixed_adacomm": BatchTuneFixedAdaComm,
+}
+
+
+def make_policy(name: str, **kwargs) -> ClusterPolicy:
+    try:
+        cls = _POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown sync policy {name!r}; known: {sorted(_POLICIES)}")
+    return cls(**kwargs)

@@ -1,0 +1,368 @@
+"""The event/command protocol between synchronization policies and the
+cluster engine (DESIGN.md §1–§2).
+
+ADSP's contribution is a *control plane*: Alg. 1's online commit-rate
+search plus Alg. 2's per-worker commit timers. This module gives that
+control plane one typed vocabulary so the logic exists exactly once and
+runs unchanged over any backend:
+
+  * **Events** flow backend → policy: a worker finished a mini-batch step,
+    a commit was applied, a check period Γ elapsed, an epoch ended, a
+    worker joined/left, a worker's measured speed changed.
+  * **Commands** flow policy → engine: commit now, block/resume a worker,
+    arm a commit timer (Alg. 2's TIMEOUT), set a commit rate ΔC_i
+    (Alg. 2's rate rule), set a batch fraction (BatchTune), run the
+    Alg. 1 search.
+
+Policies are *pure control*: they own scheduler scalars (C_target, τ, …)
+but never model state, so one policy object can steer the virtual-clock
+simulator and the real mesh loop in the same process. Decision logic is
+expressed as two pure predicates (``wants_commit`` / ``may_start``) plus
+event handlers that return commands; the legacy strategy-object entry
+points (``should_commit`` / ``may_start_next_step`` / ``batch_fraction``)
+are kept as thin shims over those predicates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Protocol, Sequence, runtime_checkable
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .engine import ClusterEngine
+
+__all__ = [
+    # events
+    "Event", "ClusterStarted", "StepDone", "CommitApplied", "Checkpoint",
+    "EpochEnd", "WorkerJoined", "WorkerLeft", "SpeedChanged",
+    # commands
+    "Command", "Commit", "Block", "Resume", "ArmTimer", "SetRate",
+    "SetBatchFraction", "Search",
+    # state / interfaces
+    "WorkerView", "ClusterView", "ClusterBackend", "ClusterPolicy",
+]
+
+
+# ---------------------------------------------------------------------------
+# Events (backend → policy)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base class; all events are immutable records."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterStarted(Event):
+    """Emitted once before any worker steps; policies set initial rates."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StepDone(Event):
+    """Worker finished one mini-batch step (update already accumulated)."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitApplied(Event):
+    """Worker's commit was applied by the PS and the pull completed."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Checkpoint(Event):
+    """Check-period boundary (every Γ): Alg. 2 re-derives commit rates."""
+
+    now: float
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochEnd(Event):
+    """Epoch boundary: Alg. 1 may search for a new C_target."""
+
+    now: float
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerJoined(Event):
+    """A worker was added to the cluster (elastic scale-out)."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerLeft(Event):
+    """A worker left the cluster; ``worker`` is its (now dead) id."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedChanged(Event):
+    """A worker's measured speed v_i changed (throttling, contention)."""
+
+    worker: int
+    v: float
+
+
+# ---------------------------------------------------------------------------
+# Commands (policy → engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Command:
+    """Base class; all commands are immutable records."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Commit(Command):
+    """Push the worker's accumulated update U_i to the PS now. Only valid
+    for the worker whose StepDone is being handled (commits happen at step
+    boundaries); the engine returns it to the backend caller."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Block(Command):
+    """Park the worker: it must not start its next step (SSP bound)."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Resume(Command):
+    """Unpark the worker; a no-op if it is not parked."""
+
+    worker: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmTimer(Command):
+    """Set the worker's commit deadline (Alg. 2 TIMEOUT restart)."""
+
+    worker: int
+    deadline: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SetRate(Command):
+    """Assign the worker's commit rate ΔC_i = C_target − c_i."""
+
+    worker: int
+    delta_c: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SetBatchFraction(Command):
+    """Assign the worker's share of the global batch (BatchTune)."""
+
+    worker: int
+    fraction: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Search(Command):
+    """Run Alg. 1 (DECIDECOMMITRATE) using the engine as the OnlineSystem;
+    the engine calls back into ``policy.retarget`` with the winner."""
+
+    probe_seconds: float
+    max_probes: int
+
+
+# ---------------------------------------------------------------------------
+# Worker / cluster views
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkerView:
+    """Per-worker control-plane bookkeeping the engine maintains.
+
+    Backends may substitute their own richer state object (the edge
+    simulator's WorkerState duck-types this — it adds params/update);
+    the engine only relies on the fields below. ``index`` is a *stable
+    id*: it never shifts when other workers leave.
+    """
+
+    index: int
+    profile: object  # core.theory.WorkerProfile (v, o)
+    steps: int = 0
+    steps_since_commit: int = 0
+    commits: int = 0
+    delta_c_target: int = 1
+    next_commit_time: float = math.inf
+    batch_fraction: float | None = None  # None → equal split 1/M
+    # ramp-in credit granted to elastic joiners (engine.worker_joined);
+    # included in steps/commits for control-plane math, subtracted for
+    # reporting real work.
+    step_credit: int = 0
+    commit_credit: int = 0
+
+
+@runtime_checkable
+class ClusterView(Protocol):
+    """What a policy may read when deciding. The engine implements this;
+    so does the edge simulator (for the legacy entry points)."""
+
+    now: float
+    workers: Sequence[WorkerView]
+    num_workers: int
+
+    def recent_global_loss(self) -> float | None: ...
+
+
+class ClusterBackend(Protocol):
+    """What the engine drives. A backend owns training state and a clock;
+    it reports occurrences to the engine (``engine.step_done`` etc.) and
+    obeys the resulting bookkeeping.
+
+    Required surface::
+
+        now: float                     # current (virtual) time
+        workers: list[WorkerView]      # alive workers, stable ids
+        bind(engine)                   # engine attaches itself
+        wake(worker)                   # a parked worker was resumed
+        run_window(seconds) -> (times, losses)   # Alg. 1 probe window
+    """
+
+    now: float
+    workers: list
+
+    def bind(self, engine: "ClusterEngine") -> None: ...
+
+    def wake(self, worker) -> None: ...
+
+    def run_window(self, seconds: float): ...
+
+    def recent_global_loss(self) -> float | None: ...
+
+
+# ---------------------------------------------------------------------------
+# Policy base class
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterPolicy:
+    """Base event-driven synchronization policy.
+
+    Subclasses implement the pure predicates ``wants_commit`` /
+    ``may_start`` (and ``fraction_for`` for BatchTune) and override the
+    ``on_*`` handlers they care about; ``handle`` is the single protocol
+    entry point the engine calls. Set ``gates = True`` on policies whose
+    ``may_start`` can return False so the engine receives Block/Resume
+    commands after every step.
+    """
+
+    name: str = "base"
+    apply_mode: str = "immediate"  # or "barrier" (PS collects whole round)
+    gates: bool = False  # True → emit Block/Resume from may_start
+    tunes_batches: bool = False  # True → emit SetBatchFraction on churn
+
+    # -- pure decision predicates -------------------------------------------
+    def wants_commit(self, view: ClusterView, w) -> bool:
+        raise NotImplementedError
+
+    def may_start(self, view: ClusterView, w) -> bool:
+        return True
+
+    def fraction_for(self, view: ClusterView, index: int) -> float:
+        return 1.0 / max(view.num_workers, 1)
+
+    # -- protocol entry point ------------------------------------------------
+    def handle(self, view: ClusterView, event: Event) -> list[Command]:
+        if isinstance(event, StepDone):
+            return self.on_step_done(view, _worker(view, event.worker))
+        if isinstance(event, CommitApplied):
+            return self.on_commit_applied(view, _worker(view, event.worker))
+        if isinstance(event, Checkpoint):
+            return self.on_checkpoint(view)
+        if isinstance(event, EpochEnd):
+            return self.on_epoch_end(view)
+        if isinstance(event, ClusterStarted):
+            return self.on_started(view)
+        if isinstance(event, WorkerJoined):
+            return self.on_worker_joined(view, _worker(view, event.worker))
+        if isinstance(event, WorkerLeft):
+            return self.on_worker_left(view, event.worker)
+        if isinstance(event, SpeedChanged):
+            return self.on_speed_changed(view, _worker(view, event.worker))
+        raise TypeError(f"unknown event {event!r}")
+
+    # -- default handlers ----------------------------------------------------
+    def on_started(self, view) -> list[Command]:
+        return self.batch_fractions(view)
+
+    def on_step_done(self, view, w) -> list[Command]:
+        cmds: list[Command] = []
+        if self.wants_commit(view, w):
+            cmds.append(Commit(w.index))
+        return cmds + self.gating(view)
+
+    def on_commit_applied(self, view, w) -> list[Command]:
+        return self.gating(view)
+
+    def on_checkpoint(self, view) -> list[Command]:
+        return []
+
+    def on_epoch_end(self, view) -> list[Command]:
+        return []
+
+    def on_worker_joined(self, view, w) -> list[Command]:
+        return self.batch_fractions(view) + self.gating(view)
+
+    def on_worker_left(self, view, index: int) -> list[Command]:
+        return self.batch_fractions(view) + self.gating(view)
+
+    def on_speed_changed(self, view, w) -> list[Command]:
+        return self.batch_fractions(view)
+
+    def retarget(self, view, c_target: int) -> list[Command]:
+        """Alg. 1 support: adopt a (candidate) C_target. Base: no-op."""
+        return []
+
+    # -- helpers -------------------------------------------------------------
+    def gating(self, view) -> list[Command]:
+        if not self.gates:
+            return []
+        return [
+            Block(w.index) if not self.may_start(view, w) else Resume(w.index)
+            for w in view.workers
+        ]
+
+    def batch_fractions(self, view) -> list[Command]:
+        if not self.tunes_batches:
+            return []
+        return [
+            SetBatchFraction(w.index, self.fraction_for(view, w.index))
+            for w in view.workers
+        ]
+
+    # -- legacy entry points (pre-engine strategy-object API) ----------------
+    def should_commit(self, sim, w) -> bool:
+        """Thin shim: old decision point #1 answers from wants_commit."""
+        return self.wants_commit(sim, w)
+
+    def may_start_next_step(self, sim, w) -> bool:
+        """Thin shim: old decision point #2 answers from may_start."""
+        return self.may_start(sim, w)
+
+    def batch_fraction(self, sim, worker_index: int) -> float:
+        """Thin shim: old decision point #3 answers from fraction_for."""
+        return self.fraction_for(sim, worker_index)
+
+
+def _worker(view: ClusterView, index: int):
+    get = getattr(view, "worker", None)
+    if get is not None:  # the engine resolves ids in O(1)
+        return get(index)
+    for w in view.workers:
+        if w.index == index:
+            return w
+    raise KeyError(f"no alive worker with id {index}")

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import theory
+from .jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
 
 __all__ = [
     "CommitConfig",
@@ -145,7 +146,10 @@ def make_local_update_fn(
             return (p, u), loss * live
 
         idxs = jnp.arange(cfg.tau, dtype=jnp.int32)
-        (_, u), losses = jax.lax.scan(body, (params, zeros), (microbatches, idxs))
+        (_, u), losses = jax.lax.scan(
+            body, (params, zeros), (microbatches, idxs),
+            unroll=True if SCAN_IN_PARTIAL_AUTO_BROKEN else 1,
+        )
         denom = jnp.maximum(tau_i.astype(jnp.float32), 1.0)
         return u, jnp.sum(losses) / denom
 
@@ -176,16 +180,11 @@ def make_adsp_step(
     local_update = make_local_update_fn(loss_fn, cfg, remat=remat)
     axes = cfg.worker_axes
 
-    def _worker_linear_index():
-        sizes = [jax.lax.axis_size(a) for a in axes]
-        idx = jnp.zeros((), jnp.int32)
-        for a, _s in zip(axes, sizes):
-            idx = idx * _s + jax.lax.axis_index(a)
-        return idx
-
     def _sharded_body(params, prev_delta, step, microbatches, tau_per_worker):
-        widx = _worker_linear_index()
-        tau_i = tau_per_worker[widx]
+        # tau_per_worker arrives sharded over the worker axes: this shard
+        # holds exactly the one entry belonging to this worker (no
+        # axis_index/partition-id computation, which XLA:CPU SPMD rejects).
+        tau_i = tau_per_worker[0]
         u, loss = local_update(params, microbatches, tau_i)
         # ---- the commit: PS apply as all-reduce over workers ----
         cd = jnp.dtype(cfg.commit_dtype)
@@ -203,13 +202,14 @@ def make_adsp_step(
     # params/opt-state replicated across worker axes (manual) — model-axis
     # sharding handled by auto GSPMD outside the manual set.
     rep = P()
-    sharded = jax.shard_map(
+    tau_spec = P(axes if len(axes) > 1 else axes[0])
+    sharded = _compat_shard_map(
         _sharded_body,
-        mesh=mesh,
-        in_specs=(rep, rep, rep, batch_spec, rep),
+        mesh,
+        in_specs=(rep, rep, rep, batch_spec, tau_spec),
         out_specs=(rep, rep, rep, rep),
         axis_names=set(axes),
-        check_vma=False,
+        check=False,
     )
 
     def adsp_step(state: AdspState, microbatches, tau_per_worker):

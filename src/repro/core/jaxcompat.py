@@ -1,0 +1,72 @@
+"""Version-compatibility shims over jax API drift.
+
+The repo targets the current jax API (``jax.set_mesh``, ``jax.shard_map``
+with ``axis_names``/``check_vma``) but must also run on the 0.4.x series
+where those live under different names:
+
+  * ambient mesh:   ``jax.set_mesh`` → ``jax.sharding.use_mesh`` → the
+    ``Mesh`` object itself (a context manager on 0.4.x);
+  * shard_map:      ``jax.shard_map(..., axis_names=, check_vma=)`` →
+    ``jax.experimental.shard_map.shard_map(..., auto=, check_rep=)``
+    (``auto`` is the complement of ``axis_names`` over the mesh axes).
+
+Keep every cross-version call site in the repo routed through here so the
+next drift is a one-file fix.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["use_mesh", "shard_map", "ambient_mesh_axes", "SCAN_IN_PARTIAL_AUTO_BROKEN"]
+
+# On the 0.4.x series, XLA:CPU's SPMD partitioner aborts (Check failed:
+# sharding.IsManualSubgroup()) when a while-loop (lax.scan) sits inside a
+# partially-manual shard_map. The τ-microstep scan is static-length, so
+# affected versions fully unroll it instead (core.commit).
+SCAN_IN_PARTIAL_AUTO_BROKEN = not hasattr(jax, "shard_map")
+
+
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Context manager making ``mesh`` the ambient mesh, any jax version."""
+    if hasattr(jax, "set_mesh"):  # jax >= 0.6
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):  # late 0.5.x
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # 0.4.x: Mesh is itself a context manager
+
+
+def ambient_mesh_axes() -> dict[str, int]:
+    """Axis-name → size of the ambient mesh; {} when none is active."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):  # jax >= 0.5
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or m.empty:
+            return {}
+        return dict(zip(m.axis_names, m.axis_sizes))
+    from jax._src import mesh as _mesh_lib  # 0.4.x ambient physical mesh
+
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    if m is None or m.empty:
+        return {}
+    return dict(zip(m.axis_names, m.devices.shape))
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check=False):
+    """``jax.shard_map`` with partial-manual axes, any jax version.
+
+    ``axis_names`` are the *manual* axes (new-style); on old jax they are
+    translated to the complementary ``auto`` set. ``check`` maps to
+    ``check_vma`` (new) / ``check_rep`` (old).
+    """
+    manual = set(axis_names) if axis_names is not None else set(mesh.axis_names)
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=manual, check_vma=check,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check, auto=frozenset(mesh.axis_names) - manual,
+    )

@@ -24,7 +24,18 @@ import numpy as np
 
 from .reward import log_slope_reward, reward
 
-__all__ = ["OnlineSystem", "SearchTrace", "decide_commit_rate", "Scheduler"]
+__all__ = ["OnlineSystem", "SearchTrace", "decide_commit_rate", "Scheduler",
+           "pad_probe_samples"]
+
+
+def pad_probe_samples(ts: list, ls: list) -> tuple[list, list]:
+    """Ensure a probe window yields ≥3 (time, loss) samples — the minimum
+    the reward curve fit needs — by inserting a midpoint. Shared by every
+    backend's ``run_window`` so the sampling contract lives in one place."""
+    if len(ts) < 3:
+        ts.insert(1, (ts[0] + ts[-1]) / 2)
+        ls.insert(1, (ls[0] + ls[-1]) / 2)
+    return ts, ls
 
 
 class OnlineSystem(Protocol):

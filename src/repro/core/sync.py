@@ -1,39 +1,45 @@
-"""Parameter-synchronization models (§2.2, §4, §5 baselines).
+"""Parameter-synchronization policies — compatibility facade.
 
-Each policy is a small strategy object consulted by the edge simulator
-(``repro.edgesim.simulator.Simulator``) at three decision points:
+The nine policies (§2.2, §4, §5 baselines) now live in
+``repro.cluster.policies`` as event-driven ``ClusterPolicy`` objects:
+pure functions from typed events (StepDone, CommitApplied, Checkpoint,
+EpochEnd, WorkerJoined, WorkerLeft, SpeedChanged) to typed commands
+(Commit, Block, ArmTimer, SetRate, SetBatchFraction, …), executed by the
+single ``repro.cluster.ClusterEngine`` over either backend (edge
+simulator or real mesh loop). See DESIGN.md.
 
-  * ``should_commit(sim, w)``   — worker ``w`` just finished a mini-batch
-    step: must it push its accumulated update to the PS now?
-  * ``may_start_next_step(sim, w)`` — may ``w`` begin another mini-batch,
-    or is it blocked (barrier / staleness bound)?
-  * ``apply_mode``              — ``"immediate"`` (PS applies every commit
-    on arrival: TAP/SSP/ADSP) or ``"barrier"`` (PS waits for the whole
-    round: BSP/ADACOMM).
+This module re-exports them under their historical names and keeps the
+old strategy-object entry points working:
 
-plus periodic hooks ``on_checkpoint`` (every check period Γ) and
-``on_epoch`` (ADSP's Alg. 1 search; ADACOMM's τ tuning).
-
-Policies hold *no* model state — all training state lives in the
-simulator — so they are trivially serializable and unit-testable.
+  * ``make_policy(name, **kw)`` — unchanged registry constructor;
+  * ``policy.should_commit(sim, w)`` / ``policy.may_start_next_step(sim,
+    w)`` / ``policy.batch_fraction(sim, i)`` — thin shims on
+    ``ClusterPolicy`` answering from the same pure predicates the event
+    handlers use;
+  * ``SyncPolicy`` — the legacy abstract base, retained so third-party
+    strategy objects keep type-checking; the engine wraps instances via
+    ``repro.cluster.LegacyPolicyAdapter``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import TYPE_CHECKING
-
-import numpy as np
-
-from . import theory
-from .search import decide_commit_rate
-
-if TYPE_CHECKING:  # pragma: no cover
-    from repro.edgesim.simulator import Simulator, WorkerState
+from repro.cluster.policies import (
+    ADSP,
+    ADSPPlus,
+    AdaComm,
+    BatchTuneBSP,
+    BatchTuneFixedAdaComm,
+    BSP,
+    FixedAdaComm,
+    SSP,
+    TAP,
+    make_policy,
+)
+from repro.cluster.protocol import ClusterPolicy
 
 __all__ = [
     "SyncPolicy",
+    "ClusterPolicy",
     "BSP",
     "SSP",
     "TAP",
@@ -47,289 +53,36 @@ __all__ = [
 ]
 
 
-@dataclasses.dataclass
 class SyncPolicy:
+    """Legacy strategy-object base (pre-engine API).
+
+    Third-party subclasses implementing ``should_commit`` /
+    ``may_start_next_step`` / ``on_*`` hooks still run everywhere a
+    policy is accepted: the engine adapts them with
+    ``repro.cluster.LegacyPolicyAdapter``. New policies should subclass
+    ``repro.cluster.ClusterPolicy`` instead.
+    """
+
     name: str = "base"
     apply_mode: str = "immediate"  # or "barrier"
 
-    # -- decision points -----------------------------------------------------
-    def should_commit(self, sim: "Simulator", w: "WorkerState") -> bool:
+    def should_commit(self, sim, w) -> bool:
         raise NotImplementedError
 
-    def may_start_next_step(self, sim: "Simulator", w: "WorkerState") -> bool:
-        return True
-
-    # -- hooks ----------------------------------------------------------------
-    def on_sim_start(self, sim: "Simulator") -> None:
-        pass
-
-    def on_commit_applied(self, sim: "Simulator", w: "WorkerState") -> None:
-        pass
-
-    def on_checkpoint(self, sim: "Simulator") -> None:
-        pass
-
-    def on_epoch(self, sim: "Simulator") -> None:
-        pass
-
-    # BatchTune policies override this to give fast workers bigger batches.
-    def batch_fraction(self, sim: "Simulator", worker_index: int) -> float:
-        return 1.0 / sim.num_workers
-
-
-# ---------------------------------------------------------------------------
-# Classic baselines
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class BSP(SyncPolicy):
-    """Bulk Synchronous Parallel: commit every step, strict barrier."""
-
-    name: str = "bsp"
-    apply_mode: str = "barrier"
-
-    def should_commit(self, sim, w) -> bool:
-        return True
-
-
-@dataclasses.dataclass
-class SSP(SyncPolicy):
-    """Stale Synchronous Parallel with slack ``s``: commit every step, a
-    worker may run ahead of the slowest by at most ``s`` steps."""
-
-    name: str = "ssp"
-    apply_mode: str = "immediate"
-    s: int = 8
-
-    def should_commit(self, sim, w) -> bool:
-        return True
-
     def may_start_next_step(self, sim, w) -> bool:
-        slowest = min(ws.steps for ws in sim.workers)
-        return w.steps - slowest < self.s
-
-
-@dataclasses.dataclass
-class TAP(SyncPolicy):
-    """Totally Asynchronous Parallel: commit every step, never block.
-    No convergence guarantee (Hsieh et al. 2017) — kept for completeness."""
-
-    name: str = "tap"
-    apply_mode: str = "immediate"
-
-    def should_commit(self, sim, w) -> bool:
         return True
 
-
-@dataclasses.dataclass
-class FixedAdaComm(SyncPolicy):
-    """Wang & Joshi (2018), fixed-τ variant: every worker accumulates τ
-    local updates, then synchronizes with a BSP-style barrier."""
-
-    name: str = "fixed_adacomm"
-    apply_mode: str = "barrier"
-    tau: int = 8
-
-    def should_commit(self, sim, w) -> bool:
-        return w.steps_since_commit >= self.tau
-
-
-@dataclasses.dataclass
-class AdaComm(FixedAdaComm):
-    """ADACOMM with the paper-described periodic τ tuning: re-evaluated at
-    every checkpoint; if the smoothed global loss failed to decrease since
-    the previous checkpoint, multiply τ by ``tau_decay`` (<1 ⇒ commit more
-    often). Follows AdaComm's τ(t) = ceil(τ0 · sqrt(loss_t/loss_0)) schedule
-    as the base, which the paper criticizes for its rapidly-declining rate."""
-
-    name: str = "adacomm"
-    tau0: int = 16
-    tau_decay: float = 0.5
-    _loss0: float = dataclasses.field(default=math.nan, init=False)
-    _last_loss: float = dataclasses.field(default=math.nan, init=False)
-
     def on_sim_start(self, sim) -> None:
-        self.tau = self.tau0
-
-    def on_checkpoint(self, sim) -> None:
-        loss = sim.recent_global_loss()
-        if loss is None:
-            return
-        if math.isnan(self._loss0):
-            self._loss0, self._last_loss = loss, loss
-            return
-        # AdaComm schedule: τ ∝ sqrt(current/initial loss).
-        self.tau = max(1, math.ceil(self.tau0 * math.sqrt(max(loss, 1e-9) / self._loss0)))
-        if loss >= self._last_loss:  # stagnation → commit more often
-            self.tau = max(1, int(self.tau * self.tau_decay))
-        self._last_loss = loss
-
-
-# ---------------------------------------------------------------------------
-# ADSP (the paper's contribution)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class ADSP(SyncPolicy):
-    """ADaptive Synchronous Parallel (Alg. 1 + Alg. 2).
-
-    * no-waiting: workers always train; commits triggered by per-worker
-      timers with timeout Γ/ΔC_i − O_i (Alg. 2);
-    * at every checkpoint (period Γ) commit rates are re-derived as
-      ΔC_i = C_target − c_i, equalizing cumulative commit counts;
-    * at every epoch the scheduler runs the online search (Alg. 1 /
-      core.search.decide_commit_rate) to pick C_target.
-
-    ``search=False`` freezes C_target (used by unit tests and by the
-    Fig. 3 commit-rate sweep where ΔC is set exogenously).
-    """
-
-    name: str = "adsp"
-    apply_mode: str = "immediate"
-    gamma: float = 60.0  # check period Γ (virtual seconds); paper: 60 s
-    initial_c_target: int = 1
-    search: bool = True
-    probe_seconds: float = 60.0
-    max_probes: int = 8
-    # Fixed commit-rate mode (Fig. 3 sweep): with search=False the target
-    # advances by `delta_per_period` each check period, pinning every
-    # worker's ΔC_target ≈ delta_per_period.
-    delta_per_period: int = 1
-    c_target: int = dataclasses.field(default=0, init=False)
-    traces: list = dataclasses.field(default_factory=list, init=False)
-
-    def on_sim_start(self, sim) -> None:
-        self.c_target = max(self.initial_c_target, 1)
-        self._assign_rates(sim)
-
-    def should_commit(self, sim, w) -> bool:
-        return sim.now >= w.next_commit_time
+        pass
 
     def on_commit_applied(self, sim, w) -> None:
-        # Alg. 2 TIMEOUT: restart the timer.
-        dc = max(w.delta_c_target, 1)
-        w.next_commit_time = sim.now + theory.commit_interval_seconds(
-            self.gamma, dc, w.profile.o
-        )
+        pass
 
     def on_checkpoint(self, sim) -> None:
-        # New check period: move the target forward so every worker is
-        # expected to add ≥ delta_per_period commits, then re-derive rates.
-        counts = [ws.commits for ws in sim.workers]
-        self.c_target = max(self.c_target, max(counts) + self.delta_per_period)
-        self._assign_rates(sim)
+        pass
 
     def on_epoch(self, sim) -> None:
-        if not self.search:
-            return
-        chosen, trace = decide_commit_rate(
-            _ADSPSearchAdapter(sim, self), self.probe_seconds, self.max_probes
-        )
-        self.traces.append(trace)
-        self.c_target = chosen
-        self._assign_rates(sim)
-
-    def _assign_rates(self, sim) -> None:
-        counts = [ws.commits for ws in sim.workers]
-        rates = theory.commit_rates_from_target(self.c_target, counts)
-        for ws, dc in zip(sim.workers, rates):
-            ws.delta_c_target = int(dc)
-            interval = theory.commit_interval_seconds(
-                self.gamma, int(dc), ws.profile.o
-            )
-            # Do not extend an already-armed earlier timer; shrink if the
-            # new rate demands faster commits.
-            ws.next_commit_time = min(
-                getattr(ws, "next_commit_time", np.inf), sim.now + interval
-            )
-
-    def mu_implicit(self, sim) -> float:
-        """Current implicit momentum per Eqn. (3)."""
-        dc = [max(ws.delta_c_target, 1) for ws in sim.workers]
-        v = [ws.profile.v for ws in sim.workers]
-        return theory.mu_implicit(dc, v, self.gamma)
-
-
-class _ADSPSearchAdapter:
-    """Adapts a live Simulator to core.search.OnlineSystem."""
-
-    def __init__(self, sim, policy: ADSP):
-        self._sim = sim
-        self._policy = policy
-
-    def commit_counts(self):
-        return [ws.commits for ws in self._sim.workers]
-
-    def evaluate(self, c_target: int, probe_seconds: float):
-        self._policy.c_target = int(c_target)
-        self._policy._assign_rates(self._sim)
-        return self._sim.run_window(probe_seconds)
-
-
-@dataclasses.dataclass
-class ADSPPlus(ADSP):
-    """ADSP⁺ (Appendix D): offline oracle that, for a fixed C_target, grid
-    searches per-worker local-step counts τ_i ≤ no-waiting τ_i. Used to
-    verify that ADSP's no-waiting choice is near-optimal; the simulator's
-    driver (benchmarks/appendix_adsp_plus.py) performs the outer offline
-    grid, this policy simply enforces a τ cap per worker."""
-
-    name: str = "adsp_plus"
-    search: bool = False
-    tau_cap: tuple = ()  # per-worker max local steps between commits
-
-    def should_commit(self, sim, w) -> bool:
-        if self.tau_cap:
-            cap = self.tau_cap[w.index]
-            if w.steps_since_commit >= cap:
-                return True
-        return sim.now >= w.next_commit_time
-
-
-# ---------------------------------------------------------------------------
-# BatchTune baselines (Appendix D, R²SP-style)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class BatchTuneBSP(BSP):
-    """BSP with per-worker batch sizes ∝ v_i (global batch fixed), so step
-    times equalize and the barrier costs ~nothing."""
-
-    name: str = "batchtune_bsp"
+        pass
 
     def batch_fraction(self, sim, worker_index: int) -> float:
-        v = np.array([ws.profile.v for ws in sim.workers], dtype=np.float64)
-        return float(v[worker_index] / v.sum())
-
-
-@dataclasses.dataclass
-class BatchTuneFixedAdaComm(FixedAdaComm):
-    name: str = "batchtune_fixed_adacomm"
-
-    def batch_fraction(self, sim, worker_index: int) -> float:
-        v = np.array([ws.profile.v for ws in sim.workers], dtype=np.float64)
-        return float(v[worker_index] / v.sum())
-
-
-_POLICIES = {
-    "bsp": BSP,
-    "ssp": SSP,
-    "tap": TAP,
-    "adacomm": AdaComm,
-    "fixed_adacomm": FixedAdaComm,
-    "adsp": ADSP,
-    "adsp_plus": ADSPPlus,
-    "batchtune_bsp": BatchTuneBSP,
-    "batchtune_fixed_adacomm": BatchTuneFixedAdaComm,
-}
-
-
-def make_policy(name: str, **kwargs) -> SyncPolicy:
-    try:
-        cls = _POLICIES[name]
-    except KeyError:
-        raise KeyError(f"unknown sync policy {name!r}; known: {sorted(_POLICIES)}")
-    return cls(**kwargs)
+        return 1.0 / sim.num_workers

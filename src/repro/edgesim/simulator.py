@@ -6,19 +6,31 @@ Semantics (matching the paper's testbed + Alg. 2):
   trip). Worker i trains mini-batches back to back; each step takes
   ``batch_scale_i / v_i`` virtual seconds (batch_scale_i = 1 for equal
   per-worker batches; BatchTune policies enlarge fast workers' batches).
-* After each step the active ``SyncPolicy`` decides whether the worker
-  commits its accumulated update U_i. A commit costs O_i/2 (push), the PS
-  applies ``W ← W − η_global · U_i`` (immediately, or after a barrier
-  collects the whole round), and the pull costs another O_i/2, after which
-  the worker resumes with fresh parameters.
+* After each step the control plane decides whether the worker commits
+  its accumulated update U_i. A commit costs O_i/2 (push), the PS applies
+  ``W ← W − η_global · U_i`` (immediately, or after a barrier collects the
+  whole round), and the pull costs another O_i/2, after which the worker
+  resumes with fresh parameters.
 * The *waiting time* of a worker is everything that is not computation:
-  waiting_i = elapsed − steps_i · step_time_i  (the paper's definition —
+  waiting_i = active − steps_i · step_time_i  (the paper's definition —
   communication counts as waiting).
 * A checkpoint hook fires every Γ; epochs are driven by ``train()``.
 * The global loss is evaluated (on held-out data, zero virtual cost) every
   ``eval_interval`` seconds; convergence is declared when the last
   ``converge_window`` evals vary by less than ``converge_tol`` (the
   paper's criterion) or when the loss first reaches ``target_loss``.
+
+Control plane: the simulator is a *backend* of
+``repro.cluster.ClusterEngine`` (DESIGN.md §2). Every decision point —
+commit-or-not, block-or-start, rates, timers, batch fractions, the Alg. 1
+search — is an event dispatched through the engine to the active policy;
+the simulator only executes physics (virtual clock, gradients, PS math).
+The same engine+policy pair drives the real mesh loop, so Alg. 1/Alg. 2
+logic exists exactly once.
+
+Elastic churn: ``add_worker`` / ``remove_worker`` / ``set_speed`` (or a
+declarative ``cluster.ChurnSchedule``) change the fleet mid-run; the
+engine re-derives commit rates via WorkerJoined/WorkerLeft/SpeedChanged.
 
 All randomness is seeded; two runs with the same config are bit-identical.
 """
@@ -35,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sync import SyncPolicy
+from repro.cluster import ChurnSchedule, ClusterEngine
 from repro.core.theory import WorkerProfile
 
 __all__ = ["TrainTask", "SimConfig", "WorkerState", "Simulator", "SimResult"]
@@ -79,6 +91,12 @@ class SimConfig:
 
 @dataclasses.dataclass
 class WorkerState:
+    """Training state + control-plane bookkeeping of one worker.
+
+    Duck-types ``repro.cluster.WorkerView`` (adds params/update/timing);
+    ``index`` is a stable id — it never shifts when other workers leave.
+    """
+
     index: int
     profile: WorkerProfile
     params: Pytree
@@ -91,6 +109,11 @@ class WorkerState:
     blocked_since: float = -1.0
     delta_c_target: int = 1
     next_commit_time: float = math.inf
+    batch_fraction: float | None = None  # None → equal split 1/M
+    joined_at: float = 0.0
+    step_started: float = -1.0  # when the in-flight step was scheduled
+    step_credit: int = 0  # joiner ramp-in credit (engine.worker_joined)
+    commit_credit: int = 0
     status: str = "idle"  # idle | computing | committing | awaiting_release | blocked
 
 
@@ -104,8 +127,8 @@ class SimResult:
     total_steps: int
     total_commits: int
     elapsed: float
-    computation_time: float  # summed over workers
-    waiting_time: float  # summed over workers (elapsed*M − computation)
+    computation_time: float  # summed over workers (incl. departed)
+    waiting_time: float  # summed over workers (active − computation)
     bytes_to_ps: float  # commits × model size (bandwidth proxy)
     commit_counts: list[int] = dataclasses.field(default_factory=list)
 
@@ -119,23 +142,24 @@ class Simulator:
     """See module docstring."""
 
     def __init__(self, task: TrainTask, profiles: Sequence[WorkerProfile],
-                 policy: SyncPolicy, config: SimConfig | None = None):
+                 policy, config: SimConfig | None = None,
+                 churn: ChurnSchedule | None = None):
         self.task = task
-        self.policy = policy
         self.cfg = config or SimConfig()
+        self.churn = churn
         self.now = 0.0
         self._heap: list = []
         self._seq = itertools.count()
-        self.num_workers = len(profiles)
+        self._next_id = itertools.count()
         self._zero = jax.tree.map(jnp.zeros_like, task.init_params)
         self.global_params = task.init_params
         self.workers = [
-            WorkerState(i, p, task.init_params, self._zero)
-            for i, p in enumerate(profiles)
+            WorkerState(next(self._next_id), p, task.init_params, self._zero)
+            for p in profiles
         ]
-        self.global_lr = (
-            self.cfg.global_lr if self.cfg.global_lr is not None else 1.0 / self.num_workers
-        )
+        self._by_id = {w.index: w for w in self.workers}
+        self._departed: list[tuple[WorkerState, float]] = []  # (state, left_at)
+        self._refresh_global_lr()
         self.loss_history: list[tuple[float, float]] = []
         self.converged = False
         self.convergence_time = math.inf
@@ -157,68 +181,143 @@ class Simulator:
         self._apply_commit = jax.jit(
             lambda w, u, lr: jax.tree.map(lambda a, b: a - lr * b, w, u)
         )
-        self.policy.on_sim_start(self)
+        # control plane ------------------------------------------------------
+        self.engine = ClusterEngine(policy, backend=self)
+        self.policy = self.engine.policy
+        self.engine.start()
         for w in self.workers:
             self._start_step(w)
         self._eval_global()
+
+    # ------------------------------------------------------------ backend API
+    def bind(self, engine: ClusterEngine) -> None:
+        self.engine = engine
+
+    def worker_by_id(self, index: int) -> WorkerState:
+        try:
+            return self._by_id[index]
+        except KeyError:
+            raise KeyError(f"no alive worker with id {index}") from None
+
+    def wake(self, w: WorkerState) -> None:
+        """A parked worker was resumed by the engine."""
+        if w.status == "blocked" and w.index in self._by_id:
+            w.status = "computing"
+            w.step_started = self.now
+            self._push(self.now + self._step_time(w), "step_done", w.index)
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.workers)
+
+    def _refresh_global_lr(self) -> None:
+        self.global_lr = (
+            self.cfg.global_lr if self.cfg.global_lr is not None
+            else 1.0 / max(self.num_workers, 1)
+        )
+
+    # ------------------------------------------------------------------ churn
+    def add_worker(self, profile: WorkerProfile) -> WorkerState:
+        """Elastic scale-out: the joiner starts from the current global
+        model with an empty update buffer."""
+        w = WorkerState(next(self._next_id), profile, self.global_params,
+                        self._zero, joined_at=self.now)
+        self.workers.append(w)
+        self._by_id[w.index] = w
+        self._refresh_global_lr()
+        self.engine.worker_joined(w)
+        self._start_step(w)
+        return w
+
+    def remove_worker(self, index: int) -> None:
+        """Elastic scale-in: drop the worker; its in-flight update is
+        discarded (crash semantics — ADSP tolerates it, §6)."""
+        w = self._by_id.get(index)
+        if w is None:
+            raise KeyError(f"no alive worker with id {index}")
+        if len(self.workers) == 1:
+            raise ValueError("cannot remove the last worker")
+        del self._by_id[index]
+        self.workers.remove(w)
+        self._departed.append((w, self.now))
+        self._barrier_buf.pop(index, None)
+        self._refresh_global_lr()
+        self.engine.worker_left(index)
+        self._maybe_release_barrier()
+
+    def set_speed(self, index: int, v: float) -> None:
+        """Mid-run speed shift (throttling, contention, recovery)."""
+        w = self._by_id[index]
+        w.profile = dataclasses.replace(w.profile, v=v)
+        self.engine.speed_changed(w)
+
+    def _apply_churn(self, act) -> None:
+        if act.kind == "join":
+            self.add_worker(act.profile)
+        elif act.kind == "leave":
+            self.remove_worker(act.worker)
+        else:  # "speed"
+            self.set_speed(act.worker, act.v)
 
     # ------------------------------------------------------------------ events
     def _push(self, t: float, kind: str, wid: int) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, wid))
 
     def _step_time(self, w: WorkerState) -> float:
-        frac = self.policy.batch_fraction(self, w.index)
+        frac = self.engine.batch_fraction(w)
         batch_scale = frac * self.num_workers
         return batch_scale / w.profile.v
 
     def _batch_size(self, w: WorkerState) -> int:
-        frac = self.policy.batch_fraction(self, w.index)
+        frac = self.engine.batch_fraction(w)
         return max(1, int(round(frac * self.num_workers * self.cfg.base_batch)))
 
     def _start_step(self, w: WorkerState) -> None:
-        if self.policy.may_start_next_step(self, w):
+        if self.engine.may_start(w):
             w.status = "computing"
+            w.step_started = self.now
             self._push(self.now + self._step_time(w), "step_done", w.index)
         else:
             w.status = "blocked"
             w.blocked_since = self.now
 
-    def _retry_blocked(self) -> None:
-        for w in self.workers:
-            if w.status == "blocked" and self.policy.may_start_next_step(self, w):
-                w.status = "computing"
-                self._push(self.now + self._step_time(w), "step_done", w.index)
-
     # ------------------------------------------------------------------ handlers
     def _on_step_done(self, w: WorkerState) -> None:
         w.steps += 1
         w.steps_since_commit += 1
-        w.computation_time += self._step_time(w)
+        # Charge the duration the step was scheduled with — a mid-step
+        # speed/batch change (churn) must not rewrite in-flight history.
+        w.computation_time += (
+            self.now - w.step_started if w.step_started >= 0
+            else self._step_time(w)
+        )
         batch = self.task.make_batch(w.index, w.steps, self._batch_size(w))
         _loss, grads = self.task.grad_fn(w.params, batch)
         w.params = self._sgd(w.params, grads, self._local_lr)
         w.update = self._accum(w.update, grads, self._local_lr)
-        if self.policy.should_commit(self, w):
+        if self.engine.step_done(w):
             w.status = "committing"
             w.comm_time += w.profile.o
             self._push(self.now + w.profile.o / 2.0, "commit_arrive", w.index)
         else:
             self._start_step(w)
-        self._retry_blocked()
 
     def _on_commit_arrive(self, w: WorkerState) -> None:
-        if self.policy.apply_mode == "barrier":
+        if self.engine.policy.apply_mode == "barrier":
             self._barrier_buf[w.index] = w.update
             w.status = "awaiting_release"
-            if len(self._barrier_buf) == self.num_workers:
-                for wid in sorted(self._barrier_buf):
-                    self._do_apply(self.workers[wid])
-                self._barrier_buf.clear()
-                for ww in self.workers:
-                    self._push(self.now + ww.profile.o / 2.0, "pull_done", ww.index)
+            self._maybe_release_barrier()
         else:
             self._do_apply(w)
             self._push(self.now + w.profile.o / 2.0, "pull_done", w.index)
+
+    def _maybe_release_barrier(self) -> None:
+        if self._barrier_buf and len(self._barrier_buf) == self.num_workers:
+            for wid in sorted(self._barrier_buf):
+                self._do_apply(self._by_id[wid])
+            self._barrier_buf.clear()
+            for ww in self.workers:
+                self._push(self.now + ww.profile.o / 2.0, "pull_done", ww.index)
 
     def _do_apply(self, w: WorkerState) -> None:
         self.global_params = self._apply_commit(
@@ -231,34 +330,50 @@ class Simulator:
         w.update = self._zero
         w.steps_since_commit = 0
         w.commits += 1
-        self.policy.on_commit_applied(self, w)
+        self.engine.commit_applied(w)
         self._start_step(w)
-        self._retry_blocked()
 
     # ------------------------------------------------------------------ loop
-    def _run_until(self, t_end: float) -> None:
-        while self._heap and not self.converged:
-            t = self._heap[0][0]
-            # Fire evals/checkpoints that precede the next worker event.
-            while self._next_eval <= min(t, t_end):
-                self.now = self._next_eval
+    def _fire_timers(self, horizon: float) -> bool:
+        """Fire evals / churn / checkpoints due at or before ``horizon``.
+        Returns True if the run converged while doing so."""
+        while True:
+            candidates = [self._next_eval, self._next_checkpoint]
+            nt = self.churn.next_time() if self.churn is not None else None
+            if nt is not None:
+                candidates.append(nt)
+            t_min = min(candidates)
+            if t_min > horizon:
+                return False
+            self.now = max(self.now, t_min)
+            if t_min == self._next_eval:
                 self._eval_global()
                 self._next_eval += self.cfg.eval_interval
                 if self.converged:
-                    return
-            while self._next_checkpoint <= min(t, t_end):
-                self.now = self._next_checkpoint
+                    return True
+            elif nt is not None and t_min == nt:
+                for act in self.churn.due(self.now):
+                    self._apply_churn(act)
+            else:
                 self._local_lr = self.cfg.local_lr * (
                     self.cfg.local_lr_decay ** (self.now / self.cfg.gamma)
                 )
-                self.policy.on_checkpoint(self)
+                self.engine.checkpoint()
                 self._next_checkpoint += self.cfg.gamma
+
+    def _run_until(self, t_end: float) -> None:
+        while self._heap and not self.converged:
+            t = self._heap[0][0]
+            if self._fire_timers(min(t, t_end)):
+                return
             if t > t_end:
                 self.now = t_end
                 return
             t, _, kind, wid = heapq.heappop(self._heap)
+            w = self._by_id.get(wid)
+            if w is None:  # event of a departed worker
+                continue
             self.now = t
-            w = self.workers[wid]
             if kind == "step_done":
                 self._on_step_done(w)
             elif kind == "commit_arrive":
@@ -309,26 +424,30 @@ class Simulator:
         if not self.converged:  # don't jump the clock past a finished run
             self.now = max(self.now, start + seconds)
         self._eval_global()
+        from repro.core.search import pad_probe_samples
+
         ts = [t for t, _ in self.loss_history if t >= start]
         ls = [l for t, l in self.loss_history if t >= start]
-        if len(ts) < 3:  # force a midpoint sample for the curve fit
-            ts.insert(1, (ts[0] + ts[-1]) / 2)
-            ls.insert(1, (ls[0] + ls[-1]) / 2)
-        return ts, ls
+        return pad_probe_samples(ts, ls)
 
     def run(self, seconds: float) -> None:
         self._run_until(self.now + seconds)
 
+    # Alg. 1 (OnlineSystem / Scheduler) surface, delegated to the engine.
+    def commit_counts(self) -> list[int]:
+        return self.engine.commit_counts()
+
+    def evaluate(self, c_target: int, probe_seconds: float):
+        return self.engine.evaluate(c_target, probe_seconds)
+
     def set_c_target(self, c: int) -> None:
-        if hasattr(self.policy, "c_target"):
-            self.policy.c_target = int(c)
-            self.policy._assign_rates(self)
+        self.engine.set_c_target(int(c))
 
     def train(self, max_seconds: float | None = None) -> SimResult:
         """Drive epochs until convergence or the time budget."""
         budget = max_seconds if max_seconds is not None else self.cfg.max_seconds
         while self.now < budget and not self.converged:
-            self.policy.on_epoch(self)  # may consume probe windows
+            self.engine.epoch_end()  # Alg. 1 search (may consume probe windows)
             if self.converged:
                 break
             t_epoch_end = min(self.now + self.cfg.epoch_seconds, budget)
@@ -341,19 +460,26 @@ class Simulator:
         times = np.array([t for t, _ in self.loss_history])
         losses = np.array([l for _, l in self.loss_history])
         comp = sum(w.computation_time for w in self.workers)
+        comp += sum(w.computation_time for w, _ in self._departed)
+        steps = sum(w.steps - w.step_credit for w in self.workers)
+        steps += sum(w.steps - w.step_credit for w, _ in self._departed)
         elapsed = self.now
-        waiting = max(elapsed * self.num_workers - comp, 0.0)
+        active = sum(elapsed - w.joined_at for w in self.workers)
+        active += sum(left - w.joined_at for w, left in self._departed)
+        waiting = max(active - comp, 0.0)
         return SimResult(
-            policy=self.policy.name,
+            policy=self.engine.policy.name,
             times=times,
             losses=losses,
             converged=self.converged,
             convergence_time=self.convergence_time,
-            total_steps=sum(w.steps for w in self.workers),
+            total_steps=steps,
             total_commits=self.total_commits,
             elapsed=elapsed,
             computation_time=comp,
             waiting_time=waiting,
             bytes_to_ps=4.0 * self._param_sizes * self.total_commits,
-            commit_counts=[w.commits for w in self.workers],
+            # real commits only — elastic joiners' ramp-in credit (used by
+            # the rate rule) is subtracted for reporting
+            commit_counts=[w.commits - w.commit_credit for w in self.workers],
         )

@@ -26,10 +26,11 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.core.jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, use_mesh
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build
-from repro.roofline import model_flops, roofline_terms
+from repro.roofline import model_flops, roofline_terms, xla_cost_dict
 
 SHAPE_NAMES = list(S.SHAPES)
 
@@ -50,16 +51,26 @@ def run_one(arch: str, shape: str, mesh_name: str, tau: int = 4,
         }
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     n_chips = mesh.devices.size
+    overrides = dict(overrides or {})
+    if (spec.kind == "train" and SCAN_IN_PARTIAL_AUTO_BROKEN
+            and not overrides.get("granularity")):
+        # This jax's SPMD partitioner aborts on lax.scan inside a partially
+        # manual shard_map (see core.jaxcompat); the layer-group scans make
+        # worker-axis train steps uncompilable, so measure the accum
+        # (no-worker-axis) variant and say so in the artifact.
+        overrides["granularity"] = "accum"
+        note = (note + "; " if note else "") + \
+            "worker-axis step not compilable on this jax: accum fallback"
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         bundle = build(cfg, mesh, shape, tau=tau, attn_impl=attn_impl,
-                       **(overrides or {}))
+                       **overrides)
         lowered = bundle.lower()
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-        cost = compiled.cost_analysis() or {}
+        cost = xla_cost_dict(compiled)
         try:
             mem = compiled.memory_analysis()
             mem_d = {

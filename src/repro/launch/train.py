@@ -1,12 +1,13 @@
 """Training launcher: runs real ADSP training of any registered arch on
 whatever devices exist (CPU host devices for development, TPU mesh in
-production), with the full control plane: measured worker speeds → ADSP
-rate rule → τ_i assignment → periodic commit-rate search on the live
-loss curve (Alg. 1 on the cluster).
+production), with the full control plane: ADSP rate rule → τ_i assignment
+→ periodic commit-rate search on the live loss curve (Alg. 1 on the
+cluster).
 
-The cluster scheduler is the same Alg. 1 code the edge simulator uses —
-``OnlineSystem`` here is the live training loop, ``evaluate`` probes a
-candidate C_target for ``probe_steps`` commits.
+The control plane is the *same* code the edge simulator uses: a
+``repro.cluster.ADSP`` policy driven by a ``ClusterEngine`` over the
+``repro.cluster.mesh_backend.MeshBackend`` (DESIGN.md §4) — Alg. 1 and
+Alg. 2 exist exactly once in the repo.
 
 Usage (CPU dev, reduced config):
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-moe-a2.7b \
@@ -22,129 +23,69 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke
-from repro.core.commit import AdspState, CommitConfig
-from repro.core.search import decide_commit_rate
-from repro.core import theory
-from repro.data.synthetic import lm_tokens
-from repro.launch.steps import build_train_step
-from repro.models.config import ModelConfig
-from repro.models import lm
 from repro.checkpoint import save_train_state
+from repro.cluster import ADSP, ClusterEngine
+from repro.cluster.mesh_backend import MeshBackend, MeshTask
+from repro.configs import get_config, get_smoke
+from repro.core.jaxcompat import use_mesh
+from repro.core.theory import WorkerProfile
+from repro.data.synthetic import lm_tokens
+from repro.models import lm
+from repro.models.config import ModelConfig
 
-__all__ = ["TrainLoop", "main"]
+__all__ = ["build_mesh_task", "make_trainer", "main"]
 
 
-class TrainLoop:
-    """Owns state + step fn; exposes the OnlineSystem protocol so Alg. 1
-    can steer the commit rate from live loss measurements."""
+def build_mesh_task(cfg: ModelConfig, rules, *, seq: int, batch: int,
+                    seed: int = 0) -> MeshTask:
+    """Bind an LM architecture + data stream into a MeshTask."""
 
-    def __init__(self, cfg: ModelConfig, mesh, *, tau: int, seq: int,
-                 batch: int, local_lr: float, global_lr: float | None,
-                 seed: int = 0, gamma_steps: int = 8):
-        self.cfg = cfg
-        self.mesh = mesh
-        self.tau = tau
-        self.seq = seq
-        self.batch = batch
-        self.gamma_steps = gamma_steps  # check period, in commit steps
-        n_workers = 1
-        from repro.launch.mesh import worker_axes_for
-        from repro.launch.steps import _num_workers
+    def loss_fn(params, mb):
+        return lm.lm_loss(cfg, params, mb, rules=rules, remat=False)
 
-        self.worker_axes = worker_axes_for(cfg.adsp_granularity, mesh)
-        n_workers = _num_workers(mesh, self.worker_axes)
-        self.n_workers = n_workers
-        self.global_lr = global_lr if global_lr is not None else 1.0
+    def make_microbatches(round_idx: int, tau: int, _n_workers: int):
+        toks = lm_tokens(seed, round_idx * 7919, tau * batch, seq,
+                         cfg.vocab_size)[:, :-1]
+        return {"tokens": jnp.asarray(toks.reshape(tau, batch, seq), jnp.int32)}
 
-        import dataclasses as dc
+    return MeshTask(
+        init_params=None,  # filled by make_trainer (needs dtype cast)
+        loss_fn=loss_fn,
+        make_microbatches=make_microbatches,
+        name=f"train:{cfg.name}",
+    )
 
-        bundle = build_train_step(
-            cfg, mesh, shape="train_4k", tau=tau, local_lr=local_lr,
-            global_lr=self.global_lr,
-        )
-        # dev-scale: rebuild with the requested seq/batch instead of 4k
-        from repro.launch import specs as S
 
-        spec = S.ShapeSpec("dev", "train", seq, batch)
-        object.__setattr__  # noqa — spec is frozen; create directly
-        self.spec = spec
-        self.step_fn = None
-        self._build_step(local_lr)
-        params = lm.lm_init(jax.random.PRNGKey(seed), cfg)
-        params = jax.tree.map(lambda x: x.astype(jnp.dtype(cfg.dtype))
-                              if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
-        self.state = AdspState.create(params)
-        self.seed = seed
-        self.commits = np.zeros(n_workers, dtype=np.int64)
-        self.losses: list[tuple[float, float]] = []  # (commit_step, loss)
-        self.virtual_speeds = np.linspace(1.0, 1.0, n_workers)
+def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
+                 local_lr: float, global_lr: float, seed: int = 0,
+                 gamma_rounds: float = 8.0, search_every: int = 0,
+                 speeds=None) -> tuple[MeshBackend, ClusterEngine, ADSP]:
+    """Build the (backend, engine, policy) triple for an arch on a mesh."""
+    from repro.launch.mesh import worker_axes_for
+    from repro.launch.steps import _rules_for
 
-    def _build_step(self, local_lr):
-        from repro.core.accum import make_accum_step
-        from repro.core.commit import make_adsp_step
-        from repro.launch.steps import _rules_for
-        from jax.sharding import PartitionSpec as P
+    worker_axes = worker_axes_for(cfg.adsp_granularity, mesh)
+    rules = _rules_for(mesh, worker_axes)
+    task = build_mesh_task(cfg, rules, seq=seq, batch=batch, seed=seed)
+    params = lm.lm_init(jax.random.PRNGKey(seed), cfg)
+    task.init_params = jax.tree.map(
+        lambda x: x.astype(jnp.dtype(cfg.dtype))
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
 
-        rules = _rules_for(self.mesh, self.worker_axes)
-        ccfg = CommitConfig(tau=self.tau, local_lr=local_lr,
-                            global_lr=self.global_lr,
-                            worker_axes=self.worker_axes)
-
-        def loss_fn(params, mb):
-            return lm.lm_loss(self.cfg, params, mb, rules=rules, remat=False)
-
-        if self.worker_axes:
-            wa = self.worker_axes
-            spec = P(None, wa if len(wa) > 1 else wa[0])
-            step = make_adsp_step(loss_fn, ccfg, self.mesh, batch_spec=spec)
-        else:
-            accum = make_accum_step(loss_fn, ccfg)
-
-            def step(state, mb, tau_arr):
-                return accum(state, mb, tau_arr[0])
-
-        self.step_fn = jax.jit(step)
-
-    # ----------------------------------------------------------- data
-    def _batch(self, step: int):
-        toks = lm_tokens(self.seed, step * 7919, self.tau * self.batch,
-                         self.seq, self.cfg.vocab_size)[:, :-1]
-        return {"tokens": jnp.asarray(
-            toks.reshape(self.tau, self.batch, self.seq), jnp.int32)}
-
-    # ------------------------------------------------- ADSP rate control
-    def tau_per_worker(self, c_target: int) -> jnp.ndarray:
-        """Rate rule: ΔC_i = C_target − c_i; τ_i ∝ v_i/ΔC_i, capped at tau."""
-        dc = np.maximum(c_target - self.commits, 1)
-        tau = np.minimum(
-            np.maximum((self.tau * self.virtual_speeds / dc).astype(int), 1),
-            self.tau,
-        )
-        return jnp.asarray(tau, jnp.int32)
-
-    # ------------------------------------------------- OnlineSystem
-    def commit_counts(self):
-        return list(self.commits)
-
-    def evaluate(self, c_target: int, probe_seconds: float):
-        """Probe window: `probe_seconds` is measured in commit steps here
-        (the scheduler treats them as opaque time units)."""
-        ts, ls = [], []
-        for _ in range(max(int(probe_seconds), 3)):
-            loss = self.run_commit_step(c_target)
-            ts.append(float(len(self.losses)))
-            ls.append(loss)
-        return ts, ls
-
-    def run_commit_step(self, c_target: int | None = None) -> float:
-        step_idx = len(self.losses)
-        tau_arr = self.tau_per_worker(c_target or (int(self.commits.max()) + 1))
-        self.state, loss = self.step_fn(self.state, self._batch(step_idx), tau_arr)
-        self.commits += 1  # every worker commits at the commit point
-        loss = float(loss)
-        self.losses.append((float(step_idx), loss))
-        return loss
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_workers = int(np.prod([sizes[a] for a in worker_axes])) if worker_axes else 1
+    speeds = speeds if speeds is not None else [1.0] * n_workers
+    profiles = [WorkerProfile(v=float(v), o=0.0) for v in speeds]
+    backend = MeshBackend(
+        task, mesh, worker_axes=worker_axes, tau=tau,
+        local_lr=local_lr, global_lr=global_lr, profiles=profiles,
+    )
+    policy = ADSP(
+        gamma=gamma_rounds, search=bool(search_every),
+        probe_seconds=3.0, max_probes=4,
+    )
+    engine = ClusterEngine(policy, backend)
+    return backend, engine, policy
 
 
 def main(argv=None):
@@ -157,6 +98,8 @@ def main(argv=None):
     p.add_argument("--tau", type=int, default=4)
     p.add_argument("--local-lr", type=float, default=0.02)
     p.add_argument("--global-lr", type=float, default=1.0)
+    p.add_argument("--gamma-rounds", type=float, default=8.0,
+                   help="check period Γ in commit rounds")
     p.add_argument("--search-every", type=int, default=0,
                    help="run Alg. 1 search every N commits (0 = off)")
     p.add_argument("--checkpoint", default="")
@@ -166,26 +109,28 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     n = len(jax.devices())
     mesh = jax.make_mesh((n, 1), ("data", "model"))
-    loop = TrainLoop(cfg, mesh, tau=args.tau, seq=args.seq, batch=args.batch,
-                     local_lr=args.local_lr, global_lr=args.global_lr,
-                     seed=args.seed)
+    backend, engine, policy = make_trainer(
+        cfg, mesh, tau=args.tau, seq=args.seq, batch=args.batch,
+        local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
+        gamma_rounds=args.gamma_rounds, search_every=args.search_every,
+    )
     print(f"# arch={cfg.name} params={cfg.total_params()/1e6:.1f}M "
-          f"workers={loop.n_workers} tau={args.tau}")
+          f"workers={len(backend.workers)} tau={args.tau}")
     t0 = time.time()
-    c_target = 1
-    with jax.set_mesh(mesh):
-        for step in range(args.steps):
-            if args.search_every and step and step % args.search_every == 0:
-                c_target, trace = decide_commit_rate(loop, probe_seconds=3,
-                                                     max_probes=4)
-                print(f"# search: candidates={trace.candidates} "
-                      f"rewards={[f'{r:.3g}' for r in trace.rewards]} -> {c_target}")
-            loss = loop.run_commit_step(c_target + step)
-            if step % 5 == 0 or step == args.steps - 1:
-                print(f"step {step:4d} loss {loss:.4f} "
-                      f"({(time.time()-t0)/(step+1):.2f}s/commit)")
+
+    def on_round(rnd, loss):
+        if (rnd - 1) % 5 == 0 or rnd == args.steps:
+            print(f"step {rnd - 1:4d} loss {loss:.4f} "
+                  f"({(time.time() - t0) / rnd:.2f}s/commit)")
+
+    with use_mesh(mesh):
+        backend.train(args.steps, check_period=policy.gamma,
+                      epoch_rounds=args.search_every, on_round=on_round)
+    for i, tr in enumerate(policy.traces):
+        print(f"# search {i}: candidates={tr.candidates} "
+              f"rewards={[f'{r:.3g}' for r in tr.rewards]} -> {tr.chosen}")
     if args.checkpoint:
-        save_train_state(args.checkpoint, loop.state, step=args.steps,
+        save_train_state(args.checkpoint, backend.state, step=args.steps,
                          extra={"arch": cfg.name})
         print(f"# saved {args.checkpoint}")
 

@@ -66,13 +66,15 @@ def annotate(x: jax.Array, logical: Sequence[str | None], rules: Mapping) -> jax
 
 
 def _axis_size(axis) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    from repro.core.jaxcompat import ambient_mesh_axes
+
+    sizes = ambient_mesh_axes()
+    if not sizes:
         return 1 << 30  # force "not divisible" → no constraint
     names = axis if isinstance(axis, tuple) else (axis,)
     n = 1
     for a in names:
-        n *= dict(zip(mesh.axis_names, mesh.axis_sizes)).get(a, 1 << 30)
+        n *= sizes.get(a, 1 << 30)
     return n
 
 

@@ -4,6 +4,7 @@ from .analysis import (
     roofline_terms,
     model_flops,
     RooflineReport,
+    xla_cost_dict,
 )
 
 __all__ = [
@@ -12,4 +13,5 @@ __all__ = [
     "roofline_terms",
     "model_flops",
     "RooflineReport",
+    "xla_cost_dict",
 ]

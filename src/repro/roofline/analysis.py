@@ -25,7 +25,40 @@ from __future__ import annotations
 import dataclasses
 import re
 
-__all__ = ["HW_V5E", "collective_bytes", "roofline_terms", "model_flops", "RooflineReport"]
+__all__ = [
+    "HW_V5E",
+    "collective_bytes",
+    "roofline_terms",
+    "model_flops",
+    "RooflineReport",
+    "xla_cost_dict",
+]
+
+
+def xla_cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` output to a flat dict.
+
+    XLA's API has drifted: older jax returns a single properties dict,
+    newer jax returns a per-program list of dicts (usually length 1).
+    Accepts either form — or the Compiled object itself — and merges
+    numeric entries by summation so multi-program modules stay additive.
+    """
+    if hasattr(cost, "cost_analysis"):
+        cost = cost.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    if isinstance(cost, (list, tuple)):
+        out: dict = {}
+        for d in cost:
+            for k, v in (d or {}).items():
+                if isinstance(v, (int, float)) and isinstance(out.get(k), (int, float)):
+                    out[k] += v
+                else:
+                    out[k] = v
+        return out
+    raise TypeError(f"unrecognized cost_analysis payload: {type(cost)!r}")
 
 HW_V5E = {
     "peak_flops": 197e12,  # bf16

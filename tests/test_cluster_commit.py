@@ -11,6 +11,7 @@ import pytest
 
 from repro.core.accum import make_accum_step
 from repro.core.commit import AdspState, CommitConfig, effective_momentum, make_adsp_step
+from repro.core.jaxcompat import use_mesh
 
 
 def quad_loss(params, batch):
@@ -38,7 +39,7 @@ def test_adsp_step_tau1_equals_sgd(problem):
     params, (x, y) = problem
     cfg = CommitConfig(tau=1, local_lr=0.1, global_lr=1.0, worker_axes=("data",))
     mesh = _mesh1()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step = make_adsp_step(quad_loss, cfg, mesh, batch_spec=jax.sharding.PartitionSpec(None, "data"))
         state = AdspState.create(params)
         mb = (x[None], y[None])  # tau leading dim
@@ -55,7 +56,7 @@ def test_adsp_step_masking(problem):
     params, (x, y) = problem
     cfg = CommitConfig(tau=3, local_lr=0.1, global_lr=1.0, worker_axes=("data",))
     mesh = _mesh1()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step = make_adsp_step(quad_loss, cfg, mesh, batch_spec=jax.sharding.PartitionSpec(None, "data"))
         mb = (jnp.stack([x, x, x]), jnp.stack([y, y, y]))
         s1, _ = step(AdspState.create(params), mb, jnp.asarray([1], jnp.int32))
@@ -74,7 +75,7 @@ def test_accum_step_matches_adsp_single_worker(problem):
     cfg = CommitConfig(tau=2, local_lr=0.05, global_lr=1.0, worker_axes=("data",))
     mesh = _mesh1()
     mb = (jnp.stack([x, x]), jnp.stack([y, y]))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         adsp = make_adsp_step(quad_loss, cfg, mesh, batch_spec=jax.sharding.PartitionSpec(None, "data"))
         s_a, loss_a = adsp(AdspState.create(params), mb, jnp.asarray([2], jnp.int32))
     accum = make_accum_step(quad_loss, cfg)
@@ -89,7 +90,7 @@ def test_adsp_step_converges(problem):
     params, (x, y) = problem
     cfg = CommitConfig(tau=4, local_lr=0.05, global_lr=1.0, worker_axes=("data",))
     mesh = _mesh1()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step = make_adsp_step(quad_loss, cfg, mesh, batch_spec=jax.sharding.PartitionSpec(None, "data"))
         state = AdspState.create(params)
         mb = (jnp.broadcast_to(x, (4, *x.shape)), jnp.broadcast_to(y, (4, *y.shape)))

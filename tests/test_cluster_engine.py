@@ -1,0 +1,328 @@
+"""The unified cluster runtime: one policy, two backends, elastic churn.
+
+Acceptance criteria of the control-plane redesign (DESIGN.md):
+  * the same event-driven ADSP policy converges on the virtual-clock
+    simulator backend AND on the single-host mesh backend;
+  * commit counts follow the rate rule ΔC_i = C_target − c_i on both;
+  * removing/adding a worker mid-run re-derives rates and still converges.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ADSP,
+    ArmTimer,
+    Block,
+    ChurnSchedule,
+    ClusterEngine,
+    Commit,
+    Resume,
+    SetRate,
+    join,
+    leave,
+    make_policy,
+    speed,
+)
+from repro.cluster.mesh_backend import MeshBackend, MeshTask
+from repro.core.theory import WorkerProfile
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import svm_task
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PROFILES = ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)
+
+
+def _rate_rule_holds(engine, policy):
+    """After a checkpoint dispatch, every worker's ΔC_i must equal the
+    Alg. 2 rate rule max(1, C_target − c_i)."""
+    engine.checkpoint()
+    for w in engine.workers:
+        assert w.delta_c_target == max(1, policy.c_target - w.commits), (
+            w.index, w.delta_c_target, policy.c_target, w.commits)
+
+
+# ---------------------------------------------------------------------------
+# Protocol-level: policies are pure event → command functions
+# ---------------------------------------------------------------------------
+
+
+def test_adsp_checkpoint_emits_rate_commands():
+    sim = Simulator(svm_task(3), PROFILES,
+                    make_policy("adsp", search=False, gamma=20.0),
+                    SimConfig(max_seconds=100.0, base_batch=32, gamma=20.0))
+    policy = sim.policy
+    from repro.cluster.protocol import Checkpoint
+
+    cmds = policy.handle(sim.engine, Checkpoint(now=sim.now))
+    rates = [c for c in cmds if isinstance(c, SetRate)]
+    timers = [c for c in cmds if isinstance(c, ArmTimer)]
+    assert {c.worker for c in rates} == {w.index for w in sim.workers}
+    assert len(timers) == len(sim.workers)
+    for c in rates:
+        w = sim.engine.worker(c.worker)
+        assert c.delta_c == max(1, policy.c_target - w.commits)
+
+
+def test_ssp_gating_emits_block_and_resume():
+    sim = Simulator(svm_task(3), PROFILES, make_policy("ssp", s=2),
+                    SimConfig(max_seconds=60.0, base_batch=32, gamma=20.0))
+    sim.run(40.0)
+    from repro.cluster.protocol import StepDone
+
+    fast = sim.workers[0]
+    cmds = sim.policy.handle(sim.engine, StepDone(fast.index))
+    kinds = {type(c) for c in cmds}
+    assert Commit in kinds  # SSP commits every step
+    assert Block in kinds or Resume in kinds  # gating always recomputed
+
+
+# ---------------------------------------------------------------------------
+# Backend 1: virtual-clock simulator
+# ---------------------------------------------------------------------------
+
+
+def test_adsp_sim_backend_converges_and_follows_rate_rule():
+    policy = make_policy("adsp", search=False, gamma=20.0)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                    target_loss=0.02, max_seconds=600.0)
+    sim = Simulator(svm_task(3), PROFILES, policy, cfg)
+    res = sim.train()
+    assert res.converged
+    assert max(res.commit_counts) - min(res.commit_counts) <= 2
+    _rate_rule_holds(sim.engine, policy)
+
+
+# ---------------------------------------------------------------------------
+# Backend 2: single-host mesh (the real fused commit step)
+# ---------------------------------------------------------------------------
+
+
+def _quad_mesh_task(tau: int, batch: int = 64) -> MeshTask:
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(4, 1)).astype(np.float32)
+
+    def loss_fn(params, mb):
+        x, y = mb
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    def make_microbatches(round_idx, tau_, n_workers):
+        r = np.random.default_rng(round_idx + 1)
+        x = r.normal(size=(tau_, batch, 4)).astype(np.float32)
+        y = x @ w_true
+        return jnp.asarray(x), jnp.asarray(y)
+
+    return MeshTask(init_params={"w": jnp.zeros((4, 1), jnp.float32)},
+                    loss_fn=loss_fn, make_microbatches=make_microbatches,
+                    name="quad")
+
+
+def test_adsp_mesh_backend_converges_and_follows_rate_rule():
+    mesh = jax.make_mesh((1,), ("data",))
+    task = _quad_mesh_task(tau=4)
+    backend = MeshBackend(task, mesh, worker_axes=("data",), tau=4,
+                          local_lr=0.1, global_lr=1.0,
+                          batch_spec=jax.sharding.PartitionSpec(None, "data"))
+    policy = ADSP(search=False, gamma=8.0)
+    engine = ClusterEngine(policy, backend)
+    backend.train(rounds=30, check_period=policy.gamma)
+    losses = [l for _, l in backend.losses]
+    assert losses[-1] < 0.05 * losses[0]  # converged
+    assert all(w.commits == 30 for w in backend.workers)
+    _rate_rule_holds(engine, policy)
+
+
+def test_same_policy_object_drives_both_backends():
+    """One ADSP instance steers the simulator, then (state carried over)
+    the mesh backend — the control plane is backend-agnostic."""
+    policy = make_policy("adsp", search=False, gamma=20.0)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                    target_loss=0.02, max_seconds=400.0)
+    sim = Simulator(svm_task(3), PROFILES, policy, cfg)
+    res = sim.train()
+    assert res.converged
+
+    mesh = jax.make_mesh((1,), ("data",))
+    backend = MeshBackend(_quad_mesh_task(tau=4), mesh, worker_axes=("data",),
+                          tau=4, local_lr=0.1, global_lr=1.0,
+                          batch_spec=jax.sharding.PartitionSpec(None, "data"))
+    engine = ClusterEngine(policy, backend)
+    backend.train(rounds=20, check_period=policy.gamma)
+    losses = [l for _, l in backend.losses]
+    assert losses[-1] < 0.1 * losses[0]
+    _rate_rule_holds(engine, policy)
+
+
+@pytest.mark.slow
+def test_mesh_backend_multiworker_subprocess(tmp_path):
+    """4 fake host devices, heterogeneous virtual speeds: the fused commit
+    step + engine keep commit counts equal while τ_i tracks v_i."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json, sys
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.cluster import ADSP, ClusterEngine
+        from repro.cluster.mesh_backend import MeshBackend, MeshTask
+        from repro.core.theory import WorkerProfile
+
+        rng = np.random.default_rng(0)
+        w_true = rng.normal(size=(4, 1)).astype(np.float32)
+
+        def loss_fn(params, mb):
+            x, y = mb
+            return jnp.mean((x @ params["w"] - y) ** 2)
+
+        def make_microbatches(round_idx, tau, n_workers):
+            r = np.random.default_rng(round_idx + 1)
+            x = r.normal(size=(tau, 64, 4)).astype(np.float32)
+            return jnp.asarray(x), jnp.asarray(x @ w_true)
+
+        task = MeshTask({"w": jnp.zeros((4, 1), jnp.float32)}, loss_fn,
+                        make_microbatches)
+        mesh = jax.make_mesh((4,), ("data",))
+        speeds = [2.0, 1.0, 1.0, 0.5]
+        backend = MeshBackend(task, mesh, worker_axes=("data",), tau=8,
+                              local_lr=0.05, global_lr=1.0,
+                              profiles=[WorkerProfile(v=v, o=0.0) for v in speeds],
+                              batch_spec=jax.sharding.PartitionSpec(None, "data"))
+        policy = ADSP(search=False, gamma=8.0)
+        engine = ClusterEngine(policy, backend)
+        backend.train(rounds=25, check_period=policy.gamma)
+        engine.checkpoint()
+        taus = backend.tau_per_worker()
+        out = {
+            "losses": [l for _, l in backend.losses],
+            "commits": [w.commits for w in backend.workers],
+            "rate_rule_ok": all(
+                w.delta_c_target == max(1, policy.c_target - w.commits)
+                for w in backend.workers),
+            "taus": taus.tolist(),
+        }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env, cwd=ROOT,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    import json
+
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["losses"][-1] < 0.05 * out["losses"][0]
+    assert len(set(out["commits"])) == 1  # fused round: counts stay equal
+    assert out["rate_rule_ok"]
+    # τ_i tracks v_i: fastest worker runs ≥ the slowest worker's local steps
+    assert out["taus"][0] >= out["taus"][3]
+    assert max(out["taus"]) <= 8
+
+
+# ---------------------------------------------------------------------------
+# Elastic churn (the §6 adaptability claim, previously untestable here)
+# ---------------------------------------------------------------------------
+
+
+def test_churn_leave_join_speed_still_converges():
+    policy = make_policy("adsp", search=False, gamma=20.0)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                    target_loss=0.02, max_seconds=900.0)
+    churn = ChurnSchedule([
+        leave(8.0, worker=2),                        # the slow worker dies
+        join(12.0, WorkerProfile(v=1.0, o=0.2)),     # a fresh one arrives
+        speed(16.0, worker=0, v=0.5),                # worker 0 throttled
+    ])
+    sim = Simulator(svm_task(3), PROFILES, policy, cfg, churn=churn)
+    res = sim.train()
+    assert res.converged, res
+    assert sim.num_workers == 3  # 3 − 1 + 1
+    ids = {w.index for w in sim.workers}
+    assert 2 not in ids and 3 in ids  # stable ids: joiner got a fresh id
+    # the engine re-derived rates over the *current* fleet
+    _rate_rule_holds(sim.engine, policy)
+    # control-plane counts (incl. ramp-in credit) stay equalized
+    cc = [w.commits for w in sim.workers]
+    assert max(cc) - min(cc) <= 3, cc
+    # reported counts subtract the joiner's credit: only real commits
+    for w in sim.workers:
+        reported = res.commit_counts[[x.index for x in sim.workers].index(w.index)]
+        assert reported == w.commits - w.commit_credit
+
+
+def test_churn_speed_shift_rebalances_commit_intervals():
+    """Halving a worker's speed must not break commit-count equality —
+    ADSP compensates through the timers (more wall time per step, same
+    commit cadence)."""
+    policy = make_policy("adsp", search=False, gamma=20.0)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                    max_seconds=300.0)
+    churn = ChurnSchedule([speed(100.0, worker=0, v=0.25)])
+    sim = Simulator(svm_task(3), PROFILES, policy, cfg, churn=churn)
+    sim.run(280.0)
+    cc = [w.commits for w in sim.workers]
+    assert max(cc) - min(cc) <= 2, cc
+    assert sim.workers[0].profile.v == 0.25
+
+
+def test_churn_join_does_not_stall_ssp_veterans():
+    """A late joiner starts with the minimum peer step count as credit, so
+    SSP's staleness bound doesn't park every veteran behind it."""
+    policy = make_policy("ssp", s=4)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                    max_seconds=120.0)
+    churn = ChurnSchedule([join(30.0, WorkerProfile(v=1.0, o=0.2))])
+    sim = Simulator(svm_task(3), PROFILES, policy, cfg, churn=churn)
+    sim.run(60.0)
+    steps_at_join_era = {w.index: w.steps for w in sim.workers}
+    sim.run(40.0)
+    veterans = [w for w in sim.workers if w.index < 3]
+    assert all(w.steps > steps_at_join_era[w.index] for w in veterans), (
+        "veterans stalled behind the joiner")
+    joiner = sim.engine.worker(3)
+    assert joiner.step_credit > 0
+    assert joiner.steps - joiner.step_credit > 0  # and it really trained
+
+
+def test_churn_late_join_commit_credit_reporting():
+    """A joiner arriving after the fleet has committed gets nonzero commit
+    credit for the rate rule, but SimResult reports only real commits."""
+    policy = make_policy("adsp", search=False, gamma=20.0)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                    max_seconds=300.0)
+    churn = ChurnSchedule([join(90.0, WorkerProfile(v=1.0, o=0.2))])
+    sim = Simulator(svm_task(3), PROFILES, policy, cfg, churn=churn)
+    sim.run(200.0)
+    res = sim.result()
+    joiner = sim.engine.worker(3)
+    assert joiner.commit_credit > 0
+    reported = dict(zip([w.index for w in sim.workers], res.commit_counts))
+    assert reported[3] == joiner.commits - joiner.commit_credit
+    assert sum(res.commit_counts) <= sim.total_commits
+
+
+def test_churn_determinism():
+    def run():
+        policy = make_policy("adsp", search=False, gamma=20.0)
+        cfg = SimConfig(gamma=20.0, epoch_seconds=80.0, base_batch=32,
+                        max_seconds=200.0)
+        churn = ChurnSchedule([
+            leave(40.0, worker=1),
+            join(80.0, WorkerProfile(v=2.0, o=0.1)),
+        ])
+        sim = Simulator(svm_task(3), PROFILES, policy, cfg, churn=churn)
+        sim.run(180.0)
+        return sim.result()
+
+    r1, r2 = run(), run()
+    np.testing.assert_array_equal(r1.losses, r2.losses)
+    assert r1.total_steps == r2.total_steps
+    assert r1.commit_counts == r2.commit_counts

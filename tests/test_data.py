@@ -1,6 +1,8 @@
 """Data pipeline: determinism, shapes, worker-shard disjointness."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.synthetic import (

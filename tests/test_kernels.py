@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

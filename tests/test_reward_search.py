@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.reward import fit_loss_curve, reward, reward_from_fit
