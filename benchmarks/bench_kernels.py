@@ -61,4 +61,39 @@ def main(full: bool = False) -> list[str]:
     d0 = jax.tree.map(jnp.zeros_like, tree)
     t = _time(lambda *x: ops.ps_apply_tree(*x, 0.1, 0.9)[0], tree, d0, g)
     rows.append(row("kernels/fused_ps_apply", t, 1.0, elems=1 << 16))
+    rows.extend(_bench_train_step_backends())
     return rows
+
+
+def _bench_train_step_backends() -> list[str]:
+    """The unified train step end-to-end, reference vs Pallas-fused rule
+    backend (the fused kernels on their actual hot path, not only as
+    isolated ops). Interpret mode on CPU: structure cost only."""
+    from repro.core.jaxcompat import use_mesh
+    from repro.ps import CommitConfig, UpdateRules, make_train_step
+
+    def quad_loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    rng = np.random.default_rng(0)
+    dim = 64
+    x = jnp.asarray(rng.normal(size=(32, dim)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(32, 1)), jnp.float32)
+    mbs = (jnp.stack([x, x]), jnp.stack([y, y]))
+    params = {"w": jnp.asarray(rng.normal(size=(dim, 1)) * 0.1, jnp.float32)}
+    cfg = CommitConfig(tau=2, local_lr=0.05, worker_axes=("data",))
+    mesh = jax.make_mesh((1,), ("data",))
+    tau = jnp.asarray([2], jnp.int32)
+
+    out = []
+    with use_mesh(mesh):
+        for backend in ("reference", "fused"):
+            step_fn = make_train_step(
+                quad_loss, cfg, UpdateRules(backend=backend), mesh=mesh)
+            state = step_fn.init(params)
+            step = jax.jit(step_fn)
+            t = _time(lambda s: step(s, mbs, tau)[1], state)
+            out.append(row(f"ps/train_step_sgd_{backend}", t, 1.0,
+                           tau=2, dim=dim))
+    return out

@@ -2,12 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--full`` enables the larger
 paper-scale sweeps (more workers / more grid points); default sizes are
-CPU-budget versions with identical structure.
+CPU-budget versions with identical structure. ``--json PATH`` also
+writes the rows as structured records (name / us_per_call / derived
+key-values) so the perf trajectory can be tracked as ``BENCH_*.json``
+artifacts and diffed across commits.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 
@@ -23,14 +28,35 @@ MODULES = [
 ]
 
 
+def _parse_row(module: str, line: str) -> dict:
+    """'name,us_per_call,k=v;k=v' → structured record."""
+    name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+    rec = {"module": module, "name": name, "derived": {}}
+    try:
+        rec["us_per_call"] = float(us)
+    except ValueError:
+        rec["us_per_call"] = None
+    for kv in derived.split(";"):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            try:
+                rec["derived"][k] = float(v)
+            except ValueError:
+                rec["derived"][k] = v
+    return rec
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", nargs="*", help="subset of modules to run")
     p.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="also write structured records to PATH")
     args = p.parse_args(argv)
 
     mods = args.only if args.only else MODULES
     print("name,us_per_call,derived")
+    records: list[dict] = []
     failures = 0
     for name in mods:
         t0 = time.time()
@@ -39,6 +65,7 @@ def main(argv=None) -> None:
             rows = mod.main(full=args.full)
             for r in rows:
                 print(r, flush=True)
+                records.append(_parse_row(name, r))
             print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
                   file=sys.stderr, flush=True)
         except Exception as e:  # keep the harness running
@@ -46,7 +73,21 @@ def main(argv=None) -> None:
 
             traceback.print_exc()
             print(f"{name}/HARNESS_ERROR,0,error={type(e).__name__}")
+            records.append({"module": name, "name": f"{name}/HARNESS_ERROR",
+                            "us_per_call": None,
+                            "derived": {"error": type(e).__name__}})
             failures += 1
+    if args.json:
+        out = pathlib.Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps({
+            "generated_unix": time.time(),
+            "modules": list(mods),
+            "full": args.full,
+            "failures": failures,
+            "rows": records,
+        }, indent=1))
+        print(f"# wrote {out} ({len(records)} rows)", file=sys.stderr, flush=True)
     if failures:
         sys.exit(1)
 

@@ -3,11 +3,14 @@ JAX mesh (DESIGN.md §3–§4).
 
 One *commit round* = every worker runs its τ_i local microsteps (fused,
 no cross-worker collective — the no-waiting property) and then all commit
-at once via the ``core.commit.make_adsp_step`` all-reduce. Heterogeneity
-is realized through the τ_i vector: the engine's SetRate commands carry
-ΔC_i from the policy's rate rule, and the backend converts them to local
-step counts τ_i = v_i·(Γ/ΔC_i − O_i), bounded to [1, cfg.tau] (the
-compiled step bound).
+at once via the ``repro.ps.make_train_step`` all-reduce. The update rules
+are pluggable (``rules=UpdateRules(...)``): any registered LocalRule
+(sgd / sgd_momentum / adamw) at the worker, any CommitRule
+(momentum_delta / plain_average) at the PS, reference or Pallas-fused
+backend. Heterogeneity is realized through the τ_i vector: the engine's
+SetRate commands carry ΔC_i from the policy's rate rule, and the backend
+converts them to local step counts τ_i = v_i·(Γ/ΔC_i − O_i), bounded to
+[1, cfg.tau] (the compiled step bound).
 
 Clock: ``now`` advances ``round_seconds`` per commit round, so the same
 policy object (same Γ, same probe windows) drives this backend and the
@@ -32,9 +35,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import theory
-from repro.core.accum import make_accum_step
-from repro.core.commit import AdspState, CommitConfig, make_adsp_step
 from repro.core.theory import WorkerProfile
+from repro.ps import CommitConfig, UpdateRules, make_train_step
 
 from .engine import ClusterEngine
 from .protocol import WorkerView
@@ -84,6 +86,8 @@ class MeshBackend:
         profiles: Sequence[WorkerProfile] | None = None,
         round_seconds: float = 1.0,
         batch_spec: P | None = None,
+        rules: UpdateRules | None = None,
+        explicit_momentum: float = 0.0,
     ):
         self.task = task
         self.mesh = mesh
@@ -106,19 +110,15 @@ class MeshBackend:
             tau=tau, local_lr=local_lr, global_lr=global_lr,
             worker_axes=worker_axes, commit_dtype=commit_dtype,
         )
-        if worker_axes:
-            spec = batch_spec if batch_spec is not None else P(
-                None, worker_axes if len(worker_axes) > 1 else worker_axes[0]
-            )
-            step = make_adsp_step(task.loss_fn, ccfg, mesh, batch_spec=spec)
-        else:
-            accum = make_accum_step(task.loss_fn, ccfg)
-
-            def step(state, microbatches, tau_per_worker):
-                return accum(state, microbatches, tau_per_worker[0])
-
+        step = make_train_step(
+            task.loss_fn, ccfg, rules,
+            mesh=mesh if worker_axes else None,
+            batch_spec=batch_spec,
+            explicit_momentum=explicit_momentum,
+        )
+        self.rules = step.rules
         self.step_fn = jax.jit(step)
-        self.state = AdspState.create(task.init_params)
+        self.state = step.init(task.init_params)
 
     # ------------------------------------------------------------ backend API
     def bind(self, engine: ClusterEngine) -> None:

@@ -1,58 +1,37 @@
-"""ADSP 'accum' granularity: τ-microstep gradient accumulation without a
-manual worker axis (single-pod runs of replica-heavy archs).
+"""DEPRECATED shim — the 'accum' granularity (τ-step gradient
+accumulation with no worker axis) is now the no-worker-axes path of
+``repro.ps.make_train_step``; see that module for the semantics.
 
-The whole mesh acts as ONE ADSP worker: weights are fully sharded
-(FSDP × TP via GSPMD auto mode), each microstep computes a full-batch
-gradient (collectives inside), and the τ-step accumulation plays the role
-of the worker's local-update buffer — the commit is the state update at
-the end. Cross-step collective *frequency* is unchanged within the pod
-(the pod is internally homogeneous — there is no waiting to eliminate);
-ADSP's cross-worker saving appears only once a worker axis exists
-(granularity 'data'/'pod', core.commit).
+``make_accum_step`` survives as a thin deprecation shim with the seed's
+exact rules (sgd + momentum-delta, reference backend). The returned step
+accepts the legacy scalar ``tau_active`` as well as the unified
+``tau_per_worker`` int32[1] vector.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
-
-from .commit import AdspState, CommitConfig
+from repro.ps import CommitConfig, UpdateRules, make_train_step
 
 __all__ = ["make_accum_step"]
 
 
 def make_accum_step(loss_fn: Callable, cfg: CommitConfig, explicit_momentum: float = 0.0,
                     remat: bool = False) -> Callable:
-    grad_fn = jax.value_and_grad(loss_fn)
-    if remat:
-        grad_fn = jax.remat(grad_fn)
-
-    def accum_step(state: AdspState, microbatches, tau_active):
-        zeros = jax.tree.map(jnp.zeros_like, state.params)
-
-        def body(carry, xs):
-            p, u = carry
-            mb, idx = xs
-            live = (idx < tau_active).astype(jnp.float32)
-            loss, g = grad_fn(p, mb)
-            p = jax.tree.map(
-                lambda a, b: (a - cfg.local_lr * live * b).astype(a.dtype), p, g
-            )
-            u = jax.tree.map(
-                lambda a, b: (a + cfg.local_lr * live * b).astype(a.dtype), u, g
-            )
-            return (p, u), loss * live
-
-        idxs = jnp.arange(cfg.tau, dtype=jnp.int32)
-        (_, u), losses = jax.lax.scan(body, (state.params, zeros), (microbatches, idxs))
-        loss = jnp.sum(losses) / jnp.maximum(tau_active.astype(jnp.float32), 1.0)
-        delta = jax.tree.map(
-            lambda d, uu: (explicit_momentum * d - cfg.global_lr * uu).astype(d.dtype),
-            state.prev_delta, u,
-        )
-        params = jax.tree.map(jnp.add, state.params, delta)
-        return AdspState(params, delta, state.step + 1), loss
-
-    return accum_step
+    warnings.warn(
+        "repro.core.accum.make_accum_step is deprecated; use "
+        "repro.ps.make_train_step(..., granularity='accum')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    cfg = dataclasses.replace(cfg, worker_axes=())
+    return make_train_step(
+        loss_fn,
+        cfg,
+        UpdateRules(local="sgd", commit="momentum_delta", backend="reference"),
+        explicit_momentum=explicit_momentum,
+        remat=remat,
+    )

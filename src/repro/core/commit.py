@@ -1,43 +1,31 @@
-"""Cluster-side ADSP commit layer (the paper's technique on a TPU mesh).
+"""DEPRECATED shim — the cluster-side ADSP commit layer moved to
+``repro.ps`` (the pluggable update-rule API, DESIGN.md §9).
 
-Mapping (see DESIGN.md §3): one *worker* = one index along the mesh's
-worker axes (``("data",)`` single-pod, ``("pod", "data")`` multi-pod) — a
-model-parallel group that holds a full replica of the parameters (sharded
-over ``model`` by GSPMD). Workers run ``tau`` local SGD microsteps on
-their own microbatches *without any cross-worker collective* (the
-no-waiting property: a worker's local steps are independent), then all
-commit at once: the accumulated updates are ``pmean``-ed over the worker
-axes and applied with the global learning rate — the PS of Alg. 2
-realized as an all-reduce.
-
-Heterogeneity: workers may be assigned different local-step counts
-``tau_i ≤ tau`` (the ADSP rate rule τ_i = v_i·(Γ/ΔC_i − O_i) normalizes
-commit *counts*, letting fast workers do more local work). Microsteps
-beyond a worker's τ_i are masked (zero update, zero accumulation), which
-keeps the SPMD program uniform; on a real heterogeneous deployment the
-masked steps are where the fast workers' extra capacity goes.
-
-Implicit momentum (Theorem 1): accumulation-induced staleness acts as
-extra momentum μ_implicit = 1 − p. ``effective_momentum`` lets the caller
-keep total momentum at a target by subtracting μ_implicit from the
-explicit PS momentum — the Fig. 3(c) tuning knob, exposed as a
-first-class config.
-
-Everything here is jit/shard_map-compatible pure JAX; no host callbacks.
+``make_adsp_step``/``make_local_update_fn`` survive here as thin
+deprecation shims over ``repro.ps.make_train_step`` with the seed's
+exact rules (sgd local updates + Eqn. 1 momentum-delta commit, reference
+backend) so existing callers keep bit-identical behaviour.
+``CommitConfig``, ``AdspState`` and ``effective_momentum`` are
+re-exported from their new home.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, Sequence
+import warnings
+from typing import Callable
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from . import theory
-from .jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
+from repro.ps import (
+    AdspState,
+    CommitConfig,
+    UpdateRules,
+    effective_momentum,
+    get_local_rule,
+    make_local_update,
+    make_train_step,
+)
+from .jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN
 
 __all__ = [
     "CommitConfig",
@@ -47,111 +35,31 @@ __all__ = [
     "AdspState",
 ]
 
-Pytree = object
+
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"repro.core.commit.{old} is deprecated; use repro.ps.make_train_step "
+        "(one factory for every granularity and rule backend)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
-@dataclasses.dataclass(frozen=True)
-class CommitConfig:
-    """ADSP commit behaviour for the cluster runtime.
+def make_local_update_fn(loss_fn: Callable, cfg: CommitConfig, remat: bool = False):
+    """Deprecated: the τ-microstep scan with the seed's sgd local rule.
 
-    tau: max local microsteps between commits (the fastest worker's τ).
-    local_lr: η′ applied at each local microstep.
-    global_lr: η applied by the PS-equivalent all-reduce commit.
-    momentum: target total momentum; if correct_implicit_momentum, the
-      explicit part is reduced by μ_implicit from Eqn. (3).
-    gamma / c_target: check-period and commit-count target used to derive
-      μ_implicit (and, in the trainer, per-worker τ_i).
-    worker_axes: mesh axes enumerating workers (manual in shard_map).
+    Returns ``local_update(params, microbatches, tau_i) -> (U, mean_loss)``.
     """
-
-    tau: int = 4
-    local_lr: float = 0.05
-    global_lr: float = 1.0
-    # dtype of the commit all-reduce. f32 default: numerically safer for
-    # accumulated updates, and XLA:CPU's AllReducePromotion pass crashes on
-    # bf16 all-reduce (dry-run container). 'bfloat16' halves the collective
-    # bytes — a measured hillclimb option for real TPU runs.
-    commit_dtype: str = "float32"
-    momentum: float = 0.9
-    correct_implicit_momentum: bool = True
-    gamma: float = 60.0
-    c_target: int = 1
-    worker_axes: tuple[str, ...] = ("data",)
-
-    def __post_init__(self):
-        if self.tau < 1:
-            raise ValueError("tau must be >= 1")
-
-
-def effective_momentum(
-    cfg: CommitConfig, speeds: Sequence[float], delta_c: Sequence[float]
-) -> float:
-    """Explicit momentum to apply at the PS so that explicit + implicit ≈
-    cfg.momentum (Fig. 3: best total momentum ⇒ fastest convergence)."""
-    if not cfg.correct_implicit_momentum:
-        return cfg.momentum
-    mu_imp = theory.mu_implicit(delta_c, speeds, cfg.gamma)
-    return max(0.0, cfg.momentum - mu_imp)
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class AdspState:
-    """Training state carried across commits."""
-
-    params: Pytree
-    prev_delta: Pytree  # W_t − W_{t−1} for the PS momentum term
-    step: jax.Array  # global commit counter
-
-    @classmethod
-    def create(cls, params: Pytree) -> "AdspState":
-        zeros = jax.tree.map(jnp.zeros_like, params)
-        return cls(params=params, prev_delta=zeros, step=jnp.zeros((), jnp.int32))
-
-
-def make_local_update_fn(
-    loss_fn: Callable[[Pytree, Pytree], jax.Array],
-    cfg: CommitConfig,
-    remat: bool = False,
-) -> Callable:
-    """Build the τ-microstep local-update scan: the per-worker inner loop.
-
-    Returns ``local_update(params, microbatches, tau_i) ->
-    (accumulated_update U, mean_loss)`` where microbatches is a pytree of
-    arrays with leading dim cfg.tau and tau_i is the worker's active step
-    count (int32 scalar; steps ≥ tau_i are masked).
-
-    Note U accumulates η′·g (the paper's accumulative update) and the
-    *local* params advance by the same quantity each live step.
-    """
-    grad_fn = jax.value_and_grad(loss_fn)
-    if remat:
-        grad_fn = jax.remat(grad_fn)
+    _deprecated("make_local_update_fn")
+    rule = get_local_rule("sgd", cfg, backend="reference")
+    run = make_local_update(
+        loss_fn, cfg, rule, remat=remat,
+        unroll=True if SCAN_IN_PARTIAL_AUTO_BROKEN else 1,
+    )
 
     def local_update(params, microbatches, tau_i):
-        zeros = jax.tree.map(jnp.zeros_like, params)
-
-        def body(carry, xs):
-            p, u = carry
-            mb, idx = xs
-            live = (idx < tau_i).astype(jnp.float32)
-            loss, g = grad_fn(p, mb)
-            # masked local SGD step + accumulation (η′·g)
-            p = jax.tree.map(
-                lambda a, b: (a - cfg.local_lr * live * b).astype(a.dtype), p, g
-            )
-            u = jax.tree.map(
-                lambda a, b: (a + cfg.local_lr * live * b).astype(a.dtype), u, g
-            )
-            return (p, u), loss * live
-
-        idxs = jnp.arange(cfg.tau, dtype=jnp.int32)
-        (_, u), losses = jax.lax.scan(
-            body, (params, zeros), (microbatches, idxs),
-            unroll=True if SCAN_IN_PARTIAL_AUTO_BROKEN else 1,
-        )
-        denom = jnp.maximum(tau_i.astype(jnp.float32), 1.0)
-        return u, jnp.sum(losses) / denom
+        u, _, loss = run(params, (), microbatches, tau_i)
+        return u, loss
 
     return local_update
 
@@ -159,63 +67,19 @@ def make_local_update_fn(
 def make_adsp_step(
     loss_fn: Callable,
     cfg: CommitConfig,
-    mesh: jax.sharding.Mesh,
+    mesh,
     batch_spec: P = P(("data",)),
     explicit_momentum: float = 0.0,
     remat: bool = False,
 ) -> Callable:
-    """The full ADSP training step on a mesh.
-
-    adsp_step(state: AdspState, microbatches, tau_per_worker) -> (state, loss)
-
-    * microbatches: pytree, arrays shaped (tau, global_batch, ...) with the
-      batch dim sharded over the worker axes per ``batch_spec``.
-    * tau_per_worker: int32[num_workers] — ADSP rate rule output; worker w
-      runs tau_per_worker[w] live microsteps (≤ cfg.tau).
-
-    Manual over cfg.worker_axes; the ``model`` axis (and any other mesh
-    axis) stays in GSPMD auto mode, so tensor-parallel sharding inside
-    loss_fn keeps working untouched.
-    """
-    local_update = make_local_update_fn(loss_fn, cfg, remat=remat)
-    axes = cfg.worker_axes
-
-    def _sharded_body(params, prev_delta, step, microbatches, tau_per_worker):
-        # tau_per_worker arrives sharded over the worker axes: this shard
-        # holds exactly the one entry belonging to this worker (no
-        # axis_index/partition-id computation, which XLA:CPU SPMD rejects).
-        tau_i = tau_per_worker[0]
-        u, loss = local_update(params, microbatches, tau_i)
-        # ---- the commit: PS apply as all-reduce over workers ----
-        cd = jnp.dtype(cfg.commit_dtype)
-        u = jax.tree.map(lambda x: x.astype(cd), u)
-        u = jax.lax.pmean(u, axes)
-        loss = jax.lax.pmean(loss, axes)
-        delta = jax.tree.map(
-            lambda d, uu: (explicit_momentum * d - cfg.global_lr * uu).astype(d.dtype),
-            prev_delta,
-            u,
-        )
-        params = jax.tree.map(jnp.add, params, delta)
-        return params, delta, step + 1, loss
-
-    # params/opt-state replicated across worker axes (manual) — model-axis
-    # sharding handled by auto GSPMD outside the manual set.
-    rep = P()
-    tau_spec = P(axes if len(axes) > 1 else axes[0])
-    sharded = _compat_shard_map(
-        _sharded_body,
-        mesh,
-        in_specs=(rep, rep, rep, batch_spec, tau_spec),
-        out_specs=(rep, rep, rep, rep),
-        axis_names=set(axes),
-        check=False,
+    """Deprecated: the worker-axes ADSP step with the seed's rules."""
+    _deprecated("make_adsp_step")
+    return make_train_step(
+        loss_fn,
+        cfg,
+        UpdateRules(local="sgd", commit="momentum_delta", backend="reference"),
+        mesh=mesh,
+        batch_spec=batch_spec,
+        explicit_momentum=explicit_momentum,
+        remat=remat,
     )
-
-    def adsp_step(state: AdspState, microbatches, tau_per_worker):
-        params, delta, step, loss = sharded(
-            state.params, state.prev_delta, state.step, microbatches, tau_per_worker
-        )
-        return AdspState(params, delta, step), loss
-
-    return adsp_step

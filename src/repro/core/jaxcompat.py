@@ -23,7 +23,7 @@ __all__ = ["use_mesh", "shard_map", "ambient_mesh_axes", "SCAN_IN_PARTIAL_AUTO_B
 # On the 0.4.x series, XLA:CPU's SPMD partitioner aborts (Check failed:
 # sharding.IsManualSubgroup()) when a while-loop (lax.scan) sits inside a
 # partially-manual shard_map. The τ-microstep scan is static-length, so
-# affected versions fully unroll it instead (core.commit).
+# affected versions fully unroll it instead (repro.ps.train_step).
 SCAN_IN_PARTIAL_AUTO_BROKEN = not hasattr(jax, "shard_map")
 
 

@@ -20,9 +20,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["accumulate", "ps_apply", "BLOCK"]
+__all__ = ["accumulate", "ps_apply", "BLOCK", "block_for"]
 
 BLOCK = (8, 1024)  # sublane × lane-aligned VMEM tile (f32: 32 KiB)
+
+
+def block_for(dtype) -> tuple[int, int]:
+    """VMEM tile for a dtype: the minimum sublane count doubles for
+    2-byte dtypes (bf16 tiling is (16, 128)-aligned on TPU)."""
+    return (16, 1024) if jnp.dtype(dtype).itemsize == 2 else BLOCK
 
 
 # Hyper-params ride along as a (1, n) operand broadcast to every block —
@@ -33,19 +39,20 @@ def _accum_kernel(u_ref, g_ref, lr_ref, o_ref):
 
 
 def accumulate(u: jax.Array, g: jax.Array, local_lr, *, interpret: bool = True):
+    blk = block_for(u.dtype)
     r, c = u.shape
-    grid = (r // BLOCK[0], c // BLOCK[1])
+    grid = (r // blk[0], c // blk[1])
     lr = jnp.full((1, 1), local_lr, u.dtype)
     return pl.pallas_call(
         _accum_kernel,
         out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec(blk, lambda i, j: (i, j)),
         interpret=interpret,
     )(u, g, lr)
 
@@ -60,8 +67,9 @@ def _ps_apply_kernel(w_ref, d_ref, u_ref, hp_ref, w_out, d_out):
 
 def ps_apply(w, prev_delta, u, global_lr, momentum, *, interpret: bool = True):
     """Returns (new_w, new_delta); all (R, C) aligned like `accumulate`."""
+    blk = block_for(w.dtype)
     r, c = w.shape
-    grid = (r // BLOCK[0], c // BLOCK[1])
+    grid = (r // blk[0], c // blk[1])
     hp = jnp.asarray([[momentum, global_lr]], jnp.float32)
     return pl.pallas_call(
         _ps_apply_kernel,
@@ -71,14 +79,14 @@ def ps_apply(w, prev_delta, u, global_lr, momentum, *, interpret: bool = True):
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
             pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
-            pl.BlockSpec(BLOCK, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
+            pl.BlockSpec(blk, lambda i, j: (i, j)),
         ),
         interpret=interpret,
     )(w, prev_delta, u, hp)

@@ -10,6 +10,7 @@ hardware (performance).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -25,13 +26,38 @@ __all__ = [
     "rwkv6_scan",
     "accumulate_tree",
     "ps_apply_tree",
+    "default_interpret",
 ]
+
+_TRUTHY = frozenset(("1", "true", "yes", "on"))
+_FALSY = frozenset(("0", "false", "no", "off"))
+
+
+@functools.lru_cache(maxsize=None)
+def default_interpret() -> bool:
+    """Interpret-mode default for every Pallas wrapper (and the rule
+    registry in ``repro.ps``): the REPRO_PALLAS_INTERPRET env var wins
+    when set (1/true/yes/on or 0/false/no/off), else interpret unless a
+    TPU backend is present. Cached — the backend probe and getenv run
+    once per process, not once per wrapper call (call
+    ``default_interpret.cache_clear()`` after changing the env var)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    if env:
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={env!r}: want one of "
+            f"{sorted(_TRUTHY)} / {sorted(_FALSY)}"
+        )
+    return jax.default_backend() != "tpu"
 
 
 def _interp(interpret):
     if interpret is not None:
         return interpret
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
 def _pad_to(x, axis, mult):
@@ -111,12 +137,14 @@ def rwkv6_scan(r, k, v, w, bonus, *, block_s=256, interpret=None):
 # ---------------------------------------------------------------------------
 
 def _as_tiles(x):
-    """Flatten to (R, 1024·k) aligned 2-D; returns (tiled, orig_size)."""
+    """Flatten to block-aligned 2-D (dtype-dependent sublane count);
+    returns (tiled, orig_size)."""
+    blk = _fc.block_for(x.dtype)
     flat = x.reshape(-1)
     n = flat.shape[0]
-    cols = _fc.BLOCK[1]
+    cols = blk[1]
     rows = -(-n // cols)
-    rows_pad = (-rows) % _fc.BLOCK[0]
+    rows_pad = (-rows) % blk[0]
     total = (rows + rows_pad) * cols
     flat = jnp.pad(flat, (0, total - n))
     return flat.reshape(rows + rows_pad, cols), n

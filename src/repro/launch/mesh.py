@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.ps.train_step import worker_axes_for  # canonical home moved to ps
+
 __all__ = ["make_production_mesh", "worker_axes_for", "WORKER_AXES"]
 
 WORKER_AXES = {"single": ("data",), "multi": ("pod", "data")}
@@ -30,22 +32,3 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     data = min(data, n)
     model = min(model, n // data)
     return jax.make_mesh((data, max(model, 1)), ("data", "model"))
-
-
-def worker_axes_for(granularity: str, mesh: jax.sharding.Mesh) -> tuple[str, ...]:
-    """ADSP worker axes for an arch's granularity on a given mesh.
-
-    granularity 'data'  → every (pod×)data index is a worker.
-    granularity 'pod'   → each pod is one worker (replica memory too large
-                          for a 16-chip model group); on a single-pod mesh
-                          this degenerates to 'accum' (no worker axis).
-    granularity 'accum' → no worker axis: τ-step gradient accumulation.
-    """
-    has_pod = "pod" in mesh.axis_names
-    if granularity == "data":
-        return ("pod", "data") if has_pod else ("data",)
-    if granularity == "pod":
-        return ("pod",) if has_pod else ()
-    if granularity == "accum":
-        return ()
-    raise ValueError(f"unknown adsp granularity {granularity!r}")

@@ -16,11 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.accum import make_accum_step
-from repro.core.commit import AdspState, CommitConfig, make_adsp_step
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.models.layers import default_rules
+from repro.ps import AdspState, CommitConfig, UpdateRules, make_train_step
 from .mesh import worker_axes_for
 from . import specs as S
 
@@ -73,6 +72,10 @@ def build_train_step(
     granularity: str | None = None,
     commit_dtype: str = "float32",
     attn_block: int = 512,
+    local_rule: str = "sgd",
+    commit_rule: str = "momentum_delta",
+    rule_backend: str | None = None,
+    local_hp: dict | None = None,
 ) -> StepBundle:
     spec = S.SHAPES[shape]
     granularity = granularity or cfg.adsp_granularity
@@ -83,6 +86,10 @@ def build_train_step(
         tau=tau, local_lr=local_lr, global_lr=global_lr,
         worker_axes=worker_axes, commit_dtype=commit_dtype,
     )
+    update_rules = UpdateRules(
+        local=local_rule, commit=commit_rule, backend=rule_backend,
+        local_hp=local_hp or {},
+    )
 
     def loss_fn(params, mb):
         # remat=True ⇒ jax.checkpoint around each scanned layer-group body:
@@ -92,33 +99,38 @@ def build_train_step(
         return lm.lm_loss(cfg, params, mb, rules=rules, attn_impl=attn_impl,
                           remat=remat, attn_block=attn_block)
 
+    batch_spec_manual = None
     if worker_axes:
         batch_spec_manual = jax.tree.map(
             lambda _: P(None, worker_axes if len(worker_axes) > 1 else worker_axes[0]),
             S.abstract_train_batch(cfg, spec, tau),
         )
-        step = make_adsp_step(
-            loss_fn, ccfg, mesh,
-            batch_spec=batch_spec_manual,
-            explicit_momentum=explicit_momentum,
-            remat=False,  # remat lives inside lm_loss (per layer group)
-        )
-    else:
-        accum = make_accum_step(loss_fn, ccfg, explicit_momentum, remat=False)
-
-        def step(state, microbatches, tau_per_worker):
-            return accum(state, microbatches, tau_per_worker[0])
+    step = make_train_step(
+        loss_fn, ccfg, update_rules,
+        mesh=mesh,
+        granularity=granularity,
+        batch_spec=batch_spec_manual,
+        explicit_momentum=explicit_momentum,
+        remat=False,  # remat lives inside lm_loss (per layer group)
+    )
 
     # --- abstract args + shardings ---------------------------------------
     pshard = S.param_shardings(cfg, mesh, granularity)
     ap = S.abstract_params(cfg)
-    state = AdspState(
-        params=ap,
-        prev_delta=ap,
-        step=jax.ShapeDtypeStruct((), jnp.int32),
-    )
+    state = jax.eval_shape(step.init, ap)
     rep = NamedSharding(mesh, P())
-    state_shard = AdspState(params=pshard, prev_delta=pshard, step=rep)
+    if jax.tree.structure(state.commit_state) == jax.tree.structure(ap):
+        cshard = jax.tree.map(lambda _, s: s, state.commit_state, pshard)
+    else:
+        cshard = jax.tree.map(lambda _: rep, state.commit_state)
+    # local optimizer state: one slot per worker along the leading dim
+    # (inner dims replicated — a model-axis refinement is future work)
+    wshard = NamedSharding(
+        mesh, P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
+    ) if worker_axes else rep
+    lshard = jax.tree.map(lambda _: wshard, state.local_state)
+    state_shard = AdspState(params=pshard, commit_state=cshard,
+                            local_state=lshard, step=rep)
     batch = S.abstract_train_batch(cfg, spec, tau)
     bshard = S.batch_shardings(cfg, mesh, batch, batch_dim=1)
     tau_arr = jax.ShapeDtypeStruct((n_workers,), jnp.int32)
@@ -131,7 +143,9 @@ def build_train_step(
         out_shardings=(state_shard, rep),
         donate=(0,),  # AdspState updated in place
         static=dict(tau=tau, worker_axes=worker_axes, granularity=granularity,
-                    n_workers=n_workers),
+                    n_workers=n_workers,
+                    local_rule=step.rules[0].name, commit_rule=step.rules[1].name,
+                    rule_backend=step.rules[1].backend),
     )
 
 

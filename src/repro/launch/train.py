@@ -32,6 +32,7 @@ from repro.core.theory import WorkerProfile
 from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.ps import UpdateRules, add_rule_args, rules_from_args
 
 __all__ = ["build_mesh_task", "make_trainer", "main"]
 
@@ -59,7 +60,9 @@ def build_mesh_task(cfg: ModelConfig, rules, *, seq: int, batch: int,
 def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
                  local_lr: float, global_lr: float, seed: int = 0,
                  gamma_rounds: float = 8.0, search_every: int = 0,
-                 speeds=None) -> tuple[MeshBackend, ClusterEngine, ADSP]:
+                 speeds=None,
+                 update_rules: UpdateRules | None = None,
+                 ) -> tuple[MeshBackend, ClusterEngine, ADSP]:
     """Build the (backend, engine, policy) triple for an arch on a mesh."""
     from repro.launch.mesh import worker_axes_for
     from repro.launch.steps import _rules_for
@@ -79,6 +82,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
     backend = MeshBackend(
         task, mesh, worker_axes=worker_axes, tau=tau,
         local_lr=local_lr, global_lr=global_lr, profiles=profiles,
+        rules=update_rules,
     )
     policy = ADSP(
         gamma=gamma_rounds, search=bool(search_every),
@@ -104,18 +108,23 @@ def main(argv=None):
                    help="run Alg. 1 search every N commits (0 = off)")
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
+    add_rule_args(p)
     args = p.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     n = len(jax.devices())
     mesh = jax.make_mesh((n, 1), ("data", "model"))
+    rules = rules_from_args(args)
     backend, engine, policy = make_trainer(
         cfg, mesh, tau=args.tau, seq=args.seq, batch=args.batch,
         local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
         gamma_rounds=args.gamma_rounds, search_every=args.search_every,
+        update_rules=rules,
     )
+    lr_rule, cr_rule = backend.rules
     print(f"# arch={cfg.name} params={cfg.total_params()/1e6:.1f}M "
-          f"workers={len(backend.workers)} tau={args.tau}")
+          f"workers={len(backend.workers)} tau={args.tau} "
+          f"rules={lr_rule.name}+{cr_rule.name}[{cr_rule.backend}]")
     t0 = time.time()
 
     def on_round(rnd, loss):

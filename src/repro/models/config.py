@@ -79,7 +79,7 @@ class ModelConfig:
     frontend: str = ""  # "" | "audio" | "vision"
     num_prefix_embeddings: int = 0  # vision patch tokens prepended
     # --- distribution --------------------------------------------------------
-    adsp_granularity: str = "data"  # data | pod | accum (see core.commit)
+    adsp_granularity: str = "data"  # data | pod | accum (see repro.ps, DESIGN.md §3)
     # --- misc ----------------------------------------------------------------
     norm_eps: float = 1e-6
     tie_embeddings: bool = False

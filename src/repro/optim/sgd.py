@@ -3,8 +3,11 @@
     W_{t+1} = W_t − η ∇ℓ(W_t) + μ (W_t − W_{t−1})
 
 State carries the previous delta (W_t − W_{t−1}) — the same buffer the
-ADSP PS uses, so core.commit and this optimizer share semantics. Plus the
-paper's exponentially-decaying local learning rate schedule.
+ADSP PS uses (the momentum_delta CommitRule's commit_state in
+``repro.ps``), so the commit layer and this optimizer share semantics.
+Plus the paper's exponentially-decaying local learning rate schedule.
+The worker-side LocalRule adaptations of these optimizers live in
+``repro.ps.local``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,55 @@
+"""Pluggable update-rule API for the ADSP data plane (DESIGN.md §9).
+
+Public surface:
+
+  * ``make_train_step`` — one factory for every granularity
+    (accum/data/pod) and rule backend (reference / Pallas-fused);
+  * ``LocalRule`` / ``CommitRule`` + the registry
+    (``get_local_rule``/``get_commit_rule``/``register_*``);
+  * ``UpdateRules`` — the (local, commit, backend) bundle callers pass;
+  * ``CommitConfig`` / ``AdspState`` / ``effective_momentum`` — commit
+    behaviour and rule-owned training state.
+"""
+
+from .cli import add_rule_args, rules_from_args
+from .rules import (
+    CommitRule,
+    LocalRule,
+    UpdateRules,
+    commit_rule_names,
+    get_commit_rule,
+    get_local_rule,
+    local_rule_names,
+    register_commit_rule,
+    register_local_rule,
+    resolve_backend,
+    rule_backends,
+)
+from .state import AdspState, CommitConfig, effective_momentum
+from .train_step import make_local_update, make_train_step, worker_axes_for
+
+# importing these registers the built-in rules
+from . import commit_rules as _commit_rules  # noqa: F401
+from . import local as _local  # noqa: F401
+
+__all__ = [
+    "AdspState",
+    "CommitConfig",
+    "add_rule_args",
+    "rules_from_args",
+    "CommitRule",
+    "LocalRule",
+    "UpdateRules",
+    "commit_rule_names",
+    "effective_momentum",
+    "get_commit_rule",
+    "get_local_rule",
+    "local_rule_names",
+    "make_local_update",
+    "make_train_step",
+    "register_commit_rule",
+    "register_local_rule",
+    "resolve_backend",
+    "rule_backends",
+    "worker_axes_for",
+]

@@ -1,0 +1,32 @@
+"""Shared argparse plumbing for rule selection — one definition of the
+``--local-rule``/``--commit-rule``/``--rule-backend``/``--local-opt-lr``
+flags for every entry point (``repro.launch.train``, examples), so new
+rules or hyperparameters land everywhere at once."""
+
+from __future__ import annotations
+
+import argparse
+
+from .rules import UpdateRules
+
+__all__ = ["add_rule_args", "rules_from_args"]
+
+
+def add_rule_args(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument("--local-rule", default="sgd",
+                        help="worker optimizer: sgd | sgd_momentum | adamw")
+    parser.add_argument("--commit-rule", default="momentum_delta",
+                        help="PS apply: momentum_delta | plain_average")
+    parser.add_argument("--rule-backend", default=None,
+                        help="reference | fused | auto (fused on TPU)")
+    parser.add_argument("--local-opt-lr", type=float, default=None,
+                        help="local-rule lr override (adamw defaults to 3e-4)")
+
+
+def rules_from_args(args: argparse.Namespace) -> UpdateRules:
+    return UpdateRules(
+        local=args.local_rule,
+        commit=args.commit_rule,
+        backend=args.rule_backend,
+        local_hp={} if args.local_opt_lr is None else {"lr": args.local_opt_lr},
+    )

@@ -1,0 +1,78 @@
+"""Registered CommitRules: the PS apply over the worker axes.
+
+``momentum_delta`` is the paper's Eqn. 1 PS (explicit momentum over the
+previous global delta); ``plain_average`` is the FedAvg-style variant
+(W ← W − η·ū, no PS momentum state). Fused backends are single-HBM-pass
+Pallas kernels (``kernels.fused_commit`` via ``kernels.ops``); reference
+backends are the bit-for-bit contract with the seed factories.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .rules import CommitRule, register_commit_rule
+
+__all__ = []  # rules are reached through the registry
+
+
+@register_commit_rule("momentum_delta", "reference")
+def _momentum_delta_reference(ccfg, *, interpret=None) -> CommitRule:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def apply(params, cstate, u, momentum):
+        # exact seed arithmetic: δ ← μ·δ_prev − η·ū ; W ← W + δ
+        delta = jax.tree.map(
+            lambda d, uu: (momentum * d - ccfg.global_lr * uu).astype(d.dtype),
+            cstate, u,
+        )
+        new_p = jax.tree.map(jnp.add, params, delta)
+        return new_p, delta
+
+    return CommitRule("momentum_delta", "reference", init, apply)
+
+
+@register_commit_rule("momentum_delta", "fused")
+def _momentum_delta_fused(ccfg, *, interpret=None) -> CommitRule:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def apply(params, cstate, u, momentum):
+        return ops.ps_apply_tree(
+            params, cstate, u, ccfg.global_lr, momentum, interpret=interpret
+        )
+
+    return CommitRule("momentum_delta", "fused", init, apply)
+
+
+@register_commit_rule("plain_average", "reference")
+def _plain_average_reference(ccfg, *, interpret=None) -> CommitRule:
+    def init(params):
+        return ()
+
+    def apply(params, cstate, u, momentum):
+        del momentum  # stateless average has no PS momentum term
+        new_p = jax.tree.map(
+            lambda p, uu: (p - ccfg.global_lr * uu).astype(p.dtype), params, u
+        )
+        return new_p, cstate
+
+    return CommitRule("plain_average", "reference", init, apply)
+
+
+@register_commit_rule("plain_average", "fused")
+def _plain_average_fused(ccfg, *, interpret=None) -> CommitRule:
+    def init(params):
+        return ()
+
+    def apply(params, cstate, u, momentum):
+        del momentum
+        # W ← W + (−η)·ū is exactly the fused accumulate pass
+        new_p = ops.accumulate_tree(params, u, -ccfg.global_lr, interpret=interpret)
+        return new_p, cstate
+
+    return CommitRule("plain_average", "fused", init, apply)

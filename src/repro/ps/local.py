@@ -1,0 +1,124 @@
+"""Registered LocalRules: the per-microstep worker optimizers.
+
+Adapted from ``repro.optim`` (the (init, update) optimizers the seed
+used only in examples): here each optimizer is wrapped into the
+LocalRule contract — masked by ``live`` so the τ_i rate-rule mask keeps
+the SPMD program uniform, and accumulating into U the *negated* local
+parameter delta, which is exactly what the PS commit consumes
+(U ← U − ΔW_local; for plain sgd this is the paper's U ← U + η′·g).
+
+Reference backends are the bit-for-bit contract with the seed factories;
+the fused sgd backend routes both HBM passes (param advance + U
+accumulation) through the Pallas ``accumulate`` kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.optim.adamw import adamw as _optim_adamw
+
+from .rules import LocalRule, mask_tree, register_local_rule
+
+__all__ = []  # rules are reached through the registry
+
+
+# --------------------------------------------------------------------------
+# sgd — the paper's worker-side rule (stateless)
+# --------------------------------------------------------------------------
+
+@register_local_rule("sgd", "reference")
+def _sgd_reference(ccfg, *, interpret=None, lr=None) -> LocalRule:
+    eta = ccfg.local_lr if lr is None else lr
+
+    def init(params):
+        return ()
+
+    def update(params, u, grads, state, live):
+        # exact seed arithmetic: p −= η′·live·g ; U += η′·live·g
+        new_p = jax.tree.map(
+            lambda a, g: (a - eta * live * g).astype(a.dtype), params, grads
+        )
+        new_u = jax.tree.map(
+            lambda a, g: (a + eta * live * g).astype(a.dtype), u, grads
+        )
+        return new_p, new_u, state
+
+    return LocalRule("sgd", "reference", init, update)
+
+
+@register_local_rule("sgd", "fused")
+def _sgd_fused(ccfg, *, interpret=None, lr=None) -> LocalRule:
+    eta = ccfg.local_lr if lr is None else lr
+
+    def init(params):
+        return ()
+
+    def update(params, u, grads, state, live):
+        lr_live = eta * live
+        new_p = ops.accumulate_tree(params, grads, -lr_live, interpret=interpret)
+        new_u = ops.accumulate_tree(u, grads, lr_live, interpret=interpret)
+        return new_p, new_u, state
+
+    return LocalRule("sgd", "fused", init, update)
+
+
+# --------------------------------------------------------------------------
+# sgd_momentum — Eqn. 1 applied at the worker (heavy-ball local steps)
+# --------------------------------------------------------------------------
+
+@register_local_rule("sgd_momentum", "reference")
+def _sgd_momentum_reference(ccfg, *, interpret=None, lr=None, momentum=0.9) -> LocalRule:
+    eta = ccfg.local_lr if lr is None else lr
+
+    def init(params):
+        return {"prev_delta": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, u, grads, state, live):
+        delta = jax.tree.map(
+            lambda d, g: (momentum * d - eta * g).astype(d.dtype),
+            state["prev_delta"], grads,
+        )
+        new_p = jax.tree.map(
+            lambda a, d: (a + live * d).astype(a.dtype), params, delta
+        )
+        new_u = jax.tree.map(
+            lambda a, d: (a - live * d).astype(a.dtype), u, delta
+        )
+        prev = mask_tree(live, delta, state["prev_delta"])
+        return new_p, new_u, {"prev_delta": prev}
+
+    return LocalRule("sgd_momentum", "reference", init, update)
+
+
+# --------------------------------------------------------------------------
+# adamw — adaptive optimizer at the worker; the commit still ships ΔW
+# --------------------------------------------------------------------------
+
+@register_local_rule("adamw", "reference")
+def _adamw_reference(ccfg, *, interpret=None, lr=3e-4, b1=0.9, b2=0.95,
+                     eps=1e-8, weight_decay=0.01) -> LocalRule:
+    # lr deliberately does NOT default from ccfg.local_lr: sgd-scale rates
+    # (0.05) diverge under Adam preconditioning.
+    opt_init, opt_update = _optim_adamw(
+        lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay
+    )
+
+    def init(params):
+        return opt_init(params)
+
+    def update(params, u, grads, state, live):
+        cand_p, cand_s = opt_update(grads, state, params)
+        on = live > 0
+        new_p = jax.tree.map(lambda p, n: jnp.where(on, n, p), params, cand_p)
+        new_u = jax.tree.map(
+            lambda a, p, n: (a + jnp.where(on, (p - n).astype(a.dtype),
+                                           jnp.zeros((), a.dtype))).astype(a.dtype),
+            u, params, cand_p,
+        )
+        new_s = mask_tree(live, cand_s, state)
+        return new_p, new_u, new_s
+
+    return LocalRule("adamw", "reference", init, update)

@@ -1,0 +1,114 @@
+"""Commit configuration and the training state carried across commits.
+
+``CommitConfig`` is the ADSP commit behaviour knob set (moved here from
+``repro.core.commit``, which re-exports it for compatibility).
+
+``AdspState`` generalizes the seed's (params, prev_delta, step) triple:
+optimizer state is *rule-owned* —
+
+  * ``commit_state``: owned by the CommitRule. For the paper's
+    momentum-delta rule (Eqn. 1) this is the previous global delta
+    W_t − W_{t−1}; for plain averaging it is empty. This subsumes the
+    ``optim.SGDState.prev_delta`` buffer the seed duplicated.
+  * ``local_state``: owned by the LocalRule, one slot per ADSP worker
+    (leading dim ``n_workers``, sharded over the worker axes by the
+    train step so each worker's adaptive-optimizer moments survive
+    across commit rounds). Stateless rules (plain sgd) carry ``()``.
+
+``state.prev_delta`` is kept as a read-only alias of ``commit_state``
+for the momentum-delta rule's users.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import theory
+
+__all__ = ["CommitConfig", "AdspState", "effective_momentum"]
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitConfig:
+    """ADSP commit behaviour for the cluster runtime.
+
+    tau: max local microsteps between commits (the fastest worker's τ).
+    local_lr: η′ applied at each local microstep (sgd-family rules).
+    global_lr: η applied by the PS-equivalent all-reduce commit.
+    momentum: target total momentum; if correct_implicit_momentum, the
+      explicit part is reduced by μ_implicit from Eqn. (3).
+    gamma / c_target: check-period and commit-count target used to derive
+      μ_implicit (and, in the trainer, per-worker τ_i).
+    worker_axes: mesh axes enumerating workers (manual in shard_map).
+    """
+
+    tau: int = 4
+    local_lr: float = 0.05
+    global_lr: float = 1.0
+    # dtype of the commit all-reduce. f32 default: numerically safer for
+    # accumulated updates, and XLA:CPU's AllReducePromotion pass crashes on
+    # bf16 all-reduce (dry-run container). 'bfloat16' halves the collective
+    # bytes — a measured hillclimb option for real TPU runs.
+    commit_dtype: str = "float32"
+    momentum: float = 0.9
+    correct_implicit_momentum: bool = True
+    gamma: float = 60.0
+    c_target: int = 1
+    worker_axes: tuple[str, ...] = ("data",)
+
+    def __post_init__(self):
+        if self.tau < 1:
+            raise ValueError("tau must be >= 1")
+
+
+def effective_momentum(
+    cfg: CommitConfig, speeds: Sequence[float], delta_c: Sequence[float]
+) -> float:
+    """Explicit momentum to apply at the PS so that explicit + implicit ≈
+    cfg.momentum (Fig. 3: best total momentum ⇒ fastest convergence)."""
+    if not cfg.correct_implicit_momentum:
+        return cfg.momentum
+    mu_imp = theory.mu_implicit(delta_c, speeds, cfg.gamma)
+    return max(0.0, cfg.momentum - mu_imp)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdspState:
+    """Training state carried across commits (see module docstring)."""
+
+    params: Pytree
+    commit_state: Pytree
+    local_state: Pytree
+    step: jax.Array  # global commit counter
+
+    @property
+    def prev_delta(self) -> Pytree:
+        """Legacy alias: the momentum-delta CommitRule's state is the
+        previous global delta."""
+        return self.commit_state
+
+    @classmethod
+    def create(cls, params: Pytree, rules=None, *, n_workers: int = 1) -> "AdspState":
+        """``rules`` is a resolved (LocalRule, CommitRule) pair (e.g.
+        ``UpdateRules(...).resolve(ccfg)`` or ``make_train_step(...).rules``).
+        None keeps the seed default: momentum-delta commit state (zeros)
+        and a stateless local rule."""
+        if rules is None:
+            commit_state: Pytree = jax.tree.map(jnp.zeros_like, params)
+            local_state: Pytree = ()
+        else:
+            local_rule, commit_rule = rules
+            commit_state = commit_rule.init(params)
+            local_state = jax.tree.map(
+                lambda x: jnp.repeat(x[None], n_workers, axis=0),
+                local_rule.init(params),
+            )
+        return cls(params=params, commit_state=commit_state,
+                   local_state=local_state, step=jnp.zeros((), jnp.int32))

@@ -1,0 +1,263 @@
+"""One train-step factory for every ADSP granularity and rule backend.
+
+``make_train_step`` replaces the seed's twice-written local-update/commit
+math (``core.commit.make_adsp_step`` + ``core.accum.make_accum_step``,
+both now thin shims over this): one τ-masked microstep scan feeds one
+CommitRule apply, with the worker axes deciding whether a shard_map +
+pmean wraps it.
+
+Mapping (DESIGN.md §3): one ADSP *worker* = one index along the mesh's
+worker axes — a model-parallel group holding a full replica of the
+parameters (sharded over ``model`` by GSPMD). Workers run ``tau_i``
+local microsteps on their own microbatches with no cross-worker
+collective (the no-waiting property), then all commit at once: the
+accumulated updates are ``pmean``-ed over the worker axes and applied by
+the CommitRule — the PS of Alg. 2 realized as an all-reduce. Microsteps
+beyond a worker's τ_i are masked (zero update, zero accumulation, frozen
+local-optimizer state), keeping the SPMD program uniform.
+
+Granularities (selected per arch, see DESIGN.md §3):
+
+  * ``data`` / ``pod`` — worker axes exist: shard_map + pmean commit;
+  * ``accum`` — no worker axis: the whole mesh is one worker doing
+    τ-step accumulation; the commit is a plain state update. The
+    ``commit_dtype`` cast only happens on the worker-axes path (it
+    shapes the all-reduce; there is no collective to shape in accum).
+
+Everything here is jit/shard_map-compatible pure JAX (the fused backends
+lower to Pallas, interpret-mode off-TPU); no host callbacks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
+
+from .rules import LocalRule, UpdateRules
+from .state import AdspState, CommitConfig
+
+__all__ = ["make_train_step", "make_local_update", "worker_axes_for"]
+
+Pytree = object
+
+
+def worker_axes_for(granularity: str, mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """ADSP worker axes for an arch's granularity on a given mesh.
+
+    granularity 'data'  → every (pod×)data index is a worker.
+    granularity 'pod'   → each pod is one worker (replica memory too large
+                          for a 16-chip model group); on a single-pod mesh
+                          this degenerates to 'accum' (no worker axis).
+    granularity 'accum' → no worker axis: τ-step gradient accumulation.
+    """
+    has_pod = "pod" in mesh.axis_names
+    if granularity == "data":
+        return ("pod", "data") if has_pod else ("data",)
+    if granularity == "pod":
+        return ("pod",) if has_pod else ()
+    if granularity == "accum":
+        return ()
+    raise ValueError(f"unknown adsp granularity {granularity!r}")
+
+
+def _axes_spec(axes: tuple[str, ...]) -> P:
+    """PartitionSpec sharding a leading dim over all worker axes."""
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def make_local_update(
+    loss_fn: Callable,
+    ccfg: CommitConfig,
+    local_rule: LocalRule,
+    *,
+    remat: bool = False,
+    unroll=1,
+) -> Callable:
+    """The τ-microstep local-update scan: the per-worker inner loop.
+
+    Returns ``run(params, local_state, microbatches, tau_i) ->
+    (U, new_local_state, mean_loss)`` where microbatches is a pytree of
+    arrays with leading dim ccfg.tau and tau_i is the worker's active
+    step count (int32 scalar; steps ≥ tau_i are masked). U is the
+    accumulated update the PS consumes (−Σ ΔW_local; for plain sgd the
+    paper's Σ η′·g) and the *local* params advance rule-wise each live
+    step (then are discarded — the commit applies U to the pre-scan
+    params).
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+    if remat:
+        grad_fn = jax.remat(grad_fn)
+
+    def run(params, local_state, microbatches, tau_i):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+
+        def body(carry, xs):
+            p, u, ls = carry
+            mb, idx = xs
+            live = (idx < tau_i).astype(jnp.float32)
+            loss, g = grad_fn(p, mb)
+            p, u, ls = local_rule.update(p, u, g, ls, live)
+            return (p, u, ls), loss * live
+
+        idxs = jnp.arange(ccfg.tau, dtype=jnp.int32)
+        (_, u, ls), losses = jax.lax.scan(
+            body, (params, zeros, local_state), (microbatches, idxs),
+            unroll=unroll,
+        )
+        denom = jnp.maximum(tau_i.astype(jnp.float32), 1.0)
+        return u, ls, jnp.sum(losses) / denom
+
+    return run
+
+
+def make_train_step(
+    loss_fn: Callable,
+    ccfg: CommitConfig,
+    rules: UpdateRules | tuple | None = None,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    granularity: str | None = None,
+    batch_spec=None,
+    explicit_momentum: float = 0.0,
+    remat: bool = False,
+) -> Callable:
+    """Build the full train step for any granularity and rule backend.
+
+    train_step(state: AdspState, microbatches, tau_per_worker)
+        -> (state, loss)
+
+    * microbatches: pytree, arrays shaped (tau, global_batch, ...); on the
+      worker-axes path the batch dim is sharded over the worker axes per
+      ``batch_spec`` (default ``P(None, <worker axes>)``).
+    * tau_per_worker: int32[num_workers] — ADSP rate rule output; worker w
+      runs tau_per_worker[w] live microsteps (≤ ccfg.tau). The accum path
+      also accepts a bare scalar.
+
+    ``rules`` is an UpdateRules bundle (default: sgd + momentum_delta on
+    the auto backend), a resolved (LocalRule, CommitRule) pair, or None.
+    ``granularity`` + ``mesh`` derive the worker axes (overriding
+    ``ccfg.worker_axes``); with granularity None the config's axes are
+    used as-is. The worker-axes path is manual (shard_map) over exactly
+    those axes; the ``model`` axis (and any other mesh axis) stays in
+    GSPMD auto mode, so tensor-parallel sharding inside loss_fn keeps
+    working untouched.
+
+    The returned callable carries ``.init(params) -> AdspState`` (state
+    with rule-owned slots), ``.rules`` (the resolved pair), ``.config``
+    (the effective CommitConfig), and ``.n_workers``.
+    """
+    if granularity is not None:
+        if mesh is None and granularity != "accum":
+            raise ValueError(
+                f"make_train_step: granularity {granularity!r} needs a mesh "
+                "to derive the worker axes (only 'accum' runs mesh-free)"
+            )
+        axes = worker_axes_for(granularity, mesh) if mesh is not None else ()
+        ccfg = dataclasses.replace(ccfg, worker_axes=axes)
+    axes = tuple(ccfg.worker_axes)
+    if axes and mesh is None:
+        raise ValueError("make_train_step: mesh is required when worker axes are set")
+
+    if isinstance(rules, (tuple, list)):
+        local_rule, commit_rule = rules
+    else:
+        bundle = rules if rules is not None else UpdateRules()
+        local_rule, commit_rule = bundle.resolve(ccfg)
+
+    if axes:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_workers = int(np.prod([sizes[a] for a in axes]))
+    else:
+        n_workers = 1
+
+    def _validate_state(state: AdspState) -> None:
+        # Catch a seed-era AdspState.create(params) (momentum-delta-shaped,
+        # stateless local rule) paired with other rules early, instead of a
+        # tree-structure error deep inside the scan. Runs at trace time.
+        p_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), state.params
+        )
+        for label, rule, got in (
+            ("commit_state", commit_rule, state.commit_state),
+            ("local_state", local_rule, state.local_state),
+        ):
+            want = jax.tree.structure(jax.eval_shape(rule.init, p_abs))
+            if jax.tree.structure(got) != want:
+                raise ValueError(
+                    f"AdspState.{label} does not match the {rule.name!r} rule's "
+                    "state; build states with make_train_step(...).init(params)"
+                )
+
+    if axes:
+        # On the 0.4.x series XLA aborts on a lax.scan inside a partially
+        # manual shard_map; the scan is static-length, so unroll there.
+        unroll = True if SCAN_IN_PARTIAL_AUTO_BROKEN else 1
+        run = make_local_update(loss_fn, ccfg, local_rule, remat=remat, unroll=unroll)
+        if batch_spec is None:
+            batch_spec = P(None, axes if len(axes) > 1 else axes[0])
+
+        def _sharded_body(params, cstate, lstate, step, microbatches, tau_per_worker):
+            # tau_per_worker arrives sharded over the worker axes: this
+            # shard holds exactly the one entry belonging to this worker.
+            tau_i = tau_per_worker[0]
+            ls0 = jax.tree.map(lambda x: x[0], lstate)
+            u, ls1, loss = run(params, ls0, microbatches, tau_i)
+            # ---- the commit: PS apply as all-reduce over workers ----
+            cd = jnp.dtype(ccfg.commit_dtype)
+            u = jax.tree.map(lambda x: x.astype(cd), u)
+            u = jax.lax.pmean(u, axes)
+            loss = jax.lax.pmean(loss, axes)
+            new_p, new_c = commit_rule.apply(params, cstate, u, explicit_momentum)
+            lstate_out = jax.tree.map(lambda x: x[None], ls1)
+            return new_p, new_c, lstate_out, step + 1, loss
+
+        # params/commit-state replicated across worker axes (manual);
+        # local state sharded one slot per worker; model-axis sharding is
+        # handled by auto GSPMD outside the manual set.
+        rep = P()
+        wspec = _axes_spec(axes)
+        sharded = _compat_shard_map(
+            _sharded_body,
+            mesh,
+            in_specs=(rep, rep, wspec, rep, batch_spec, wspec),
+            out_specs=(rep, rep, wspec, rep, rep),
+            axis_names=set(axes),
+            check=False,
+        )
+
+        def train_step(state: AdspState, microbatches, tau_per_worker):
+            _validate_state(state)
+            p, c, l, s, loss = sharded(
+                state.params, state.commit_state, state.local_state,
+                state.step, microbatches, tau_per_worker,
+            )
+            return AdspState(p, c, l, s), loss
+
+    else:
+        run = make_local_update(loss_fn, ccfg, local_rule, remat=remat, unroll=1)
+
+        def train_step(state: AdspState, microbatches, tau_per_worker):
+            _validate_state(state)
+            tau_i = jnp.reshape(jnp.asarray(tau_per_worker, jnp.int32), (-1,))[0]
+            ls0 = jax.tree.map(lambda x: x[0], state.local_state)
+            u, ls1, loss = run(state.params, ls0, microbatches, tau_i)
+            new_p, new_c = commit_rule.apply(
+                state.params, state.commit_state, u, explicit_momentum
+            )
+            lstate_out = jax.tree.map(lambda x: x[None], ls1)
+            return AdspState(new_p, new_c, lstate_out, state.step + 1), loss
+
+    train_step.init = lambda params: AdspState.create(
+        params, rules=(local_rule, commit_rule), n_workers=n_workers
+    )
+    train_step.rules = (local_rule, commit_rule)
+    train_step.config = ccfg
+    train_step.n_workers = n_workers
+    return train_step

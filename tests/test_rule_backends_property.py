@@ -1,0 +1,86 @@
+"""Hypothesis sweeps: fused-vs-reference rule-backend parity over ragged
+shapes and bfloat16/float32 params (fixed-case versions run without
+hypothesis in test_update_rules.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.ps import CommitConfig, get_commit_rule, get_local_rule
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-6
+
+
+@given(
+    n=st.integers(1, 40_000),
+    m=st.integers(1, 9),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    momentum=st.sampled_from([0.0, 0.5, 0.9]),
+)
+@settings(max_examples=20, deadline=None)
+def test_ps_apply_backends_agree(n, m, dtype, momentum):
+    """The fused momentum_delta commit rule matches the reference within
+    dtype tolerance on ragged pytrees."""
+    rng = np.random.default_rng(n * 13 + m)
+    cfg = CommitConfig(tau=1, global_lr=0.3, worker_axes=())
+    w = {
+        "a": jnp.asarray(rng.normal(size=(n,)), dtype),
+        "b": {"c": jnp.asarray(rng.normal(size=(m, 5)), dtype)},
+    }
+    d = jax.tree.map(lambda t: (t * 0.1).astype(t.dtype), w)
+    u = jax.tree.map(lambda t: (t * 0.2 + 0.3).astype(jnp.float32), w)
+    ref = get_commit_rule("momentum_delta", cfg, backend="reference")
+    fus = get_commit_rule("momentum_delta", cfg, backend="fused")
+    rw, rd = ref.apply(w, d, u, momentum)
+    fw, fd = fus.apply(w, d, u, momentum)
+    for a, b in zip(jax.tree.leaves((rw, rd)), jax.tree.leaves((fw, fd))):
+        assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@given(n=st.integers(1, 20_000), dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(max_examples=10, deadline=None)
+def test_plain_average_backends_agree(n, dtype):
+    rng = np.random.default_rng(n)
+    cfg = CommitConfig(tau=1, global_lr=0.3, worker_axes=())
+    w = {"a": jnp.asarray(rng.normal(size=(n,)), dtype)}
+    u = jax.tree.map(lambda t: (t * 0.2 + 0.3).astype(jnp.float32), w)
+    ref = get_commit_rule("plain_average", cfg, backend="reference")
+    fus = get_commit_rule("plain_average", cfg, backend="fused")
+    rw, _ = ref.apply(w, (), u, 0.0)
+    fw, _ = fus.apply(w, (), u, 0.0)
+    assert_allclose(np.asarray(rw["a"], np.float32), np.asarray(fw["a"], np.float32),
+                    atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@given(
+    n=st.integers(1, 30_000),
+    live=st.sampled_from([0.0, 1.0]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+@settings(max_examples=12, deadline=None)
+def test_sgd_local_rule_backends_agree(n, live, dtype):
+    """Fused sgd microstep (param advance + U accumulation through the
+    Pallas accumulate kernel) matches the reference arithmetic, including
+    the τ_i mask."""
+    rng = np.random.default_rng(n)
+    cfg = CommitConfig(tau=1, local_lr=0.07, worker_axes=())
+    p = {"w": jnp.asarray(rng.normal(size=(n,)), dtype)}
+    u = jax.tree.map(jnp.zeros_like, p)
+    g = jax.tree.map(lambda t: (t * 0.5 + 0.1).astype(jnp.float32), p)
+    ref = get_local_rule("sgd", cfg, backend="reference")
+    fus = get_local_rule("sgd", cfg, backend="fused")
+    live_arr = jnp.float32(live)
+    rp, ru, _ = ref.update(p, u, g, (), live_arr)
+    fp, fu, _ = fus.update(p, u, g, (), live_arr)
+    assert_allclose(np.asarray(rp["w"], np.float32), np.asarray(fp["w"], np.float32),
+                    atol=_tol(dtype), rtol=_tol(dtype))
+    assert_allclose(np.asarray(ru["w"], np.float32), np.asarray(fu["w"], np.float32),
+                    atol=_tol(dtype), rtol=_tol(dtype))

@@ -2,7 +2,9 @@
 results/dryrun/*.json (run after `python -m repro.launch.dryrun --all
 --mesh both`). The static sections (§Repro, §Perf) live in
 EXPERIMENTS.md directly; this tool replaces the generated blocks between
-the AUTOGEN markers."""
+the AUTOGEN markers. On first run it writes the static skeleton (with
+empty AUTOGEN blocks); with no dry-run results it leaves the skeleton in
+place and exits with a pointer to the dry-run command."""
 
 from __future__ import annotations
 
@@ -15,6 +17,31 @@ DRYRUN = pathlib.Path("results/dryrun")
 EXP = pathlib.Path("EXPERIMENTS.md")
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+SKELETON = """\
+# EXPERIMENTS
+
+## Repro notes
+
+(hand-written: per-figure reproduction notes go here)
+
+## Perf iterations
+
+(hand-written: measured hillclimb log goes here)
+
+## Dry-run sweep
+
+<!-- AUTOGEN:DRYRUN -->
+(run `PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both`,
+then `python tools/make_experiments.py`)
+<!-- /AUTOGEN:DRYRUN -->
+
+## Roofline
+
+<!-- AUTOGEN:ROOFLINE -->
+(generated with the dry-run sweep)
+<!-- /AUTOGEN:ROOFLINE -->
+"""
 
 
 def fmt_bytes(b):
@@ -93,18 +120,29 @@ def splice(text, marker, table):
     return text + "\n" + block + "\n"
 
 
-def main():
+def main() -> int:
+    if not EXP.exists():
+        EXP.write_text(SKELETON)
+        print(f"created static skeleton {EXP}")
     data = load()
+    if not data:
+        print(
+            f"no dry-run results under {DRYRUN}/ — generate them first:\n"
+            "  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both\n"
+            "then re-run this tool to fill the AUTOGEN tables."
+        )
+        return 0
     n_ok = sum(1 for d in data.values() if d["status"] == "ok")
     n_skip = sum(1 for d in data.values() if d["status"] == "skipped")
     n_err = len(data) - n_ok - n_skip
     print(f"combos: {len(data)} ok={n_ok} skip={n_skip} err={n_err}")
-    text = EXP.read_text() if EXP.exists() else "# EXPERIMENTS\n"
+    text = EXP.read_text()
     text = splice(text, "DRYRUN", dryrun_table(data))
     text = splice(text, "ROOFLINE", roofline_table(data))
     EXP.write_text(text)
     print(f"wrote {EXP}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())
