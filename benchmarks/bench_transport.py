@@ -1,0 +1,110 @@
+"""Transport-layer benchmark: codec micro-costs + the bytes-vs-convergence
+tradeoff on a bandwidth-constrained fleet.
+
+Two row families:
+
+  * ``transport/codec_*`` — encode/decode wall time (µs/call, interpret
+    mode on CPU: structure cost only, not TPU predictions) and the
+    measured encoded payload bytes per codec/backend. These rows are the
+    CI smoke gate for the transport layer.
+  * ``transport/tradeoff_*`` — the ADSP simulator on a link-constrained
+    heterogeneous fleet, one run per codec: wire bytes to the PS vs
+    convergence time. On links where the straggler is the link, not the
+    chip, compressed commits must reduce bytes without hurting (and
+    typically improving) convergence time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles, with_links
+from repro.edgesim.tasks import cnn_task
+from repro.transport import codec_backends, dense_nbytes, get_codec
+
+from .common import GAMMA, row
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)  # compile/warm
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def _codec_micro_rows(full: bool) -> list[str]:
+    n = (1 << 20) if full else (1 << 16)
+    rng = np.random.default_rng(0)
+    u = {
+        "w": jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(257,)), jnp.float32),  # ragged tail
+    }
+    dense = dense_nbytes(u)
+    rows = []
+    for name in ("identity", "int8", "bf16", "top_k"):
+        for backend in codec_backends(name):
+            codec = get_codec(name, backend=backend)
+            state = codec.init(u)
+            enc_fn = jax.jit(codec.encode) if name != "identity" else codec.encode
+            t_enc = _time(lambda: enc_fn(u, state))
+            enc, _ = enc_fn(u, state)
+            dec_fn = jax.jit(codec.decode) if name != "identity" else codec.decode
+            t_dec = _time(lambda: dec_fn(enc, u))
+            nbytes = codec.encoded_nbytes(u)
+            rows.append(row(
+                f"transport/codec_{name}_{codec.backend}", t_enc + t_dec, 1.0,
+                encode_us=1e6 * t_enc, decode_us=1e6 * t_dec,
+                encoded_bytes=nbytes, ratio=dense / max(nbytes, 1),
+                elems=n + 257,
+            ))
+    return rows
+
+
+def _tradeoff_rows(full: bool) -> list[str]:
+    """ADSP on a fleet whose links, not chips, are the stragglers."""
+    m = 6 if full else 3
+    target = 0.75
+    max_seconds = 3000.0 if full else 1500.0
+    rows = []
+    for name in ("identity", "int8", "top_k"):
+        task = cnn_task(m, width=8)
+        # size the link so a dense commit costs ~2 virtual seconds of
+        # transfer (10× the fixed o/2): the link dominates the commit
+        dense = dense_nbytes(task.init_params)
+        profiles = with_links(
+            ratio_profiles((1,) * (m - 1) + (3,), base_v=1.0, o=0.2),
+            bandwidth=dense / 2.0, latency=0.01,
+        )
+        cfg = SimConfig(gamma=GAMMA, epoch_seconds=200.0, base_batch=32,
+                        target_loss=target, max_seconds=max_seconds,
+                        local_lr=0.05)
+        from repro.cluster import make_policy
+
+        t0 = time.time()
+        sim = Simulator(task, profiles, make_policy("adsp", search=False, gamma=GAMMA),
+                        cfg, codec=name)
+        res = sim.train()
+        wall = time.time() - t0
+        rows.append(row(
+            f"transport/tradeoff_{name}", wall, max(res.elapsed, 1e-9),
+            bytes_to_ps=res.bytes_to_ps,
+            encoded_bytes_per_commit=sim._enc_nbytes,
+            t_conv=res.convergence_time if res.converged else float("inf"),
+            converged=int(res.converged),
+            final_loss=float(res.losses[-1]),
+            commits=res.total_commits,
+            waiting_frac=res.waiting_fraction,
+        ))
+    return rows
+
+
+def main(full: bool = False) -> list[str]:
+    return _codec_micro_rows(full) + _tradeoff_rows(full)

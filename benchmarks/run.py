@@ -24,6 +24,7 @@ MODULES = [
     "fig6_latency",
     "appendix_extras",
     "bench_kernels",
+    "bench_transport",
     "roofline_table",
 ]
 

@@ -10,16 +10,25 @@ one joins later, and a surviving worker is throttled to half speed — the
 engine re-derives the commit rates (ΔC_i = C_target − c_i) on each event
 and training keeps converging.
 
-    PYTHONPATH=src python examples/heterogeneous_edge.py [--workers 8] [--churn]
+With ``--codec`` and link flags, commits become payload-aware
+(``repro.transport``): the update is compressed at the worker, the push
+costs O_i/2 + latency + bytes/bandwidth, and ``bytes_to_ps`` is measured
+on the wire — the bandwidth-constrained-fleet scenario where the
+straggler is the link, not the chip.
+
+    PYTHONPATH=src python examples/heterogeneous_edge.py [--workers 8] [--churn] \
+        [--codec int8] [--bandwidth-kbps 64] [--link-latency 0.05]
 """
 
 import argparse
+import math
 
 from repro.cluster import ChurnSchedule, join, leave, make_policy, speed
 from repro.core.theory import WorkerProfile, heterogeneity_degree
 from repro.edgesim import SimConfig, Simulator
-from repro.edgesim.profiles import ec2_profiles
+from repro.edgesim.profiles import ec2_profiles, with_links
 from repro.edgesim.tasks import cnn_task
+from repro.transport import add_codec_args, codec_from_args
 
 
 def churn_schedule(profiles) -> ChurnSchedule:
@@ -37,9 +46,21 @@ def main():
     p.add_argument("--target-loss", type=float, default=0.8)
     p.add_argument("--churn", action="store_true",
                    help="elastic scenario: worker crash / join / slowdown")
+    add_codec_args(p)  # --codec / --codec-backend / --topk-frac
+    p.add_argument("--bandwidth-kbps", type=float, default=0.0,
+                   help="uplink/downlink kilobits/s per worker (0 = unconstrained)")
+    p.add_argument("--link-latency", type=float, default=0.0,
+                   help="fixed one-way link latency, seconds")
     args = p.parse_args()
+    codec = codec_from_args(args)
 
     profiles = ec2_profiles(o=0.2, scale=0.5)[: args.workers]
+    profiles = with_links(
+        profiles,
+        # kilobits/s → bytes/s
+        bandwidth=args.bandwidth_kbps * 1e3 / 8 if args.bandwidth_kbps else math.inf,
+        latency=args.link_latency,
+    )
     H = heterogeneity_degree([pr.v for pr in profiles])
     print(f"# {args.workers} workers, heterogeneity H={H:.2f}")
     task = cnn_task(args.workers, width=8)
@@ -54,12 +75,13 @@ def main():
     ]:
         churn = churn_schedule(profiles) if args.churn else None
         sim = Simulator(task, profiles, make_policy(name, **kw), cfg,
-                        churn=churn)
+                        churn=churn, codec=codec)
         res = sim.train()
         results[name] = res
         print(f"{name:16s} t_conv={res.convergence_time:8.1f}s "
               f"steps={res.total_steps} commits={res.total_commits} "
-              f"waiting={100*res.waiting_fraction:.1f}% cc={res.commit_counts}")
+              f"waiting={100*res.waiting_fraction:.1f}% cc={res.commit_counts} "
+              f"bytes_to_ps={res.bytes_to_ps/1e6:.2f}MB")
         if name == "adsp":
             for i, tr in enumerate(sim.policy.traces):
                 print(f"  search epoch {i}: candidates={tr.candidates} -> {tr.chosen}")

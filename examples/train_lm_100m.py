@@ -31,6 +31,7 @@ from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.ps import CommitConfig, add_rule_args, make_train_step, rules_from_args
+from repro.transport import add_codec_args, codec_from_args
 
 
 def make_100m_config() -> ModelConfig:
@@ -51,13 +52,15 @@ def main():
     p.add_argument("--local-lr", type=float, default=0.05)
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
+    add_codec_args(p)
     args = p.parse_args()
 
     cfg = make_100m_config()
     rules = rules_from_args(args)
+    codec = codec_from_args(args)
     print(f"# {cfg.name}: {cfg.total_params()/1e6:.1f}M params, "
           f"tau={args.tau}, seq={args.seq}, batch={args.batch}, "
-          f"rules={args.local_rule}+{args.commit_rule}")
+          f"rules={args.local_rule}+{args.commit_rule}, codec={codec.name}")
 
     mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
     ccfg = CommitConfig(tau=args.tau, local_lr=args.local_lr, global_lr=1.0,
@@ -66,7 +69,7 @@ def main():
     def loss_fn(params, mb):
         return lm.lm_loss(cfg, params, mb, remat=False)
 
-    step = make_train_step(loss_fn, ccfg, rules, mesh=mesh)
+    step = make_train_step(loss_fn, ccfg, rules, mesh=mesh, codec=codec)
     params = lm.lm_init(jax.random.PRNGKey(args.seed), cfg)
     state = step.init(params)
     step = jax.jit(step)

@@ -42,16 +42,19 @@ def save_pytree(path: str | pathlib.Path, tree, metadata: dict | None = None) ->
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     arrays, _, dtypes = _flatten(tree)
-    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    # Suffix ends in ".npz" so np.savez writes INTO the mkstemp file
+    # instead of appending ".npz" to it — with the old ".tmp" suffix the
+    # data landed in a second file and the original empty temp file was
+    # an extra artifact to clean up (and survived a crash mid-save).
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp.npz")
     os.close(fd)
     meta = {"__dtypes__": dtypes, **(metadata or {})}
     try:
         np.savez(tmp, __metadata__=json.dumps(meta), **arrays)
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+        os.replace(tmp, path)
     finally:
-        for t in (tmp, tmp + ".npz"):
-            if os.path.exists(t):
-                os.remove(t)
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load_pytree(path: str | pathlib.Path, like=None, shardings=None):

@@ -71,7 +71,14 @@ class LegacyPolicyAdapter(ClusterPolicy):
     def fraction_for(self, view, index: int) -> float:
         # Legacy batch_fraction takes a *positional* worker index; under
         # churn the stable id diverges from the position, so translate.
-        pos = next(i for i, ws in enumerate(view.workers) if ws.index == index)
+        # A dead/unknown id must raise KeyError like every other lookup,
+        # not a bare StopIteration (which PEP 479 turns into a
+        # RuntimeError when it crosses a generator frame).
+        pos = next(
+            (i for i, ws in enumerate(view.workers) if ws.index == index), None
+        )
+        if pos is None:
+            raise KeyError(f"no alive worker with id {index}")
         return self.inner.batch_fraction(view, pos)
 
     def on_started(self, view) -> list[Command]:

@@ -37,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import theory
 from repro.core.theory import WorkerProfile
 from repro.ps import CommitConfig, UpdateRules, make_train_step
+from repro.transport import Codec, dense_nbytes, get_codec
 
 from .engine import ClusterEngine
 from .protocol import WorkerView
@@ -88,6 +89,7 @@ class MeshBackend:
         batch_spec: P | None = None,
         rules: UpdateRules | None = None,
         explicit_momentum: float = 0.0,
+        codec: str | Codec | None = None,
     ):
         self.task = task
         self.mesh = mesh
@@ -110,15 +112,28 @@ class MeshBackend:
             tau=tau, local_lr=local_lr, global_lr=global_lr,
             worker_axes=worker_axes, commit_dtype=commit_dtype,
         )
+        codec = get_codec(codec) if isinstance(codec, str) else codec
         step = make_train_step(
             task.loss_fn, ccfg, rules,
             mesh=mesh if worker_axes else None,
             batch_spec=batch_spec,
             explicit_momentum=explicit_momentum,
+            codec=codec,
         )
         self.rules = step.rules
+        self.codec = step.codec
         self.step_fn = jax.jit(step)
         self.state = step.init(task.init_params)
+        # Wire accounting: bytes each commit round moves worker→PS (every
+        # worker ships one encoded update per round). Measured from the
+        # codec's static payload size; the identity/no-codec round ships
+        # the dense update.
+        per_worker = (
+            self.codec.encoded_nbytes(task.init_params)
+            if self.codec is not None else dense_nbytes(task.init_params)
+        )
+        self.bytes_per_round = per_worker * n_workers
+        self.bytes_to_ps = 0
 
     # ------------------------------------------------------------ backend API
     def bind(self, engine: ClusterEngine) -> None:
@@ -175,6 +190,7 @@ class MeshBackend:
         self.state, loss = self.step_fn(self.state, mbs, jnp.asarray(tau_arr, jnp.int32))
         self._round += 1
         self.now = self._round * self.round_seconds
+        self.bytes_to_ps += self.bytes_per_round
         loss = float(loss)
         self.losses.append((self.now, loss))
         for w, t in zip(self.workers, tau_arr):

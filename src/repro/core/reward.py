@@ -162,6 +162,8 @@ def log_slope_reward(times, losses) -> float:
     """
     t = np.asarray(times, dtype=np.float64)
     l = np.asarray(losses, dtype=np.float64)
+    if t.size < 2 or t[-1] <= t[0]:
+        return 0.0  # no time span observed ⇒ no decay-rate information
     a3 = 0.0
     try:
         fit = fit_loss_curve(t, l)

@@ -31,7 +31,22 @@ __all__ = ["OnlineSystem", "SearchTrace", "decide_commit_rate", "Scheduler",
 def pad_probe_samples(ts: list, ls: list) -> tuple[list, list]:
     """Ensure a probe window yields ≥3 (time, loss) samples — the minimum
     the reward curve fit needs — by inserting a midpoint. Shared by every
-    backend's ``run_window`` so the sampling contract lives in one place."""
+    backend's ``run_window`` so the sampling contract lives in one place.
+
+    Degenerate windows (shorter than the eval interval, or cut off by
+    convergence) can arrive with 0 or 1 samples, or with all samples at
+    one instant; those yield a synthetic flat window (zero reward slope)
+    instead of an IndexError / duplicate time points that break the
+    curve fit's slope normalization.
+    """
+    ts, ls = list(ts), list(ls)
+    if not ts:
+        return ts, ls
+    if len(ts) == 1 or ts[-1] <= ts[0]:
+        # A single observed instant carries no decay-rate information:
+        # expand to a flat 1-second window so the fit sees slope 0.
+        t0, l0 = ts[-1], ls[-1]
+        return [t0, t0 + 0.5, t0 + 1.0], [l0, l0, l0]
     if len(ts) < 3:
         ts.insert(1, (ts[0] + ts[-1]) / 2)
         ls.insert(1, (ls[0] + ls[-1]) / 2)

@@ -50,16 +50,34 @@ class WorkerProfile:
     Attributes:
       v: training speed, mini-batch steps per (virtual) second.
       o: communication overhead per commit (push U_i + pull W), seconds.
+         This is the payload-independent part (connection setup, PS queue,
+         protocol overhead); payload transfer time comes from the link.
+      bandwidth: link throughput in bytes per (virtual) second. The default
+         ``inf`` makes every transfer free, reducing the commit cost to the
+         fixed ``o`` — exactly the pre-link-model behaviour.
+      latency: fixed one-way link latency per transfer, seconds.
     """
 
     v: float
     o: float = 0.0
+    bandwidth: float = math.inf
+    latency: float = 0.0
 
     def __post_init__(self) -> None:
         if self.v <= 0:
             raise ValueError(f"worker speed must be positive, got {self.v}")
         if self.o < 0:
             raise ValueError(f"comm overhead must be >= 0, got {self.o}")
+        if self.bandwidth <= 0:
+            raise ValueError(f"link bandwidth must be positive, got {self.bandwidth}")
+        if self.latency < 0:
+            raise ValueError(f"link latency must be >= 0, got {self.latency}")
+
+    def transfer_seconds(self, nbytes: float) -> float:
+        """One-way time to move ``nbytes`` over this worker's link (the
+        payload-dependent half of a commit; the fixed ``o`` is charged
+        separately by the caller)."""
+        return self.latency + nbytes / self.bandwidth
 
 
 # ---------------------------------------------------------------------------

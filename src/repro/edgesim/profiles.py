@@ -14,6 +14,9 @@
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Sequence
+
 import numpy as np
 
 from repro.core.theory import WorkerProfile, heterogeneity_degree
@@ -23,7 +26,31 @@ __all__ = [
     "ec2_profiles",
     "smartphone_profiles",
     "heterogeneity_profiles",
+    "with_links",
 ]
+
+
+def with_links(
+    profiles: Sequence[WorkerProfile],
+    bandwidth: float | Sequence[float] = float("inf"),
+    latency: float | Sequence[float] = 0.0,
+) -> list[WorkerProfile]:
+    """Attach a link model to existing profiles (bandwidth-constrained
+    fleets: the straggler is the link, not the chip).
+
+    ``bandwidth`` (bytes/s) and ``latency`` (s) are scalars (uniform
+    links) or per-worker sequences. The default keeps transfers free —
+    the pre-link-model commit cost.
+    """
+    m = len(profiles)
+    bws = [bandwidth] * m if np.isscalar(bandwidth) else list(bandwidth)
+    lats = [latency] * m if np.isscalar(latency) else list(latency)
+    if len(bws) != m or len(lats) != m:
+        raise ValueError(f"link params must be scalars or length-{m} sequences")
+    return [
+        dataclasses.replace(p, bandwidth=float(b), latency=float(l))
+        for p, b, l in zip(profiles, bws, lats)
+    ]
 
 
 def ratio_profiles(

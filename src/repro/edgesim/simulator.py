@@ -7,10 +7,19 @@ Semantics (matching the paper's testbed + Alg. 2):
   ``batch_scale_i / v_i`` virtual seconds (batch_scale_i = 1 for equal
   per-worker batches; BatchTune policies enlarge fast workers' batches).
 * After each step the control plane decides whether the worker commits
-  its accumulated update U_i. A commit costs O_i/2 (push), the PS applies
-  ``W ← W − η_global · U_i`` (immediately, or after a barrier collects the
-  whole round), and the pull costs another O_i/2, after which the worker
-  resumes with fresh parameters.
+  its accumulated update U_i. The update is **encoded** by the configured
+  transport codec (``repro.transport``; identity / int8 / bf16 / top_k,
+  each with error-feedback residual carried per worker), the push costs
+  ``O_i/2 + latency_i + encoded_bytes / bandwidth_i`` (the fixed protocol
+  overhead plus the payload moving over the worker's link), the PS
+  **decodes** and applies ``W ← W − η_global · U_i`` (immediately, or
+  after a barrier collects the whole round), and the pull costs
+  ``O_i/2 + latency_i + dense_bytes / bandwidth_i`` (fresh params ship
+  down uncompressed), after which the worker resumes. With the identity
+  codec and the default infinite-bandwidth link this reduces exactly to
+  the fixed ``O_i/2 + O_i/2`` commit cost of the original model, and
+  ``bytes_to_ps`` is *measured* from encoded payload sizes instead of
+  the old ``4 · |params| · commits`` proxy.
 * The *waiting time* of a worker is everything that is not computation:
   waiting_i = active − steps_i · step_time_i  (the paper's definition —
   communication counts as waiting).
@@ -49,6 +58,7 @@ import numpy as np
 
 from repro.cluster import ChurnSchedule, ClusterEngine
 from repro.core.theory import WorkerProfile
+from repro.transport import Codec, dense_nbytes, get_codec
 
 __all__ = ["TrainTask", "SimConfig", "WorkerState", "Simulator", "SimResult"]
 
@@ -115,6 +125,8 @@ class WorkerState:
     step_credit: int = 0  # joiner ramp-in credit (engine.worker_joined)
     commit_credit: int = 0
     status: str = "idle"  # idle | computing | committing | awaiting_release | blocked
+    residual: Pytree = ()  # codec error-feedback state (rule-owned)
+    pending_commit: Pytree = None  # encoded payload of the in-flight commit
 
 
 @dataclasses.dataclass
@@ -129,7 +141,7 @@ class SimResult:
     elapsed: float
     computation_time: float  # summed over workers (incl. departed)
     waiting_time: float  # summed over workers (active − computation)
-    bytes_to_ps: float  # commits × model size (bandwidth proxy)
+    bytes_to_ps: float  # measured: Σ encoded payload bytes over all commits
     commit_counts: list[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -143,7 +155,8 @@ class Simulator:
 
     def __init__(self, task: TrainTask, profiles: Sequence[WorkerProfile],
                  policy, config: SimConfig | None = None,
-                 churn: ChurnSchedule | None = None):
+                 churn: ChurnSchedule | None = None,
+                 codec: str | Codec = "identity"):
         self.task = task
         self.cfg = config or SimConfig()
         self.churn = churn
@@ -153,8 +166,22 @@ class Simulator:
         self._next_id = itertools.count()
         self._zero = jax.tree.map(jnp.zeros_like, task.init_params)
         self.global_params = task.init_params
+        # transport: codec + per-link payload timing ------------------------
+        self.codec = get_codec(codec)
+        self._zero_residual = self.codec.init(task.init_params)
+        if self.codec.name == "identity":
+            # exact passthrough — keep un-jitted so arrays flow through
+            # untouched and the no-transport numerics stay bit-identical
+            self._encode, self._decode = self.codec.encode, self.codec.decode
+        else:
+            self._encode = jax.jit(self.codec.encode)
+            self._decode = jax.jit(self.codec.decode)
+        self._enc_nbytes = self.codec.encoded_nbytes(task.init_params)
+        self._pull_nbytes = dense_nbytes(task.init_params)
+        self._bytes_to_ps = 0
         self.workers = [
-            WorkerState(next(self._next_id), p, task.init_params, self._zero)
+            WorkerState(next(self._next_id), p, task.init_params, self._zero,
+                        residual=self._zero_residual)
             for p in profiles
         ]
         self._by_id = {w.index: w for w in self.workers}
@@ -165,6 +192,7 @@ class Simulator:
         self.convergence_time = math.inf
         self.total_commits = 0
         self._barrier_buf: dict[int, Pytree] = {}
+        self._round_members = {w.index for w in self.workers}
         self._param_sizes = sum(
             int(np.prod(x.shape)) for x in jax.tree.leaves(task.init_params)
         )
@@ -221,7 +249,8 @@ class Simulator:
         """Elastic scale-out: the joiner starts from the current global
         model with an empty update buffer."""
         w = WorkerState(next(self._next_id), profile, self.global_params,
-                        self._zero, joined_at=self.now)
+                        self._zero, joined_at=self.now,
+                        residual=self._zero_residual)
         self.workers.append(w)
         self._by_id[w.index] = w
         self._refresh_global_lr()
@@ -241,6 +270,7 @@ class Simulator:
         self.workers.remove(w)
         self._departed.append((w, self.now))
         self._barrier_buf.pop(index, None)
+        self._round_members.discard(index)
         self._refresh_global_lr()
         self.engine.worker_left(index)
         self._maybe_release_barrier()
@@ -297,33 +327,68 @@ class Simulator:
         w.update = self._accum(w.update, grads, self._local_lr)
         if self.engine.step_done(w):
             w.status = "committing"
-            w.comm_time += w.profile.o
-            self._push(self.now + w.profile.o / 2.0, "commit_arrive", w.index)
+            # Encode at the worker: the codec compresses U (folding in the
+            # error-feedback residual) and the push moves only the encoded
+            # payload over this worker's link.
+            w.pending_commit, w.residual = self._encode(w.update, w.residual)
+            push = self._push_seconds(w)
+            w.comm_time += push + self._pull_seconds(w)
+            self._push(self.now + push, "commit_arrive", w.index)
         else:
             self._start_step(w)
 
+    # ------------------------------------------------------------- transport
+    def _push_seconds(self, w: WorkerState) -> float:
+        """Worker → PS: fixed overhead + encoded payload over the link."""
+        return w.profile.o / 2.0 + w.profile.transfer_seconds(self._enc_nbytes)
+
+    def _pull_seconds(self, w: WorkerState) -> float:
+        """PS → worker: fixed overhead + dense fresh params over the link."""
+        return w.profile.o / 2.0 + w.profile.transfer_seconds(self._pull_nbytes)
+
     def _on_commit_arrive(self, w: WorkerState) -> None:
         if self.engine.policy.apply_mode == "barrier":
-            self._barrier_buf[w.index] = w.update
+            self._barrier_buf[w.index] = w.pending_commit
             w.status = "awaiting_release"
             self._maybe_release_barrier()
         else:
             self._do_apply(w)
-            self._push(self.now + w.profile.o / 2.0, "pull_done", w.index)
+            self._push(self.now + self._pull_seconds(w), "pull_done", w.index)
 
     def _maybe_release_barrier(self) -> None:
-        if self._barrier_buf and len(self._barrier_buf) == self.num_workers:
-            for wid in sorted(self._barrier_buf):
-                self._do_apply(self._by_id[wid])
-            self._barrier_buf.clear()
-            for ww in self.workers:
-                self._push(self.now + ww.profile.o / 2.0, "pull_done", ww.index)
+        """Release the barrier once every *round member* has committed.
+
+        Membership is the set of workers alive when the round started; an
+        elastic joiner mid-step is folded in at the next release, so it
+        neither stalls the veterans nor — crucially — gets pulled while
+        still computing. Only the workers whose commits were buffered are
+        pulled: pulling every alive worker (the old behaviour) zeroed a
+        computing joiner's accumulated update, counted a phantom commit,
+        and scheduled a second in-flight step for it.
+        """
+        if not self._barrier_buf:
+            return
+        if not self._round_members <= set(self._barrier_buf):
+            return
+        pulled = set(self._barrier_buf)
+        for wid in sorted(self._barrier_buf):
+            self._do_apply(self._by_id[wid])
+        self._barrier_buf.clear()
+        for ww in self.workers:
+            if ww.index in pulled:
+                self._push(self.now + self._pull_seconds(ww), "pull_done", ww.index)
+        self._round_members = set(self._by_id)
 
     def _do_apply(self, w: WorkerState) -> None:
+        # Decode at the PS: the encoded payload becomes a dense update.
+        # Wire bytes are booked per *applied* commit (matching the commit
+        # counter; an in-flight payload at run end is not reported).
+        u = self._decode(w.pending_commit, self.global_params)
         self.global_params = self._apply_commit(
-            self.global_params, w.update, self.global_lr
+            self.global_params, u, self.global_lr
         )
         self.total_commits += 1
+        self._bytes_to_ps += self._enc_nbytes
 
     def _on_pull_done(self, w: WorkerState) -> None:
         w.params = self.global_params
@@ -478,7 +543,9 @@ class Simulator:
             elapsed=elapsed,
             computation_time=comp,
             waiting_time=waiting,
-            bytes_to_ps=4.0 * self._param_sizes * self.total_commits,
+            # measured on the wire: Σ encoded payload bytes (== the old
+            # 4·|params|·commits proxy for the identity codec on f32 tasks)
+            bytes_to_ps=float(self._bytes_to_ps),
             # real commits only — elastic joiners' ramp-in credit (used by
             # the rate rule) is subtracted for reporting
             commit_counts=[w.commits - w.commit_credit for w in self.workers],

@@ -15,6 +15,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from . import codec as _cd
 from . import flash_attention as _fa
 from . import fused_commit as _fc
 from . import rglru_scan as _rg
@@ -26,6 +27,9 @@ __all__ = [
     "rwkv6_scan",
     "accumulate_tree",
     "ps_apply_tree",
+    "quantize_int8",
+    "dequantize_int8",
+    "encode_bf16",
     "default_interpret",
 ]
 
@@ -136,10 +140,11 @@ def rwkv6_scan(r, k, v, w, bonus, *, block_s=256, interpret=None):
 # ADSP commit ops over parameter pytrees
 # ---------------------------------------------------------------------------
 
-def _as_tiles(x):
-    """Flatten to block-aligned 2-D (dtype-dependent sublane count);
-    returns (tiled, orig_size)."""
-    blk = _fc.block_for(x.dtype)
+def _as_tiles(x, blk=None):
+    """Flatten to block-aligned 2-D (dtype-dependent sublane count, or an
+    explicit ``blk``); returns (tiled, orig_size)."""
+    if blk is None:
+        blk = _fc.block_for(x.dtype)
     flat = x.reshape(-1)
     n = flat.shape[0]
     cols = blk[1]
@@ -187,3 +192,44 @@ def ps_apply_tree(w, prev_delta, u, global_lr, momentum, *, interpret=None):
     new_w = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
     new_d = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
     return new_w, new_d
+
+
+# ---------------------------------------------------------------------------
+# transport codec passes (per-array; pytree dispatch lives in repro.transport)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8(x, scale, *, interpret=None):
+    """Symmetric int8 quantization of one array with a given positive
+    scalar ``scale``: returns (q int8, error-feedback residual f32), both
+    shaped like ``x``, out of a single fused HBM pass."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(x.astype(jnp.float32), _cd.QBLOCK)
+    s = jnp.full((1, 1), scale, jnp.float32)
+    q, r = _cd.quantize_int8(t, s, interpret=interp)
+    return (
+        _from_tiles(q, n, x.shape, jnp.int8),
+        _from_tiles(r, n, x.shape, jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_int8(q, scale, *, interpret=None):
+    """PS-side decode of an int8 payload: q·scale as f32."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(q, _cd.QBLOCK)
+    s = jnp.full((1, 1), scale, jnp.float32)
+    out = _cd.dequantize_int8(t, s, interpret=interp)
+    return _from_tiles(out, n, q.shape, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode_bf16(x, *, interpret=None):
+    """bf16 cast of one array: (q bf16, residual f32) in a single pass."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(x.astype(jnp.float32), _cd.QBLOCK)
+    q, r = _cd.encode_bf16(t, interpret=interp)
+    return (
+        _from_tiles(q, n, x.shape, jnp.bfloat16),
+        _from_tiles(r, n, x.shape, jnp.float32),
+    )

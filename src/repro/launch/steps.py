@@ -76,6 +76,7 @@ def build_train_step(
     commit_rule: str = "momentum_delta",
     rule_backend: str | None = None,
     local_hp: dict | None = None,
+    codec: str | None = None,
 ) -> StepBundle:
     spec = S.SHAPES[shape]
     granularity = granularity or cfg.adsp_granularity
@@ -112,6 +113,7 @@ def build_train_step(
         batch_spec=batch_spec_manual,
         explicit_momentum=explicit_momentum,
         remat=False,  # remat lives inside lm_loss (per layer group)
+        codec=codec,
     )
 
     # --- abstract args + shardings ---------------------------------------
@@ -129,8 +131,10 @@ def build_train_step(
         mesh, P(worker_axes if len(worker_axes) > 1 else worker_axes[0])
     ) if worker_axes else rep
     lshard = jax.tree.map(lambda _: wshard, state.local_state)
+    tshard = jax.tree.map(lambda _: wshard, state.transport_state)
     state_shard = AdspState(params=pshard, commit_state=cshard,
-                            local_state=lshard, step=rep)
+                            local_state=lshard, step=rep,
+                            transport_state=tshard)
     batch = S.abstract_train_batch(cfg, spec, tau)
     bshard = S.batch_shardings(cfg, mesh, batch, batch_dim=1)
     tau_arr = jax.ShapeDtypeStruct((n_workers,), jnp.int32)
@@ -145,7 +149,8 @@ def build_train_step(
         static=dict(tau=tau, worker_axes=worker_axes, granularity=granularity,
                     n_workers=n_workers,
                     local_rule=step.rules[0].name, commit_rule=step.rules[1].name,
-                    rule_backend=step.rules[1].backend),
+                    rule_backend=step.rules[1].backend,
+                    codec=step.codec.name if step.codec is not None else None),
     )
 
 

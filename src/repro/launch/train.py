@@ -12,6 +12,11 @@ Alg. 2 exist exactly once in the repo.
 Usage (CPU dev, reduced config):
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-moe-a2.7b \
         --smoke --steps 50 --seq 128 --batch 8 --tau 4
+
+Commit transport: ``--codec {identity,int8,bf16,top_k}`` compresses the
+per-commit update payload through ``repro.transport`` (with error
+feedback; ``--codec-backend fused`` routes encode/decode through the
+Pallas kernels); the header line reports the measured MB/round to the PS.
 """
 
 from __future__ import annotations
@@ -33,6 +38,7 @@ from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.ps import UpdateRules, add_rule_args, rules_from_args
+from repro.transport import add_codec_args, codec_from_args
 
 __all__ = ["build_mesh_task", "make_trainer", "main"]
 
@@ -62,6 +68,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
                  gamma_rounds: float = 8.0, search_every: int = 0,
                  speeds=None,
                  update_rules: UpdateRules | None = None,
+                 codec=None,
                  ) -> tuple[MeshBackend, ClusterEngine, ADSP]:
     """Build the (backend, engine, policy) triple for an arch on a mesh."""
     from repro.launch.mesh import worker_axes_for
@@ -82,7 +89,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
     backend = MeshBackend(
         task, mesh, worker_axes=worker_axes, tau=tau,
         local_lr=local_lr, global_lr=global_lr, profiles=profiles,
-        rules=update_rules,
+        rules=update_rules, codec=codec,
     )
     policy = ADSP(
         gamma=gamma_rounds, search=bool(search_every),
@@ -109,22 +116,26 @@ def main(argv=None):
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
+    add_codec_args(p)
     args = p.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     n = len(jax.devices())
     mesh = jax.make_mesh((n, 1), ("data", "model"))
     rules = rules_from_args(args)
+    codec = codec_from_args(args)
     backend, engine, policy = make_trainer(
         cfg, mesh, tau=args.tau, seq=args.seq, batch=args.batch,
         local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
         gamma_rounds=args.gamma_rounds, search_every=args.search_every,
-        update_rules=rules,
+        update_rules=rules, codec=codec,
     )
     lr_rule, cr_rule = backend.rules
     print(f"# arch={cfg.name} params={cfg.total_params()/1e6:.1f}M "
           f"workers={len(backend.workers)} tau={args.tau} "
-          f"rules={lr_rule.name}+{cr_rule.name}[{cr_rule.backend}]")
+          f"rules={lr_rule.name}+{cr_rule.name}[{cr_rule.backend}] "
+          f"codec={backend.codec.name}[{backend.codec.backend}] "
+          f"({backend.bytes_per_round/1e6:.2f} MB/round to PS)")
     t0 = time.time()
 
     def on_round(rnd, loss):
@@ -135,6 +146,8 @@ def main(argv=None):
     with use_mesh(mesh):
         backend.train(args.steps, check_period=policy.gamma,
                       epoch_rounds=args.search_every, on_round=on_round)
+    print(f"# bytes_to_ps={backend.bytes_to_ps/1e6:.2f} MB "
+          f"over {args.steps} rounds")
     for i, tr in enumerate(policy.traces):
         print(f"# search {i}: candidates={tr.candidates} "
               f"rewards={[f'{r:.3g}' for r in tr.rewards]} -> {tr.chosen}")

@@ -14,6 +14,10 @@ optimizer state is *rule-owned* —
     (leading dim ``n_workers``, sharded over the worker axes by the
     train step so each worker's adaptive-optimizer moments survive
     across commit rounds). Stateless rules (plain sgd) carry ``()``.
+  * ``transport_state``: owned by the transport Codec
+    (``repro.transport``), one slot per worker like ``local_state`` —
+    the error-feedback residual of lossy commit codecs. The identity
+    codec (and ``codec=None``) carries ``()``.
 
 ``state.prev_delta`` is kept as a read-only alias of ``commit_state``
 for the momentum-delta rule's users.
@@ -87,6 +91,7 @@ class AdspState:
     commit_state: Pytree
     local_state: Pytree
     step: jax.Array  # global commit counter
+    transport_state: Pytree = ()  # codec error-feedback residual per worker
 
     @property
     def prev_delta(self) -> Pytree:
@@ -95,20 +100,28 @@ class AdspState:
         return self.commit_state
 
     @classmethod
-    def create(cls, params: Pytree, rules=None, *, n_workers: int = 1) -> "AdspState":
+    def create(cls, params: Pytree, rules=None, *, n_workers: int = 1,
+               codec=None) -> "AdspState":
         """``rules`` is a resolved (LocalRule, CommitRule) pair (e.g.
         ``UpdateRules(...).resolve(ccfg)`` or ``make_train_step(...).rules``).
         None keeps the seed default: momentum-delta commit state (zeros)
-        and a stateless local rule."""
+        and a stateless local rule. ``codec`` is a resolved
+        ``repro.transport.Codec`` (or None); its residual gets one slot
+        per worker, like ``local_state``."""
+
+        def per_worker(tree: Pytree) -> Pytree:
+            return jax.tree.map(
+                lambda x: jnp.repeat(x[None], n_workers, axis=0), tree
+            )
+
         if rules is None:
             commit_state: Pytree = jax.tree.map(jnp.zeros_like, params)
             local_state: Pytree = ()
         else:
             local_rule, commit_rule = rules
             commit_state = commit_rule.init(params)
-            local_state = jax.tree.map(
-                lambda x: jnp.repeat(x[None], n_workers, axis=0),
-                local_rule.init(params),
-            )
+            local_state = per_worker(local_rule.init(params))
+        transport_state: Pytree = () if codec is None else per_worker(codec.init(params))
         return cls(params=params, commit_state=commit_state,
-                   local_state=local_state, step=jnp.zeros((), jnp.int32))
+                   local_state=local_state, step=jnp.zeros((), jnp.int32),
+                   transport_state=transport_state)

@@ -127,6 +127,7 @@ def make_train_step(
     batch_spec=None,
     explicit_momentum: float = 0.0,
     remat: bool = False,
+    codec=None,
 ) -> Callable:
     """Build the full train step for any granularity and rule backend.
 
@@ -149,10 +150,22 @@ def make_train_step(
     GSPMD auto mode, so tensor-parallel sharding inside loss_fn keeps
     working untouched.
 
+    ``codec`` is a ``repro.transport`` Codec (or registered name) that
+    models the commit transport on the real path: each worker's
+    accumulated update U is encoded (folding in the worker's
+    error-feedback residual, carried in ``state.transport_state``) and
+    decoded before the pmean — exactly what a PS shipping compressed
+    payloads computes. None (default) and the identity codec leave the
+    arithmetic bit-identical to the no-transport step.
+
     The returned callable carries ``.init(params) -> AdspState`` (state
-    with rule-owned slots), ``.rules`` (the resolved pair), ``.config``
-    (the effective CommitConfig), and ``.n_workers``.
+    with rule-owned slots), ``.rules`` (the resolved pair), ``.codec``,
+    ``.config`` (the effective CommitConfig), and ``.n_workers``.
     """
+    if isinstance(codec, str):
+        from repro.transport import get_codec  # deferred: avoids ps↔transport cycle
+
+        codec = get_codec(codec)
     if granularity is not None:
         if mesh is None and granularity != "accum":
             raise ValueError(
@@ -184,10 +197,13 @@ def make_train_step(
         p_abs = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), state.params
         )
-        for label, rule, got in (
+        checks = [
             ("commit_state", commit_rule, state.commit_state),
             ("local_state", local_rule, state.local_state),
-        ):
+        ]
+        if codec is not None:
+            checks.append(("transport_state", codec, state.transport_state))
+        for label, rule, got in checks:
             want = jax.tree.structure(jax.eval_shape(rule.init, p_abs))
             if jax.tree.structure(got) != want:
                 raise ValueError(
@@ -203,12 +219,27 @@ def make_train_step(
         if batch_spec is None:
             batch_spec = P(None, axes if len(axes) > 1 else axes[0])
 
-        def _sharded_body(params, cstate, lstate, step, microbatches, tau_per_worker):
+    def _through_codec(u, tstate):
+        """Worker-side encode → PS-side decode of one worker's U, with the
+        error-feedback residual threaded through the per-worker slot. A
+        no-op (bit-identical u) for codec=None / identity."""
+        if codec is None:
+            return u, tstate
+        ts0 = jax.tree.map(lambda x: x[0], tstate)
+        enc, ts1 = codec.encode(u, ts0)
+        u = codec.decode(enc, u)
+        return u, jax.tree.map(lambda x: x[None], ts1)
+
+    if axes:
+        def _sharded_body(params, cstate, lstate, tstate, step,
+                          microbatches, tau_per_worker):
             # tau_per_worker arrives sharded over the worker axes: this
             # shard holds exactly the one entry belonging to this worker.
             tau_i = tau_per_worker[0]
             ls0 = jax.tree.map(lambda x: x[0], lstate)
             u, ls1, loss = run(params, ls0, microbatches, tau_i)
+            # ---- transport: what actually crosses the link ----
+            u, tstate_out = _through_codec(u, tstate)
             # ---- the commit: PS apply as all-reduce over workers ----
             cd = jnp.dtype(ccfg.commit_dtype)
             u = jax.tree.map(lambda x: x.astype(cd), u)
@@ -216,29 +247,29 @@ def make_train_step(
             loss = jax.lax.pmean(loss, axes)
             new_p, new_c = commit_rule.apply(params, cstate, u, explicit_momentum)
             lstate_out = jax.tree.map(lambda x: x[None], ls1)
-            return new_p, new_c, lstate_out, step + 1, loss
+            return new_p, new_c, lstate_out, tstate_out, step + 1, loss
 
         # params/commit-state replicated across worker axes (manual);
-        # local state sharded one slot per worker; model-axis sharding is
-        # handled by auto GSPMD outside the manual set.
+        # local/transport state sharded one slot per worker; model-axis
+        # sharding is handled by auto GSPMD outside the manual set.
         rep = P()
         wspec = _axes_spec(axes)
         sharded = _compat_shard_map(
             _sharded_body,
             mesh,
-            in_specs=(rep, rep, wspec, rep, batch_spec, wspec),
-            out_specs=(rep, rep, wspec, rep, rep),
+            in_specs=(rep, rep, wspec, wspec, rep, batch_spec, wspec),
+            out_specs=(rep, rep, wspec, wspec, rep, rep),
             axis_names=set(axes),
             check=False,
         )
 
         def train_step(state: AdspState, microbatches, tau_per_worker):
             _validate_state(state)
-            p, c, l, s, loss = sharded(
+            p, c, l, t, s, loss = sharded(
                 state.params, state.commit_state, state.local_state,
-                state.step, microbatches, tau_per_worker,
+                state.transport_state, state.step, microbatches, tau_per_worker,
             )
-            return AdspState(p, c, l, s), loss
+            return AdspState(p, c, l, s, t), loss
 
     else:
         run = make_local_update(loss_fn, ccfg, local_rule, remat=remat, unroll=1)
@@ -248,16 +279,20 @@ def make_train_step(
             tau_i = jnp.reshape(jnp.asarray(tau_per_worker, jnp.int32), (-1,))[0]
             ls0 = jax.tree.map(lambda x: x[0], state.local_state)
             u, ls1, loss = run(state.params, ls0, microbatches, tau_i)
+            u, tstate_out = _through_codec(u, state.transport_state)
             new_p, new_c = commit_rule.apply(
                 state.params, state.commit_state, u, explicit_momentum
             )
             lstate_out = jax.tree.map(lambda x: x[None], ls1)
-            return AdspState(new_p, new_c, lstate_out, state.step + 1), loss
+            return AdspState(new_p, new_c, lstate_out, state.step + 1,
+                             tstate_out), loss
 
     train_step.init = lambda params: AdspState.create(
-        params, rules=(local_rule, commit_rule), n_workers=n_workers
+        params, rules=(local_rule, commit_rule), n_workers=n_workers,
+        codec=codec,
     )
     train_step.rules = (local_rule, commit_rule)
+    train_step.codec = codec
     train_step.config = ccfg
     train_step.n_workers = n_workers
     return train_step

@@ -1,0 +1,40 @@
+"""Commit-transport layer: payload codecs + link accounting (DESIGN.md §10).
+
+Public surface:
+
+  * ``Codec`` — the typed encode/decode/error-feedback contract;
+  * ``get_codec`` / ``register_codec`` / ``codec_names`` /
+    ``codec_backends`` — the (name, backend) registry, mirroring
+    ``repro.ps`` rules (reference = pure JAX, fused = Pallas kernels);
+  * ``dense_nbytes`` — wire size of an uncompressed pytree (what the PS
+    pull ships down);
+  * ``add_codec_args`` / ``codec_from_args`` — shared argparse plumbing.
+
+Built-ins: ``identity`` (exact passthrough), ``int8`` (symmetric
+per-leaf quantization, 4×), ``bf16`` (2×), ``top_k`` (magnitude
+sparsification, ``frac`` hyperparameter).
+"""
+
+from .cli import add_codec_args, codec_from_args
+from .codec import (
+    Codec,
+    codec_backends,
+    codec_names,
+    dense_nbytes,
+    get_codec,
+    register_codec,
+)
+
+# importing this registers the built-in codecs
+from . import codecs as _codecs  # noqa: F401
+
+__all__ = [
+    "Codec",
+    "add_codec_args",
+    "codec_backends",
+    "codec_from_args",
+    "codec_names",
+    "dense_nbytes",
+    "get_codec",
+    "register_codec",
+]

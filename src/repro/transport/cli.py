@@ -1,0 +1,26 @@
+"""Shared argparse plumbing for codec selection — one definition of the
+``--codec``/``--codec-backend``/``--topk-frac`` flags for every entry
+point (``repro.launch.train``, examples, benchmarks), mirroring
+``repro.ps.cli``."""
+
+from __future__ import annotations
+
+import argparse
+
+from .codec import Codec, get_codec
+
+__all__ = ["add_codec_args", "codec_from_args"]
+
+
+def add_codec_args(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument("--codec", default="identity",
+                        help="commit payload codec: identity | int8 | bf16 | top_k")
+    parser.add_argument("--codec-backend", default=None,
+                        help="reference | fused | auto (fused on TPU)")
+    parser.add_argument("--topk-frac", type=float, default=0.05,
+                        help="fraction of coordinates the top_k codec keeps")
+
+
+def codec_from_args(args: argparse.Namespace) -> Codec:
+    hp = {"frac": args.topk_frac} if args.codec == "top_k" else {}
+    return get_codec(args.codec, backend=args.codec_backend, **hp)

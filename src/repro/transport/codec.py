@@ -1,0 +1,130 @@
+"""The commit-transport Codec contract and registry (DESIGN.md §10).
+
+ADSP ships one payload per commit: the worker's accumulated update U up
+to the PS and fresh params back down. The transport layer makes that
+payload first-class: a ``Codec`` turns a dense update pytree into a wire
+payload (and back), carrying an **error-feedback residual** in per-worker
+state so lossy codecs (quantization, sparsification) stay unbiased over
+time — the compression error of commit t is re-injected at commit t+1
+(Karimireddy et al. 2019; the "when less is more" result that volume,
+not frequency, dominates edge convergence).
+
+Contracts (pytree-preserving, jit/shard_map-safe, shape/dtype-static so
+encoded size is known without running the encoder):
+
+  Codec.init(params_like) -> state        # the residual, no worker dim
+  Codec.encode(update, state) -> (encoded, new_state)
+      e = update + state; encoded ≈ e; new_state = e − decode(encoded)
+  Codec.decode(encoded, like) -> dense update
+      ``like`` supplies dense shapes/dtypes (needed by sparse codecs and
+      for casting back to the update dtype); pass the update (or params)
+      pytree, abstract ShapeDtypeStructs work too.
+
+Registration mirrors ``repro.ps`` rules: each (name, backend) pair with
+``backend ∈ {reference, fused}``; reference is pure JAX (the correctness
+contract), fused routes the elementwise passes through the Pallas codec
+kernels (``kernels.codec`` via ``kernels.ops``, interpret fallback
+off-TPU). ``backend="auto"`` resolves fused on TPU / reference
+elsewhere; a fused request for a codec with no fused implementation
+falls back to its reference implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ps.rules import resolve_backend
+
+__all__ = [
+    "Codec",
+    "register_codec",
+    "get_codec",
+    "codec_names",
+    "codec_backends",
+    "dense_nbytes",
+]
+
+Pytree = Any
+
+
+def dense_nbytes(like: Pytree) -> int:
+    """Bytes of a dense (uncompressed) pytree on the wire — what the PS
+    pull ships down, and the identity codec's upload cost."""
+    return int(sum(
+        int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree.leaves(like)
+    ))
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One registered transport codec (see module docstring for the
+    ``init``/``encode``/``decode`` contracts)."""
+
+    name: str
+    backend: str
+    init: Callable[[Pytree], Pytree]
+    encode: Callable[[Pytree, Pytree], tuple]
+    decode: Callable[[Pytree, Pytree], Pytree]
+
+    def encoded_nbytes(self, like: Pytree) -> int:
+        """Wire bytes of one encoded update for a dense tree shaped like
+        ``like``. Static — derived from the encoder's abstract output
+        shapes via ``eval_shape``, never from payload values — so link
+        timing can be computed once per model, not once per commit."""
+
+        def run(u):
+            enc, _ = self.encode(u, self.init(u))
+            return enc
+
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(getattr(x, "shape"), getattr(x, "dtype")),
+            like,
+        )
+        return dense_nbytes(jax.tree.leaves(jax.eval_shape(run, abstract)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_CODECS: dict[tuple[str, str], Callable] = {}
+
+
+def register_codec(name: str, backend: str = "reference"):
+    """Decorator: register ``factory(*, interpret=None, **hp) -> Codec``
+    under (name, backend)."""
+
+    def deco(factory):
+        _CODECS[(name, backend)] = factory
+        return factory
+
+    return deco
+
+
+def codec_names() -> tuple[str, ...]:
+    return tuple(sorted({n for n, _ in _CODECS}))
+
+
+def codec_backends(name: str) -> tuple[str, ...]:
+    return tuple(sorted(b for n, b in _CODECS if n == name))
+
+
+def get_codec(name, *, backend: str | None = None,
+              interpret: bool | None = None, **hp) -> Codec:
+    """Instantiate a registered codec. ``name`` may already be a Codec
+    (passed through); ``backend`` follows the rule-registry semantics
+    (auto → fused on TPU, fused falls back when unimplemented)."""
+    if isinstance(name, Codec):
+        return name
+    want = resolve_backend(backend)
+    factory = _CODECS.get((name, want))
+    if factory is None and want == "fused":
+        factory = _CODECS.get((name, "reference"))  # no fused impl: fall back
+    if factory is None:
+        raise KeyError(f"no codec {name!r}; registered: {list(codec_names())}")
+    return factory(interpret=interpret, **hp)

@@ -1,0 +1,210 @@
+"""Registered transport codecs: identity, int8, bf16, top-k.
+
+Every lossy codec follows the error-feedback discipline of the Codec
+contract (``codec.py``): encode compresses e = update + residual and
+carries e − decode(encode(e)) forward, so quantization/sparsification
+error is re-injected instead of lost. Reference backends are pure JAX
+(the correctness contract); fused backends route the elementwise
+encode/decode passes through the Pallas codec kernels
+(``kernels.codec`` via ``kernels.ops``). ``top_k`` has no fused
+implementation (gather/scatter-dominated, not an elementwise pass) —
+a fused request falls back to its reference implementation.
+
+Payload formats (per dense leaf):
+
+  identity  the leaf itself                          (bytes: dense)
+  int8      {"q": int8[shape], "scale": f32 scalar}  (bytes: n + 4)
+  bf16      bf16[shape]                              (bytes: 2n)
+  top_k     {"idx": int32[k], "vals": f32[k]}        (bytes: 8k)
+"""
+
+from __future__ import annotations
+
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .codec import Codec, register_codec
+
+__all__ = []  # codecs are reached through the registry
+
+
+def _zip_encode(fn, u, state):
+    """Apply a per-leaf ``fn(u_leaf, r_leaf) -> (payload, residual)`` and
+    unzip into (payload_tree, state_tree)."""
+    pairs = jax.tree.map(fn, u, state)
+    is_pair = lambda x: isinstance(x, tuple)
+    enc = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+    new_state = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+    return enc, new_state
+
+
+def _residual_init(params):
+    return jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32), params)
+
+
+def _cast_like(dense, like):
+    if like is None:
+        return dense
+    return jax.tree.map(lambda d, l: d.astype(l.dtype), dense, like)
+
+
+# ---------------------------------------------------------------------------
+# identity — the exact passthrough (today's uncompressed commit)
+# ---------------------------------------------------------------------------
+
+@register_codec("identity", "reference")
+def _identity(*, interpret=None) -> Codec:
+    def init(params):
+        return ()
+
+    def encode(u, state):
+        return u, state  # exact passthrough: bit-parity with no transport
+
+    def decode(enc, like=None):
+        return enc
+
+    return Codec("identity", "reference", init, encode, decode)
+
+
+# ---------------------------------------------------------------------------
+# int8 — symmetric per-leaf quantization (4× over f32)
+# ---------------------------------------------------------------------------
+
+def _int8_scale(e):
+    amax = jnp.max(jnp.abs(e))
+    return jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+
+
+def _is_int8_payload(x):
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def _int8_decode_leaf(p):
+    return p["q"].astype(jnp.float32) * p["scale"]
+
+
+def _make_int8(enc_leaf, backend) -> Codec:
+    def encode(u, state):
+        return _zip_encode(enc_leaf, u, state)
+
+    def decode(enc, like=None):
+        dense = jax.tree.map(_int8_decode_leaf, enc, is_leaf=_is_int8_payload)
+        return _cast_like(dense, like)
+
+    return Codec("int8", backend, _residual_init, encode, decode)
+
+
+@register_codec("int8", "reference")
+def _int8_reference(*, interpret=None) -> Codec:
+    def enc_leaf(ul, rl):
+        e = ul.astype(jnp.float32) + rl
+        scale = _int8_scale(e)
+        q = jnp.clip(jnp.round(e / scale), -127.0, 127.0).astype(jnp.int8)
+        res = e - q.astype(jnp.float32) * scale
+        return {"q": q, "scale": scale}, res
+
+    return _make_int8(enc_leaf, "reference")
+
+
+@register_codec("int8", "fused")
+def _int8_fused(*, interpret=None) -> Codec:
+    def enc_leaf(ul, rl):
+        e = ul.astype(jnp.float32) + rl
+        scale = _int8_scale(e)  # jnp reduction; the passes below are Pallas
+        q, res = ops.quantize_int8(e, scale, interpret=interpret)
+        return {"q": q, "scale": scale}, res
+
+    def encode(u, state):
+        return _zip_encode(enc_leaf, u, state)
+
+    def decode(enc, like=None):
+        dense = jax.tree.map(
+            lambda p: ops.dequantize_int8(p["q"], p["scale"], interpret=interpret),
+            enc, is_leaf=_is_int8_payload,
+        )
+        return _cast_like(dense, like)
+
+    return Codec("int8", "fused", _residual_init, encode, decode)
+
+
+# ---------------------------------------------------------------------------
+# bf16 — mantissa truncation (2× over f32)
+# ---------------------------------------------------------------------------
+
+def _make_bf16(enc_leaf, backend) -> Codec:
+    def encode(u, state):
+        return _zip_encode(enc_leaf, u, state)
+
+    def decode(enc, like=None):
+        dense = jax.tree.map(lambda q: q.astype(jnp.float32), enc)
+        return _cast_like(dense, like)
+
+    return Codec("bf16", backend, _residual_init, encode, decode)
+
+
+@register_codec("bf16", "reference")
+def _bf16_reference(*, interpret=None) -> Codec:
+    def enc_leaf(ul, rl):
+        e = ul.astype(jnp.float32) + rl
+        q = e.astype(jnp.bfloat16)
+        return q, e - q.astype(jnp.float32)
+
+    return _make_bf16(enc_leaf, "reference")
+
+
+@register_codec("bf16", "fused")
+def _bf16_fused(*, interpret=None) -> Codec:
+    def enc_leaf(ul, rl):
+        e = ul.astype(jnp.float32) + rl
+        q, res = ops.encode_bf16(e, interpret=interpret)
+        return q, res
+
+    return _make_bf16(enc_leaf, "fused")
+
+
+# ---------------------------------------------------------------------------
+# top_k — magnitude sparsification (keep a fraction of the coordinates)
+# ---------------------------------------------------------------------------
+
+def _topk_k(n: int, frac: float) -> int:
+    return max(1, min(n, int(round(frac * n))))
+
+
+def _is_topk_payload(x):
+    return isinstance(x, dict) and set(x) == {"idx", "vals"}
+
+
+@register_codec("top_k", "reference")
+def _topk_reference(*, interpret=None, frac: float = 0.05) -> Codec:
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"top_k frac must be in (0, 1], got {frac}")
+
+    def encode(u, state):
+        def enc_leaf(ul, rl):
+            n = int(np.prod(jnp.shape(ul)))
+            k = _topk_k(n, frac)
+            e = ul.astype(jnp.float32).reshape(-1) + rl.reshape(-1)
+            _, idx = jax.lax.top_k(jnp.abs(e), k)
+            idx = idx.astype(jnp.int32)
+            vals = e[idx]
+            res = e.at[idx].set(0.0).reshape(jnp.shape(ul))
+            return {"idx": idx, "vals": vals}, res
+
+        return _zip_encode(enc_leaf, u, state)
+
+    def decode(enc, like):
+        if like is None:
+            raise ValueError("top_k decode needs `like` for the dense shapes")
+
+        def dec_leaf(p, l):
+            n = int(np.prod(l.shape))
+            dense = jnp.zeros((n,), jnp.float32).at[p["idx"]].set(p["vals"])
+            return dense.reshape(l.shape).astype(l.dtype)
+
+        return jax.tree.map(dec_leaf, enc, like, is_leaf=_is_topk_payload)
+
+    return Codec("top_k", "reference", _residual_init, encode, decode)

@@ -35,3 +35,35 @@ def test_train_state_helpers(tmp_path):
     restored, meta = load_train_state(p, like=state)
     assert meta == {"step": 42, "arch": "granite"}
     np.testing.assert_array_equal(np.asarray(restored.params["w"]), np.ones((4, 4)))
+
+
+def test_save_leaves_no_temp_files(tmp_path):
+    """Atomic save hygiene: after any number of saves only the target
+    exists — np.savez must not leave the mkstemp original behind (it
+    appends '.npz' to paths that lack the suffix)."""
+    tree = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((3,))}}
+    for i in range(3):
+        save_pytree(tmp_path / "ckpt.npz", tree, metadata={"i": i})
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["ckpt.npz"]
+    restored, meta = load_pytree(tmp_path / "ckpt.npz", like=tree)
+    assert meta["i"] == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(8.0))
+
+
+def test_failed_save_cleans_up_and_keeps_previous(tmp_path, monkeypatch):
+    """A crash mid-write must leave no partial temp file and must not
+    clobber the previous checkpoint (temp-file + atomic rename)."""
+    tree = {"a": jnp.arange(4.0)}
+    target = tmp_path / "ckpt.npz"
+    save_pytree(target, tree, metadata={"ok": 1})
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        save_pytree(target, tree, metadata={"ok": 2})
+    monkeypatch.undo()
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["ckpt.npz"]
+    _, meta = load_pytree(target, like=tree)
+    assert meta["ok"] == 1  # previous checkpoint intact

@@ -326,3 +326,62 @@ def test_churn_determinism():
     np.testing.assert_array_equal(r1.losses, r2.losses)
     assert r1.total_steps == r2.total_steps
     assert r1.commit_counts == r2.commit_counts
+
+
+def test_barrier_release_spares_mid_step_joiner():
+    """Barrier + churn regression: when a leave releases the barrier while
+    an elastic joiner is still computing its first step, (a) the veterans
+    are pulled immediately instead of stalling until the joiner commits,
+    and (b) the joiner is NOT pulled — previously every alive worker got
+    a pull_done, zeroing the joiner's update, counting a phantom commit,
+    and double-scheduling its next step."""
+    policy = make_policy("bsp")
+    cfg = SimConfig(base_batch=32)
+    profiles = [WorkerProfile(v=1.0, o=0.2), WorkerProfile(v=1.0, o=0.2),
+                WorkerProfile(v=0.5, o=0.2)]
+    churn = ChurnSchedule([
+        join(1.3, WorkerProfile(v=0.25, o=0.2)),  # slow joiner, step ends 5.3
+        leave(1.5, worker=2),                     # releases the {0,1} barrier
+    ])
+    sim = Simulator(svm_task(3), profiles, policy, cfg, churn=churn)
+    sim.run(3.0)
+    w0, w1 = sim.engine.worker(0), sim.engine.worker(1)
+    joiner = sim.engine.worker(3)
+    # veterans were released at the leave (old code: stalled on the joiner
+    # until t=5.4, so commits would still be 0 here)
+    assert w0.commits == 1 and w1.commits == 1
+    # the joiner kept computing untouched: no phantom commit, no zeroed
+    # update, no second in-flight step
+    assert joiner.status == "computing"
+    assert joiner.steps == 0 and joiner.commits == 0
+    # next round folds the joiner in as a member: the barrier now waits
+    # for it, then everyone (including the joiner) commits exactly once
+    sim.run(3.0)  # t=6: release happened at 5.4
+    assert joiner.steps == 1 and joiner.commits == 1
+    assert w0.commits == 2 and w1.commits == 2
+    assert sim.total_commits == 5  # 2 (first round) + 3 (second round)
+
+
+def test_barrier_churn_no_phantom_commits_long_run():
+    """Commit accounting stays exact under barrier + heavy churn: every
+    reported commit corresponds to an applied update."""
+    policy = make_policy("fixed_adacomm", tau=2)
+    cfg = SimConfig(base_batch=32)
+    profiles = [WorkerProfile(v=1.0, o=0.2), WorkerProfile(v=1.0, o=0.1),
+                WorkerProfile(v=0.5, o=0.4)]
+    churn = ChurnSchedule([
+        join(5.3, WorkerProfile(v=0.4, o=0.3)),
+        leave(9.7, worker=2),
+        join(12.1, WorkerProfile(v=2.0, o=0.1)),
+        leave(14.9, worker=0),
+    ])
+    sim = Simulator(svm_task(3), profiles, policy, cfg, churn=churn)
+    sim.run(60.0)
+    # real pulls only: joiners inherit commit_credit for the rate rule
+    pulled = sum(w.commits - w.commit_credit for w in sim.workers)
+    pulled += sum(w.commits - w.commit_credit for w, _ in sim._departed)
+    # applied-but-not-yet-pulled commits may be in flight at cutoff
+    assert 0 <= sim.total_commits - pulled <= sim.num_workers
+    for w in sim.workers:
+        # a real commit requires a finished real step
+        assert w.commits - w.commit_credit <= w.steps - w.step_credit

@@ -1,0 +1,91 @@
+"""Regression tests for control-plane edge cases (hypothesis-free, so
+they run in the bare container unlike test_reward_search.py):
+
+  * ``pad_probe_samples`` on probe windows shorter than the eval interval
+    (0/1 samples, zero time span) — previously IndexError / duplicate
+    time points that degenerate the reward slope fit;
+  * ``log_slope_reward`` on those degenerate windows;
+  * ``LegacyPolicyAdapter.fraction_for`` with a dead worker id —
+    previously a bare StopIteration.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.reward import log_slope_reward
+from repro.core.search import pad_probe_samples
+
+
+def test_pad_probe_samples_normal_cases_unchanged():
+    # ≥3 samples pass through untouched
+    ts, ls = pad_probe_samples([0.0, 1.0, 2.0], [3.0, 2.0, 1.0])
+    assert ts == [0.0, 1.0, 2.0] and ls == [3.0, 2.0, 1.0]
+    # 2 distinct samples gain the midpoint (the original contract)
+    ts, ls = pad_probe_samples([0.0, 2.0], [4.0, 2.0])
+    assert ts == [0.0, 1.0, 2.0] and ls == [4.0, 3.0, 2.0]
+
+
+def test_pad_probe_samples_empty_window():
+    assert pad_probe_samples([], []) == ([], [])
+
+
+def test_pad_probe_samples_single_sample():
+    """One observation (window shorter than eval_interval): a synthetic
+    flat window with distinct times — no duplicate (t, loss) points."""
+    ts, ls = pad_probe_samples([7.0], [1.5])
+    assert len(ts) == 3 and len(set(ts)) == 3
+    assert ls == [1.5, 1.5, 1.5]
+    assert ts[0] == 7.0 and ts[-1] > ts[0]
+
+
+def test_pad_probe_samples_zero_time_span():
+    """Two evals at the same instant (converged mid-window) must not
+    produce three identical time points."""
+    ts, ls = pad_probe_samples([5.0, 5.0], [1.2, 1.1])
+    assert len(set(ts)) == 3
+    assert all(l == 1.1 for l in ls)  # the last observation wins
+
+
+def test_pad_probe_samples_does_not_mutate_inputs():
+    ts_in, ls_in = [0.0, 2.0], [4.0, 2.0]
+    pad_probe_samples(ts_in, ls_in)
+    assert ts_in == [0.0, 2.0] and ls_in == [4.0, 2.0]
+
+
+@pytest.mark.parametrize("ts,ls", [
+    ([], []),
+    ([7.0], [1.5]),
+    ([5.0, 5.0, 5.0], [1.0, 1.0, 1.0]),
+])
+def test_log_slope_reward_degenerate_windows_return_zero(ts, ls):
+    assert log_slope_reward(ts, ls) == 0.0
+
+
+def test_log_slope_reward_padded_degenerate_pipeline():
+    """End to end: degenerate window → pad → finite reward (flat ⇒ 0)."""
+    for raw in ([3.0], [3.0, 3.0]):
+        ts, ls = pad_probe_samples(list(np.arange(len(raw), dtype=float) * 0.0 + 2.0),
+                                   list(raw))
+        r = log_slope_reward(ts, ls)
+        assert np.isfinite(r) and r == pytest.approx(0.0, abs=1e-12)
+
+
+def test_legacy_fraction_for_dead_worker_raises_keyerror():
+    from repro.cluster.engine import LegacyPolicyAdapter
+
+    class OldStyle:
+        name = "legacy"
+        apply_mode = "immediate"
+
+        def should_commit(self, view, w):
+            return True
+
+        def batch_fraction(self, view, pos):
+            return 1.0
+
+    class View:
+        workers = []
+
+    adapter = LegacyPolicyAdapter(OldStyle())
+    with pytest.raises(KeyError, match="no alive worker"):
+        adapter.fraction_for(View(), 42)
