@@ -1,0 +1,80 @@
+"""Sharded-PS benchmark: pull bytes and convergence time vs shard count K
+on a link-bound fleet (DESIGN.md §11).
+
+One ADSP run per K, identical task/fleet/policy/seed. K=1 is the
+monolithic PS (bit-identical to the pre-sharding stack): every pull
+ships the full dense model. K>1 partitions the model into versioned
+shards — per-shard push payloads pipeline FIFO over each worker's link
+and pulls fetch only shards whose PS version moved past the worker's
+local copy, so ``bytes_from_ps`` shrinks while convergence time stays
+equal or improves (stale shards ship sooner, fresh shards don't ship at
+all). Push bytes (``bytes_to_ps``) are invariant in K: every built-in
+codec is leaf-wise, so the per-shard encodes partition the lumped one.
+
+These rows are the CI smoke gate for the sharding layer.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.cluster import make_policy
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles, with_links
+from repro.edgesim.tasks import cnn_task
+from repro.transport import dense_nbytes
+
+from .common import GAMMA, row
+
+
+def _shard_rows(full: bool) -> list[str]:
+    m = 3
+    target = 0.75
+    max_seconds = 4000.0
+    shard_counts = (1, 2, 4, 8, 16) if full else (1, 2, 4, 8)
+    rows = []
+    baseline_pull = baseline_per_commit = None
+    for k in shard_counts:
+        task = cnn_task(m, width=8)
+        # strongly link-bound: a dense transfer costs ~8 virtual seconds
+        # (40× the fixed o/2) — the regime where pull time is the dominant
+        # commit cost and partial pulls pay off directly
+        dense = dense_nbytes(task.init_params)
+        profiles = with_links(
+            ratio_profiles((1,) * (m - 1) + (3,), base_v=1.0, o=0.2),
+            bandwidth=dense / 16.0, latency=0.01,
+        )
+        cfg = SimConfig(gamma=GAMMA, epoch_seconds=200.0, base_batch=32,
+                        target_loss=target, max_seconds=max_seconds,
+                        local_lr=0.05, eval_interval=2.0)
+        t0 = time.time()
+        sim = Simulator(
+            task, profiles, make_policy("adsp", search=False, gamma=GAMMA),
+            cfg, codec="identity", n_shards=k,
+        )
+        res = sim.train()
+        wall = time.time() - t0
+        per_commit = res.bytes_from_ps / max(res.total_commits, 1)
+        if k == 1:
+            baseline_pull = res.bytes_from_ps
+            baseline_per_commit = per_commit
+        rows.append(row(
+            f"shards/K{k}", wall, max(res.elapsed, 1e-9),
+            n_shards=sim.n_shards,
+            bytes_from_ps=res.bytes_from_ps,
+            bytes_to_ps=res.bytes_to_ps,
+            pull_ratio=(res.bytes_from_ps / baseline_pull
+                        if baseline_pull else float("nan")),
+            pull_per_commit_ratio=(per_commit / baseline_per_commit
+                                   if baseline_per_commit else float("nan")),
+            t_conv=res.convergence_time if res.converged else float("inf"),
+            converged=int(res.converged),
+            final_loss=float(res.losses[-1]),
+            commits=res.total_commits,
+            waiting_frac=res.waiting_fraction,
+        ))
+    return rows
+
+
+def main(full: bool = False) -> list[str]:
+    return _shard_rows(full)

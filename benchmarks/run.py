@@ -25,6 +25,7 @@ MODULES = [
     "appendix_extras",
     "bench_kernels",
     "bench_transport",
+    "bench_shards",
     "roofline_table",
 ]
 

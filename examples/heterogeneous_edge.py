@@ -16,8 +16,13 @@ costs O_i/2 + latency + bytes/bandwidth, and ``bytes_to_ps`` is measured
 on the wire — the bandwidth-constrained-fleet scenario where the
 straggler is the link, not the chip.
 
+With ``--ps-shards K`` (K > 1) the PS is shard-partitioned (DESIGN.md
+§11): per-shard payloads pipeline FIFO over each worker's link and pulls
+fetch only shards whose PS version moved — ``bytes_from_ps`` shrinks on
+constrained links at equal-or-better convergence time.
+
     PYTHONPATH=src python examples/heterogeneous_edge.py [--workers 8] [--churn] \
-        [--codec int8] [--bandwidth-kbps 64] [--link-latency 0.05]
+        [--codec int8] [--bandwidth-kbps 64] [--link-latency 0.05] [--ps-shards 4]
 """
 
 import argparse
@@ -28,6 +33,7 @@ from repro.core.theory import WorkerProfile, heterogeneity_degree
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ec2_profiles, with_links
 from repro.edgesim.tasks import cnn_task
+from repro.ps import add_shard_args
 from repro.transport import add_codec_args, codec_from_args
 
 
@@ -47,6 +53,7 @@ def main():
     p.add_argument("--churn", action="store_true",
                    help="elastic scenario: worker crash / join / slowdown")
     add_codec_args(p)  # --codec / --codec-backend / --topk-frac
+    add_shard_args(p)  # --ps-shards (K versioned PS shards, partial pulls)
     p.add_argument("--bandwidth-kbps", type=float, default=0.0,
                    help="uplink/downlink kilobits/s per worker (0 = unconstrained)")
     p.add_argument("--link-latency", type=float, default=0.0,
@@ -75,13 +82,14 @@ def main():
     ]:
         churn = churn_schedule(profiles) if args.churn else None
         sim = Simulator(task, profiles, make_policy(name, **kw), cfg,
-                        churn=churn, codec=codec)
+                        churn=churn, codec=codec, n_shards=args.ps_shards)
         res = sim.train()
         results[name] = res
         print(f"{name:16s} t_conv={res.convergence_time:8.1f}s "
               f"steps={res.total_steps} commits={res.total_commits} "
               f"waiting={100*res.waiting_fraction:.1f}% cc={res.commit_counts} "
-              f"bytes_to_ps={res.bytes_to_ps/1e6:.2f}MB")
+              f"bytes_to_ps={res.bytes_to_ps/1e6:.2f}MB "
+              f"bytes_from_ps={res.bytes_from_ps/1e6:.2f}MB")
         if name == "adsp":
             for i, tr in enumerate(sim.policy.traces):
                 print(f"  search epoch {i}: candidates={tr.candidates} -> {tr.chosen}")

@@ -30,7 +30,13 @@ from repro.core.jaxcompat import use_mesh
 from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
-from repro.ps import CommitConfig, add_rule_args, make_train_step, rules_from_args
+from repro.ps import (
+    CommitConfig,
+    add_rule_args,
+    add_shard_args,
+    make_train_step,
+    rules_from_args,
+)
 from repro.transport import add_codec_args, codec_from_args
 
 
@@ -53,6 +59,7 @@ def main():
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
     add_codec_args(p)
+    add_shard_args(p)
     args = p.parse_args()
 
     cfg = make_100m_config()
@@ -60,11 +67,12 @@ def main():
     codec = codec_from_args(args)
     print(f"# {cfg.name}: {cfg.total_params()/1e6:.1f}M params, "
           f"tau={args.tau}, seq={args.seq}, batch={args.batch}, "
-          f"rules={args.local_rule}+{args.commit_rule}, codec={codec.name}")
+          f"rules={args.local_rule}+{args.commit_rule}, codec={codec.name}, "
+          f"ps_shards={args.ps_shards}")
 
     mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
     ccfg = CommitConfig(tau=args.tau, local_lr=args.local_lr, global_lr=1.0,
-                        worker_axes=("data",))
+                        worker_axes=("data",), n_shards=args.ps_shards)
 
     def loss_fn(params, mb):
         return lm.lm_loss(cfg, params, mb, remat=False)

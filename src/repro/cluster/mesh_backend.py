@@ -90,6 +90,7 @@ class MeshBackend:
         rules: UpdateRules | None = None,
         explicit_momentum: float = 0.0,
         codec: str | Codec | None = None,
+        n_shards: int = 1,
     ):
         self.task = task
         self.mesh = mesh
@@ -111,6 +112,7 @@ class MeshBackend:
         ccfg = CommitConfig(
             tau=tau, local_lr=local_lr, global_lr=global_lr,
             worker_axes=worker_axes, commit_dtype=commit_dtype,
+            n_shards=n_shards,
         )
         codec = get_codec(codec) if isinstance(codec, str) else codec
         step = make_train_step(
@@ -124,6 +126,10 @@ class MeshBackend:
         self.codec = step.codec
         self.step_fn = jax.jit(step)
         self.state = step.init(task.init_params)
+        # effective shard count: the plan clamps to the leaf count, and
+        # the state's version vector is the ground truth for what ran
+        versions = jax.tree.leaves(self.state.shard_versions)
+        self.n_shards = int(versions[0].shape[0]) if versions else 1
         # Wire accounting: bytes each commit round moves worker→PS (every
         # worker ships one encoded update per round). Measured from the
         # codec's static payload size; the identity/no-codec round ships

@@ -115,6 +115,11 @@ class AdaComm(FixedAdaComm):
 
     def on_started(self, view) -> list[Command]:
         self.tau = self.tau0
+        # a restarted policy must not reuse the previous run's loss
+        # baseline — the τ ∝ sqrt(loss/loss0) schedule would be anchored
+        # to stale (often lower) losses and over-commit from step one
+        self._loss0 = math.nan
+        self._last_loss = math.nan
         return super().on_started(view)
 
     def on_checkpoint(self, view) -> list[Command]:
@@ -248,9 +253,11 @@ class ADSPPlus(ADSP):
     tau_cap: tuple = ()  # per-worker max local steps between commits
 
     def wants_commit(self, view, w) -> bool:
-        if self.tau_cap:
-            cap = self.tau_cap[w.index]
-            if w.steps_since_commit >= cap:
+        # tau_cap is indexed by stable worker id, which is only dense for
+        # the initial fleet — an elastically joined worker (id ≥ len) has
+        # no offline-grid entry, so it runs uncapped (plain ADSP timers)
+        if self.tau_cap and w.index < len(self.tau_cap):
+            if w.steps_since_commit >= self.tau_cap[w.index]:
                 return True
         return view.now >= w.next_commit_time
 
@@ -263,8 +270,13 @@ class ADSPPlus(ADSP):
 def _speed_fraction(view, index: int) -> float:
     """Batch share ∝ v_i over the currently alive fleet."""
     total = float(np.sum([ws.profile.v for ws in view.workers]))
-    me = next(ws for ws in view.workers if ws.index == index)
-    return float(me.profile.v) / total
+    for ws in view.workers:
+        if ws.index == index:
+            return float(ws.profile.v) / total
+    # a bare next(...) here would raise StopIteration, which silently
+    # terminates any generator the caller runs inside (same bug class as
+    # LegacyPolicyAdapter.fraction_for)
+    raise KeyError(f"no alive worker with id {index}")
 
 
 @dataclasses.dataclass

@@ -20,8 +20,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Protocol, Sequence
 
-import numpy as np
-
 from .reward import log_slope_reward, reward
 
 __all__ = ["OnlineSystem", "SearchTrace", "decide_commit_rate", "Scheduler",
@@ -115,12 +113,6 @@ def decide_commit_rate(
     if not trace.rewards:  # max_probes == 1
         trace.rewards.append(log_slope_reward(t1, l1))
     return c_target, trace
-
-
-def _shared_ref(losses: Sequence[float]) -> float:
-    l = np.asarray(losses, dtype=np.float64)
-    drop = max(float(l[0] - l.min()), 1e-6)
-    return float(l.min() - 0.1 * drop)
 
 
 @dataclasses.dataclass

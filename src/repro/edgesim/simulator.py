@@ -20,6 +20,22 @@ Semantics (matching the paper's testbed + Alg. 2):
   the fixed ``O_i/2 + O_i/2`` commit cost of the original model, and
   ``bytes_to_ps`` is *measured* from encoded payload sizes instead of
   the old ``4 · |params| · commits`` proxy.
+* **Sharded PS** (``n_shards`` > 1, DESIGN.md §11): the model pytree is
+  partitioned into K size-balanced shards by the deterministic
+  ``repro.ps.ShardPlan``. A commit's per-shard payloads are serialized
+  FIFO on the worker's link — shard j's transfer starts when shard j−1's
+  finishes, so the PS applies early shards while later ones are still in
+  flight — and each applied shard bumps a per-shard PS version counter.
+  Pulls are *partial*: the worker fetches only shards whose PS version
+  exceeds the version its local copy reflects. A worker's own applied
+  shard does not stale its copy when no other writer interleaved (it
+  knows its own decoded payload, so it tracks the PS for free), and a
+  shard another worker is still mid-push with is not yet stale — on a
+  link-bound fleet both effects shrink pull bytes (``bytes_from_ps``).
+  The pull still teleports the PS state as of pull *completion* (the
+  pre-sharding simplification); stale-set bytes are assessed at pull
+  schedule time. ``n_shards=1`` (default) runs the exact pre-sharding
+  monolithic code path — bit-identical timing and byte accounting.
 * The *waiting time* of a worker is everything that is not computation:
   waiting_i = active − steps_i · step_time_i  (the paper's definition —
   communication counts as waiting).
@@ -58,6 +74,7 @@ import numpy as np
 
 from repro.cluster import ChurnSchedule, ClusterEngine
 from repro.core.theory import WorkerProfile
+from repro.ps.sharding import ShardPlan
 from repro.transport import Codec, dense_nbytes, get_codec
 
 __all__ = ["TrainTask", "SimConfig", "WorkerState", "Simulator", "SimResult"]
@@ -127,6 +144,10 @@ class WorkerState:
     status: str = "idle"  # idle | computing | committing | awaiting_release | blocked
     residual: Pytree = ()  # codec error-feedback state (rule-owned)
     pending_commit: Pytree = None  # encoded payload of the in-flight commit
+    # sharded PS (n_shards > 1) bookkeeping: the in-flight per-shard
+    # payloads, and the PS version each local shard copy reflects
+    pending_shards: list | None = None
+    shard_known: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -142,6 +163,9 @@ class SimResult:
     computation_time: float  # summed over workers (incl. departed)
     waiting_time: float  # summed over workers (active − computation)
     bytes_to_ps: float  # measured: Σ encoded payload bytes over all commits
+    # measured PS→worker pull bytes; with a sharded PS only stale shards
+    # ship, so this shrinks with K (the monolithic PS always pulls dense)
+    bytes_from_ps: float = 0.0
     commit_counts: list[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -156,7 +180,8 @@ class Simulator:
     def __init__(self, task: TrainTask, profiles: Sequence[WorkerProfile],
                  policy, config: SimConfig | None = None,
                  churn: ChurnSchedule | None = None,
-                 codec: str | Codec = "identity"):
+                 codec: str | Codec = "identity",
+                 n_shards: int = 1):
         self.task = task
         self.cfg = config or SimConfig()
         self.churn = churn
@@ -179,9 +204,27 @@ class Simulator:
         self._enc_nbytes = self.codec.encoded_nbytes(task.init_params)
         self._pull_nbytes = dense_nbytes(task.init_params)
         self._bytes_to_ps = 0
+        self._bytes_from_ps = 0
+        # sharded PS (n_shards > 1): per-shard payload sizes + versions ----
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.plan = ShardPlan.build(task.init_params, n_shards)
+        self.n_shards = self.plan.n_shards
+        self._params_treedef = jax.tree.structure(task.init_params)
+        self._res_sliceable = (
+            jax.tree.structure(self._zero_residual) == self._params_treedef
+        )
+        if self.n_shards > 1:
+            self._shard_enc_nbytes = [
+                self.codec.encoded_nbytes(self.plan.slice(task.init_params, k))
+                for k in range(self.n_shards)
+            ]
+            self._shard_pull_nbytes = list(self.plan.shard_nbytes())
+            self._ps_version = [0] * self.n_shards
         self.workers = [
             WorkerState(next(self._next_id), p, task.init_params, self._zero,
-                        residual=self._zero_residual)
+                        residual=self._zero_residual,
+                        shard_known=[0] * self.n_shards)
             for p in profiles
         ]
         self._by_id = {w.index: w for w in self.workers}
@@ -250,7 +293,9 @@ class Simulator:
         model with an empty update buffer."""
         w = WorkerState(next(self._next_id), profile, self.global_params,
                         self._zero, joined_at=self.now,
-                        residual=self._zero_residual)
+                        residual=self._zero_residual,
+                        shard_known=(list(self._ps_version)
+                                     if self.n_shards > 1 else [0]))
         self.workers.append(w)
         self._by_id[w.index] = w
         self._refresh_global_lr()
@@ -260,7 +305,12 @@ class Simulator:
 
     def remove_worker(self, index: int) -> None:
         """Elastic scale-in: drop the worker; its in-flight update is
-        discarded (crash semantics — ADSP tolerates it, §6)."""
+        discarded (crash semantics — ADSP tolerates it, §6). Under a
+        sharded PS (immediate mode) each shard apply is atomic at the PS,
+        so a crash mid-push keeps the shards that already arrived (their
+        wire bytes booked) and loses only the rest — the counted-commit
+        ≡ enc_bytes correspondence holds per *shard*, not per commit,
+        in churn runs."""
         w = self._by_id.get(index)
         if w is None:
             raise KeyError(f"no alive worker with id {index}")
@@ -290,8 +340,8 @@ class Simulator:
             self.set_speed(act.worker, act.v)
 
     # ------------------------------------------------------------------ events
-    def _push(self, t: float, kind: str, wid: int) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, wid))
+    def _push(self, t: float, kind: str, wid: int, arg: int | None = None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, wid, arg))
 
     def _step_time(self, w: WorkerState) -> float:
         frac = self.engine.batch_fraction(w)
@@ -327,13 +377,16 @@ class Simulator:
         w.update = self._accum(w.update, grads, self._local_lr)
         if self.engine.step_done(w):
             w.status = "committing"
-            # Encode at the worker: the codec compresses U (folding in the
-            # error-feedback residual) and the push moves only the encoded
-            # payload over this worker's link.
-            w.pending_commit, w.residual = self._encode(w.update, w.residual)
-            push = self._push_seconds(w)
-            w.comm_time += push + self._pull_seconds(w)
-            self._push(self.now + push, "commit_arrive", w.index)
+            if self.n_shards > 1:
+                self._start_sharded_push(w)
+            else:
+                # Encode at the worker: the codec compresses U (folding in
+                # the error-feedback residual) and the push moves only the
+                # encoded payload over this worker's link.
+                w.pending_commit, w.residual = self._encode(w.update, w.residual)
+                push = self._push_seconds(w)
+                w.comm_time += push + self._pull_seconds(w)
+                self._push(self.now + push, "commit_arrive", w.index)
         else:
             self._start_step(w)
 
@@ -346,6 +399,90 @@ class Simulator:
         """PS → worker: fixed overhead + dense fresh params over the link."""
         return w.profile.o / 2.0 + w.profile.transfer_seconds(self._pull_nbytes)
 
+    # ------------------------------------------------- sharded PS (K > 1)
+    def _encode_shards(self, w: WorkerState) -> list:
+        """Per-shard encode of ``w.update``, threading the error-feedback
+        residual shard-wise (the residual partitions leaf-for-leaf with
+        the params for every lossy codec; leafless residuals — identity —
+        pass through whole)."""
+        encs = []
+        if self._res_sliceable:
+            res_leaves = list(jax.tree.leaves(w.residual))
+            for k in range(self.n_shards):
+                idx = self.plan.shard_leaf_indices(k)
+                enc, new_res = self._encode(
+                    self.plan.slice(w.update, k), [res_leaves[i] for i in idx]
+                )
+                for i, leaf in zip(idx, new_res):
+                    res_leaves[i] = leaf
+                encs.append(enc)
+            w.residual = jax.tree.unflatten(self._params_treedef, res_leaves)
+        else:
+            res = w.residual
+            for k in range(self.n_shards):
+                enc, res = self._encode(self.plan.slice(w.update, k), res)
+                encs.append(enc)
+            w.residual = res
+        return encs
+
+    def _start_sharded_push(self, w: WorkerState) -> None:
+        """Serialize the K per-shard payloads FIFO on the worker's link:
+        shard j's transfer starts when shard j−1's finishes, each arrival
+        lands one propagation latency after its transfer completes. The
+        fixed O_i/2 protocol overhead is paid once per commit, so K=1
+        reproduces the lumped ``_push_seconds`` exactly."""
+        w.pending_shards = self._encode_shards(w)
+        base = self.now + w.profile.o / 2.0
+        t = 0.0
+        for k in range(self.n_shards):
+            t += self._shard_enc_nbytes[k] / w.profile.bandwidth
+            self._push(base + t + w.profile.latency, "shard_arrive", w.index, k)
+        # push time charged now; the (partial) pull is charged when its
+        # stale set — unknowable until the last shard lands — is assessed
+        w.comm_time += w.profile.o / 2.0 + t + w.profile.latency
+
+    def _apply_shard(self, w: WorkerState, k: int) -> None:
+        """PS-side apply of one arrived shard payload: decode, update the
+        shard's leaves, bump its version. The committing worker keeps
+        tracking a shard it was current on (it knows its own decoded
+        payload), so its own commit never forces a re-fetch of shards no
+        other writer touched in between."""
+        like = self.plan.slice(self.global_params, k)
+        u = self._decode(w.pending_shards[k], like)
+        new_leaves = self._apply_commit(like, u, self.global_lr)
+        self.global_params = self.plan.merge(self.global_params, k, new_leaves)
+        was_current = w.shard_known[k] == self._ps_version[k]
+        self._ps_version[k] += 1
+        if was_current:
+            w.shard_known[k] = self._ps_version[k]
+        self._bytes_to_ps += self._shard_enc_nbytes[k]
+
+    def _schedule_partial_pull(self, w: WorkerState) -> None:
+        """Pull only the shards whose PS version moved past the worker's
+        local copy; the fixed O_i/2 + latency round trip (learning the
+        version vector) is paid even when nothing is stale."""
+        stale = [k for k in range(self.n_shards)
+                 if self._ps_version[k] > w.shard_known[k]]
+        nbytes = sum(self._shard_pull_nbytes[k] for k in stale)
+        dur = w.profile.o / 2.0 + w.profile.transfer_seconds(nbytes)
+        w.comm_time += dur
+        self._bytes_from_ps += nbytes
+        self._push(self.now + dur, "pull_done", w.index)
+
+    def _on_shard_arrive(self, w: WorkerState, k: int) -> None:
+        if self.engine.policy.apply_mode == "barrier":
+            # shards accumulate at the PS but apply only at the release
+            if k == self.n_shards - 1:
+                self._barrier_buf[w.index] = w.pending_shards
+                w.status = "awaiting_release"
+                self._maybe_release_barrier()
+            return
+        self._apply_shard(w, k)
+        if k == self.n_shards - 1:
+            self.total_commits += 1
+            w.pending_shards = None
+            self._schedule_partial_pull(w)
+
     def _on_commit_arrive(self, w: WorkerState) -> None:
         if self.engine.policy.apply_mode == "barrier":
             self._barrier_buf[w.index] = w.pending_commit
@@ -353,6 +490,7 @@ class Simulator:
             self._maybe_release_barrier()
         else:
             self._do_apply(w)
+            self._bytes_from_ps += self._pull_nbytes
             self._push(self.now + self._pull_seconds(w), "pull_done", w.index)
 
     def _maybe_release_barrier(self) -> None:
@@ -376,13 +514,24 @@ class Simulator:
         self._barrier_buf.clear()
         for ww in self.workers:
             if ww.index in pulled:
-                self._push(self.now + self._pull_seconds(ww), "pull_done", ww.index)
+                if self.n_shards > 1:
+                    self._schedule_partial_pull(ww)
+                else:
+                    self._bytes_from_ps += self._pull_nbytes
+                    self._push(self.now + self._pull_seconds(ww), "pull_done",
+                               ww.index)
         self._round_members = set(self._by_id)
 
     def _do_apply(self, w: WorkerState) -> None:
         # Decode at the PS: the encoded payload becomes a dense update.
         # Wire bytes are booked per *applied* commit (matching the commit
         # counter; an in-flight payload at run end is not reported).
+        if self.n_shards > 1:  # barrier release of a complete sharded commit
+            for k in range(self.n_shards):
+                self._apply_shard(w, k)
+            self.total_commits += 1
+            w.pending_shards = None
+            return
         u = self._decode(w.pending_commit, self.global_params)
         self.global_params = self._apply_commit(
             self.global_params, u, self.global_lr
@@ -395,6 +544,10 @@ class Simulator:
         w.update = self._zero
         w.steps_since_commit = 0
         w.commits += 1
+        if self.n_shards > 1:
+            # the pull teleports the PS state as of completion, so the
+            # local copy now reflects every shard's current version
+            w.shard_known = list(self._ps_version)
         self.engine.commit_applied(w)
         self._start_step(w)
 
@@ -434,7 +587,7 @@ class Simulator:
             if t > t_end:
                 self.now = t_end
                 return
-            t, _, kind, wid = heapq.heappop(self._heap)
+            t, _, kind, wid, arg = heapq.heappop(self._heap)
             w = self._by_id.get(wid)
             if w is None:  # event of a departed worker
                 continue
@@ -443,6 +596,8 @@ class Simulator:
                 self._on_step_done(w)
             elif kind == "commit_arrive":
                 self._on_commit_arrive(w)
+            elif kind == "shard_arrive":
+                self._on_shard_arrive(w, arg)
             elif kind == "pull_done":
                 self._on_pull_done(w)
         self.now = min(t_end, self.now) if self._heap else t_end
@@ -546,6 +701,7 @@ class Simulator:
             # measured on the wire: Σ encoded payload bytes (== the old
             # 4·|params|·commits proxy for the identity codec on f32 tasks)
             bytes_to_ps=float(self._bytes_to_ps),
+            bytes_from_ps=float(self._bytes_from_ps),
             # real commits only — elastic joiners' ramp-in credit (used by
             # the rate rule) is subtracted for reporting
             commit_counts=[w.commits - w.commit_credit for w in self.workers],

@@ -77,6 +77,7 @@ def build_train_step(
     rule_backend: str | None = None,
     local_hp: dict | None = None,
     codec: str | None = None,
+    n_shards: int = 1,
 ) -> StepBundle:
     spec = S.SHAPES[shape]
     granularity = granularity or cfg.adsp_granularity
@@ -86,6 +87,7 @@ def build_train_step(
     ccfg = CommitConfig(
         tau=tau, local_lr=local_lr, global_lr=global_lr,
         worker_axes=worker_axes, commit_dtype=commit_dtype,
+        n_shards=n_shards,
     )
     update_rules = UpdateRules(
         local=local_rule, commit=commit_rule, backend=rule_backend,
@@ -132,9 +134,11 @@ def build_train_step(
     ) if worker_axes else rep
     lshard = jax.tree.map(lambda _: wshard, state.local_state)
     tshard = jax.tree.map(lambda _: wshard, state.transport_state)
+    # per-shard PS version counters: a tiny int32[K], replicated
+    vshard = jax.tree.map(lambda _: rep, state.shard_versions)
     state_shard = AdspState(params=pshard, commit_state=cshard,
                             local_state=lshard, step=rep,
-                            transport_state=tshard)
+                            transport_state=tshard, shard_versions=vshard)
     batch = S.abstract_train_batch(cfg, spec, tau)
     bshard = S.batch_shardings(cfg, mesh, batch, batch_dim=1)
     tau_arr = jax.ShapeDtypeStruct((n_workers,), jnp.int32)
@@ -150,7 +154,8 @@ def build_train_step(
                     n_workers=n_workers,
                     local_rule=step.rules[0].name, commit_rule=step.rules[1].name,
                     rule_backend=step.rules[1].backend,
-                    codec=step.codec.name if step.codec is not None else None),
+                    codec=step.codec.name if step.codec is not None else None,
+                    n_shards=step.n_shards),
     )
 
 
@@ -212,7 +217,9 @@ def build(cfg: ModelConfig, mesh, shape: str, **kw) -> StepBundle:
         return build_train_step(cfg, mesh, shape, **kw)
     if kind == "prefill":
         kw.pop("tau", None)
+        kw.pop("n_shards", None)
         return build_prefill_step(cfg, mesh, shape, **kw)
     kw.pop("tau", None)
+    kw.pop("n_shards", None)
     kw.pop("attn_impl", None)
     return build_serve_step(cfg, mesh, shape, **kw)

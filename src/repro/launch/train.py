@@ -17,6 +17,10 @@ Commit transport: ``--codec {identity,int8,bf16,top_k}`` compresses the
 per-commit update payload through ``repro.transport`` (with error
 feedback; ``--codec-backend fused`` routes encode/decode through the
 Pallas kernels); the header line reports the measured MB/round to the PS.
+``--ps-shards K`` partitions the PS into K versioned shards (DESIGN.md
+§11): the commit applies shard by shard per the deterministic ShardPlan
+and the state carries per-shard version counters; 1 (default) is the
+monolithic PS, bit-identical to the unsharded stack.
 """
 
 from __future__ import annotations
@@ -37,7 +41,7 @@ from repro.core.theory import WorkerProfile
 from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
-from repro.ps import UpdateRules, add_rule_args, rules_from_args
+from repro.ps import UpdateRules, add_rule_args, add_shard_args, rules_from_args
 from repro.transport import add_codec_args, codec_from_args
 
 __all__ = ["build_mesh_task", "make_trainer", "main"]
@@ -69,6 +73,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
                  speeds=None,
                  update_rules: UpdateRules | None = None,
                  codec=None,
+                 n_shards: int = 1,
                  ) -> tuple[MeshBackend, ClusterEngine, ADSP]:
     """Build the (backend, engine, policy) triple for an arch on a mesh."""
     from repro.launch.mesh import worker_axes_for
@@ -89,7 +94,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
     backend = MeshBackend(
         task, mesh, worker_axes=worker_axes, tau=tau,
         local_lr=local_lr, global_lr=global_lr, profiles=profiles,
-        rules=update_rules, codec=codec,
+        rules=update_rules, codec=codec, n_shards=n_shards,
     )
     policy = ADSP(
         gamma=gamma_rounds, search=bool(search_every),
@@ -117,6 +122,7 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
     add_codec_args(p)
+    add_shard_args(p)
     args = p.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -128,13 +134,14 @@ def main(argv=None):
         cfg, mesh, tau=args.tau, seq=args.seq, batch=args.batch,
         local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
         gamma_rounds=args.gamma_rounds, search_every=args.search_every,
-        update_rules=rules, codec=codec,
+        update_rules=rules, codec=codec, n_shards=args.ps_shards,
     )
     lr_rule, cr_rule = backend.rules
     print(f"# arch={cfg.name} params={cfg.total_params()/1e6:.1f}M "
           f"workers={len(backend.workers)} tau={args.tau} "
           f"rules={lr_rule.name}+{cr_rule.name}[{cr_rule.backend}] "
           f"codec={backend.codec.name}[{backend.codec.backend}] "
+          f"ps_shards={backend.n_shards} "
           f"({backend.bytes_per_round/1e6:.2f} MB/round to PS)")
     t0 = time.time()
 

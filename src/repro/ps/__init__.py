@@ -8,10 +8,15 @@ Public surface:
     (``get_local_rule``/``get_commit_rule``/``register_*``);
   * ``UpdateRules`` — the (local, commit, backend) bundle callers pass;
   * ``CommitConfig`` / ``AdspState`` / ``effective_momentum`` — commit
-    behaviour and rule-owned training state.
+    behaviour and rule-owned training state;
+  * ``ShardPlan`` — the deterministic leaf→shard partition behind the
+    sharded PS (DESIGN.md §11): per-shard commit apply in the train
+    step, per-shard versions on ``AdspState``, pipelined per-shard
+    push/pull in the edge simulator.
 """
 
-from .cli import add_rule_args, rules_from_args
+from .cli import add_rule_args, add_shard_args, rules_from_args
+from .sharding import ShardPlan
 from .rules import (
     CommitRule,
     LocalRule,
@@ -26,7 +31,12 @@ from .rules import (
     rule_backends,
 )
 from .state import AdspState, CommitConfig, effective_momentum
-from .train_step import make_local_update, make_train_step, worker_axes_for
+from .train_step import (
+    make_local_update,
+    make_sharded_apply,
+    make_train_step,
+    worker_axes_for,
+)
 
 # importing these registers the built-in rules
 from . import commit_rules as _commit_rules  # noqa: F401
@@ -35,7 +45,9 @@ from . import local as _local  # noqa: F401
 __all__ = [
     "AdspState",
     "CommitConfig",
+    "ShardPlan",
     "add_rule_args",
+    "add_shard_args",
     "rules_from_args",
     "CommitRule",
     "LocalRule",
@@ -46,6 +58,7 @@ __all__ = [
     "get_local_rule",
     "local_rule_names",
     "make_local_update",
+    "make_sharded_apply",
     "make_train_step",
     "register_commit_rule",
     "register_local_rule",

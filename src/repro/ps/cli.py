@@ -1,7 +1,8 @@
 """Shared argparse plumbing for rule selection — one definition of the
 ``--local-rule``/``--commit-rule``/``--rule-backend``/``--local-opt-lr``
 flags for every entry point (``repro.launch.train``, examples), so new
-rules or hyperparameters land everywhere at once."""
+rules or hyperparameters land everywhere at once. ``add_shard_args``
+adds the PS-sharding knob (``--ps-shards``, DESIGN.md §11) the same way."""
 
 from __future__ import annotations
 
@@ -9,7 +10,7 @@ import argparse
 
 from .rules import UpdateRules
 
-__all__ = ["add_rule_args", "rules_from_args"]
+__all__ = ["add_rule_args", "rules_from_args", "add_shard_args"]
 
 
 def add_rule_args(parser: argparse.ArgumentParser) -> None:
@@ -21,6 +22,13 @@ def add_rule_args(parser: argparse.ArgumentParser) -> None:
                         help="reference | fused | auto (fused on TPU)")
     parser.add_argument("--local-opt-lr", type=float, default=None,
                         help="local-rule lr override (adamw defaults to 3e-4)")
+
+
+def add_shard_args(parser: argparse.ArgumentParser) -> None:
+    parser.add_argument("--ps-shards", type=int, default=1,
+                        help="parameter-server shards K (1 = monolithic PS, "
+                             "bit-identical to the unsharded stack; K>1 "
+                             "pipelines per-shard push/pull)")
 
 
 def rules_from_args(args: argparse.Namespace) -> UpdateRules:

@@ -1,0 +1,141 @@
+"""Shard-partitioned parameter server: the ``ShardPlan`` (DESIGN.md §11).
+
+The monolithic PS of the seed moves the whole model on every commit:
+push encodes the full update, pull ships the full dense parameter set,
+so transfer cost scales with model size regardless of how little of the
+model a peer actually needs refreshed. Production PS designs shard the
+parameter space so (a) a commit's per-shard payloads pipeline over the
+worker's link — the PS applies shard j while shard j+1 is still in
+flight — and (b) pulls become *partial*: a worker refreshes only shards
+whose PS version exceeds the version its local copy reflects.
+
+``ShardPlan`` is the one source of truth for that partition: a
+deterministic, size-balanced assignment of the model pytree's leaves to
+K shards. Leaves are the atom (a single giant embedding cannot be
+split), assignment is greedy best-fit by descending byte size with the
+leaf key-path as the tie-breaker — a pure function of the tree's
+shapes/dtypes/structure, so every layer (train step, simulator, mesh
+backend, benchmarks) independently derives the identical plan, and
+abstract ``ShapeDtypeStruct`` trees work as well as concrete ones.
+
+K = 1 degenerates to the monolithic PS: one shard holding every leaf,
+used by callers to keep the unsharded code paths bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["ShardPlan"]
+
+Pytree = Any
+
+
+def _leaf_nbytes(leaf) -> int:
+    shape = getattr(leaf, "shape", ())
+    dtype = getattr(leaf, "dtype", np.dtype(np.float32))
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Deterministic leaf→shard partition of one model pytree.
+
+    Attributes:
+      n_shards: number of shards K (≥ 1; clamped to the leaf count at
+        build time — an empty shard would be a zero-byte no-op message).
+      assignment: shard id per leaf, in pytree-flatten (tree) order.
+      leaf_nbytes: dense byte size per leaf, same order.
+
+    Slicing/merging preserve tree order within a shard, so a K-sharded
+    apply of any leaf-wise rule reproduces the unsharded apply bit for
+    bit — sharding reorganizes transport, never numerics.
+    """
+
+    n_shards: int
+    assignment: tuple[int, ...]
+    leaf_nbytes: tuple[int, ...]
+
+    @classmethod
+    def build(cls, tree: Pytree, n_shards: int) -> "ShardPlan":
+        """Partition ``tree``'s leaves into ``n_shards`` size-balanced
+        shards. Deterministic: greedy best-fit over leaves sorted by
+        (−nbytes, key path); ties in bin load go to the lowest shard id.
+        ``tree`` may be abstract (ShapeDtypeStructs)."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        if not flat:
+            raise ValueError("cannot build a ShardPlan over an empty pytree")
+        paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+        nbytes = [_leaf_nbytes(leaf) for _, leaf in flat]
+        k = min(n_shards, len(flat))
+        order = sorted(range(len(flat)), key=lambda i: (-nbytes[i], paths[i]))
+        # greedy best-fit: each leaf goes to the currently lightest bin
+        bins = [(0, s) for s in range(k)]  # (load, shard id) min-heap
+        heapq.heapify(bins)
+        assignment = [0] * len(flat)
+        for i in order:
+            load, s = heapq.heappop(bins)
+            assignment[i] = s
+            heapq.heappush(bins, (load + nbytes[i], s))
+        return cls(n_shards=k, assignment=tuple(assignment),
+                   leaf_nbytes=tuple(nbytes))
+
+    # ------------------------------------------------------------- derived
+    @property
+    def n_leaves(self) -> int:
+        return len(self.assignment)
+
+    def shard_leaf_indices(self, shard: int) -> tuple[int, ...]:
+        """Leaf positions (tree order) belonging to ``shard``."""
+        self._check_shard(shard)
+        return tuple(i for i, s in enumerate(self.assignment) if s == shard)
+
+    def shard_nbytes(self) -> tuple[int, ...]:
+        """Dense bytes per shard (the pull payload sizes)."""
+        out = [0] * self.n_shards
+        for s, nb in zip(self.assignment, self.leaf_nbytes):
+            out[s] += nb
+        return tuple(out)
+
+    def _check_shard(self, shard: int) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise IndexError(f"shard {shard} out of range [0, {self.n_shards})")
+
+    def _check_tree(self, leaves: Sequence) -> None:
+        if len(leaves) != self.n_leaves:
+            raise ValueError(
+                f"tree has {len(leaves)} leaves but the plan was built over "
+                f"{self.n_leaves}; rebuild the ShardPlan for this tree"
+            )
+
+    # ------------------------------------------------------- slice / merge
+    def slice(self, tree: Pytree, shard: int) -> list:
+        """The sub-pytree of ``tree`` belonging to ``shard``: its leaves
+        in tree order, as a list (lists are pytrees, so leaf-wise rules
+        and codecs consume slices directly)."""
+        self._check_shard(shard)
+        leaves = jax.tree.leaves(tree)
+        self._check_tree(leaves)
+        return [leaves[i] for i in self.shard_leaf_indices(shard)]
+
+    def merge(self, tree: Pytree, shard: int, new_leaves: Sequence) -> Pytree:
+        """``tree`` with ``shard``'s leaves replaced by ``new_leaves``
+        (tree order, as produced by ``slice``)."""
+        self._check_shard(shard)
+        leaves, treedef = jax.tree.flatten(tree)
+        self._check_tree(leaves)
+        idx = self.shard_leaf_indices(shard)
+        if len(new_leaves) != len(idx):
+            raise ValueError(
+                f"shard {shard} holds {len(idx)} leaves, got {len(new_leaves)}"
+            )
+        for i, leaf in zip(idx, new_leaves):
+            leaves[i] = leaf
+        return jax.tree.unflatten(treedef, leaves)

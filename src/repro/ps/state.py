@@ -55,6 +55,11 @@ class CommitConfig:
     tau: int = 4
     local_lr: float = 0.05
     global_lr: float = 1.0
+    # PS sharding (DESIGN.md §11): the model pytree is partitioned into
+    # n_shards size-balanced shards (repro.ps.sharding.ShardPlan) with
+    # per-shard commit apply and per-shard version counters. 1 = the
+    # monolithic PS, bit-identical to the pre-sharding stack.
+    n_shards: int = 1
     # dtype of the commit all-reduce. f32 default: numerically safer for
     # accumulated updates, and XLA:CPU's AllReducePromotion pass crashes on
     # bf16 all-reduce (dry-run container). 'bfloat16' halves the collective
@@ -69,6 +74,8 @@ class CommitConfig:
     def __post_init__(self):
         if self.tau < 1:
             raise ValueError("tau must be >= 1")
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
 
 
 def effective_momentum(
@@ -92,6 +99,10 @@ class AdspState:
     local_state: Pytree
     step: jax.Array  # global commit counter
     transport_state: Pytree = ()  # codec error-feedback residual per worker
+    # per-shard PS version counters (int32[n_shards]); () when the PS is
+    # monolithic (n_shards == 1) so unsharded state trees stay identical
+    # to the pre-sharding stack (checkpoints, shardings, bit-parity).
+    shard_versions: Pytree = ()
 
     @property
     def prev_delta(self) -> Pytree:
@@ -101,13 +112,14 @@ class AdspState:
 
     @classmethod
     def create(cls, params: Pytree, rules=None, *, n_workers: int = 1,
-               codec=None) -> "AdspState":
+               codec=None, n_shards: int = 1) -> "AdspState":
         """``rules`` is a resolved (LocalRule, CommitRule) pair (e.g.
         ``UpdateRules(...).resolve(ccfg)`` or ``make_train_step(...).rules``).
         None keeps the seed default: momentum-delta commit state (zeros)
         and a stateless local rule. ``codec`` is a resolved
         ``repro.transport.Codec`` (or None); its residual gets one slot
-        per worker, like ``local_state``."""
+        per worker, like ``local_state``. ``n_shards`` > 1 adds the
+        per-shard PS version counters (zeros)."""
 
         def per_worker(tree: Pytree) -> Pytree:
             return jax.tree.map(
@@ -122,6 +134,10 @@ class AdspState:
             commit_state = commit_rule.init(params)
             local_state = per_worker(local_rule.init(params))
         transport_state: Pytree = () if codec is None else per_worker(codec.init(params))
+        shard_versions: Pytree = (
+            jnp.zeros((n_shards,), jnp.int32) if n_shards > 1 else ()
+        )
         return cls(params=params, commit_state=commit_state,
                    local_state=local_state, step=jnp.zeros((), jnp.int32),
-                   transport_state=transport_state)
+                   transport_state=transport_state,
+                   shard_versions=shard_versions)

@@ -41,9 +41,11 @@ from jax.sharding import PartitionSpec as P
 from repro.core.jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
 
 from .rules import LocalRule, UpdateRules
+from .sharding import ShardPlan
 from .state import AdspState, CommitConfig
 
-__all__ = ["make_train_step", "make_local_update", "worker_axes_for"]
+__all__ = ["make_train_step", "make_local_update", "make_sharded_apply",
+           "worker_axes_for"]
 
 Pytree = object
 
@@ -70,6 +72,53 @@ def worker_axes_for(granularity: str, mesh: jax.sharding.Mesh) -> tuple[str, ...
 def _axes_spec(axes: tuple[str, ...]) -> P:
     """PartitionSpec sharding a leading dim over all worker axes."""
     return P(axes if len(axes) > 1 else axes[0])
+
+
+def make_sharded_apply(commit_rule, n_shards: int) -> Callable:
+    """The commit apply, shard-sliced per the deterministic ShardPlan
+    (DESIGN.md §11): slice params/commit-state/update per shard, apply
+    the CommitRule shard by shard, merge. Every built-in CommitRule is
+    leaf-wise, so the K-sharded apply is bit-identical to the monolithic
+    one — sharding reorganizes what the transport layer sees (per-shard
+    payloads, versions), never the numerics. n_shards == 1 returns the
+    rule's apply untouched (the monolithic fast path)."""
+    if n_shards <= 1:
+        return commit_rule.apply
+
+    def apply(params, cstate, u, momentum):
+        plan = ShardPlan.build(params, n_shards)
+        p_struct = jax.tree.structure(params)
+        # commit state is either params-shaped (momentum_delta: sliced
+        # along with the params) or leafless (plain_average: passed
+        # through whole); anything else cannot be shard-partitioned.
+        c_sliceable = jax.tree.structure(cstate) == p_struct
+        if not c_sliceable and jax.tree.leaves(cstate):
+            raise ValueError(
+                f"commit rule {commit_rule.name!r} carries state that is "
+                "neither empty nor params-shaped; it cannot be sharded"
+            )
+        p_leaves, treedef = jax.tree.flatten(params)
+        c_leaves = jax.tree.leaves(cstate) if c_sliceable else None
+        new_p = list(p_leaves)
+        new_c = list(c_leaves) if c_sliceable else cstate
+        for k in range(plan.n_shards):
+            idx = plan.shard_leaf_indices(k)
+            p_k = plan.slice(params, k)
+            u_k = plan.slice(u, k)
+            c_k = [c_leaves[i] for i in idx] if c_sliceable else cstate
+            np_k, nc_k = commit_rule.apply(p_k, c_k, u_k, momentum)
+            for i, leaf in zip(idx, np_k):
+                new_p[i] = leaf
+            if c_sliceable:
+                for i, leaf in zip(idx, nc_k):
+                    new_c[i] = leaf
+            else:
+                new_c = nc_k
+        out_p = jax.tree.unflatten(treedef, new_p)
+        out_c = jax.tree.unflatten(treedef, new_c) if c_sliceable else new_c
+        return out_p, out_c
+
+    return apply
 
 
 def make_local_update(
@@ -183,6 +232,9 @@ def make_train_step(
     else:
         bundle = rules if rules is not None else UpdateRules()
         local_rule, commit_rule = bundle.resolve(ccfg)
+    # PS sharding (§11): the commit apply is shard-sliced per the
+    # deterministic ShardPlan; 1 shard keeps the monolithic apply.
+    commit_apply = make_sharded_apply(commit_rule, ccfg.n_shards)
 
     if axes:
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -203,6 +255,16 @@ def make_train_step(
         ]
         if codec is not None:
             checks.append(("transport_state", codec, state.transport_state))
+        # the effective shard count clamps to the leaf count (a 1-leaf
+        # model runs monolithic no matter the requested K)
+        eff = (ShardPlan.build(p_abs, ccfg.n_shards).n_shards
+               if ccfg.n_shards > 1 else 1)
+        if eff > 1 and not jax.tree.leaves(state.shard_versions):
+            raise ValueError(
+                f"AdspState.shard_versions is empty but the step runs "
+                f"{eff} PS shards; build states with "
+                "make_train_step(...).init(params)"
+            )
         for label, rule, got in checks:
             want = jax.tree.structure(jax.eval_shape(rule.init, p_abs))
             if jax.tree.structure(got) != want:
@@ -210,6 +272,17 @@ def make_train_step(
                     f"AdspState.{label} does not match the {rule.name!r} rule's "
                     "state; build states with make_train_step(...).init(params)"
                 )
+
+    def _next_versions(state: AdspState):
+        # Synchronous commit: every shard is written every round, so all K
+        # version counters advance together (the counters matter to
+        # *asynchronous* consumers — the edgesim's partial pulls — and to
+        # shard-granular checkpoint/serve layers reading this state).
+        # Keyed off the state, not ccfg.n_shards: the effective count
+        # clamps to the leaf count, which can degenerate to monolithic.
+        if not jax.tree.leaves(state.shard_versions):
+            return state.shard_versions
+        return state.shard_versions + 1
 
     if axes:
         # On the 0.4.x series XLA aborts on a lax.scan inside a partially
@@ -245,7 +318,7 @@ def make_train_step(
             u = jax.tree.map(lambda x: x.astype(cd), u)
             u = jax.lax.pmean(u, axes)
             loss = jax.lax.pmean(loss, axes)
-            new_p, new_c = commit_rule.apply(params, cstate, u, explicit_momentum)
+            new_p, new_c = commit_apply(params, cstate, u, explicit_momentum)
             lstate_out = jax.tree.map(lambda x: x[None], ls1)
             return new_p, new_c, lstate_out, tstate_out, step + 1, loss
 
@@ -269,7 +342,7 @@ def make_train_step(
                 state.params, state.commit_state, state.local_state,
                 state.transport_state, state.step, microbatches, tau_per_worker,
             )
-            return AdspState(p, c, l, s, t), loss
+            return AdspState(p, c, l, s, t, _next_versions(state)), loss
 
     else:
         run = make_local_update(loss_fn, ccfg, local_rule, remat=remat, unroll=1)
@@ -280,19 +353,24 @@ def make_train_step(
             ls0 = jax.tree.map(lambda x: x[0], state.local_state)
             u, ls1, loss = run(state.params, ls0, microbatches, tau_i)
             u, tstate_out = _through_codec(u, state.transport_state)
-            new_p, new_c = commit_rule.apply(
+            new_p, new_c = commit_apply(
                 state.params, state.commit_state, u, explicit_momentum
             )
             lstate_out = jax.tree.map(lambda x: x[None], ls1)
             return AdspState(new_p, new_c, lstate_out, state.step + 1,
-                             tstate_out), loss
+                             tstate_out, _next_versions(state)), loss
 
+    # version-vector length follows the plan's clamped shard count (a
+    # tree with fewer leaves than requested shards gets one per leaf)
     train_step.init = lambda params: AdspState.create(
         params, rules=(local_rule, commit_rule), n_workers=n_workers,
         codec=codec,
+        n_shards=(ShardPlan.build(params, ccfg.n_shards).n_shards
+                  if ccfg.n_shards > 1 else 1),
     )
     train_step.rules = (local_rule, commit_rule)
     train_step.codec = codec
     train_step.config = ccfg
     train_step.n_workers = n_workers
+    train_step.n_shards = ccfg.n_shards
     return train_step

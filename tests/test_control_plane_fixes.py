@@ -6,8 +6,14 @@ they run in the bare container unlike test_reward_search.py):
     time points that degenerate the reward slope fit;
   * ``log_slope_reward`` on those degenerate windows;
   * ``LegacyPolicyAdapter.fraction_for`` with a dead worker id —
-    previously a bare StopIteration.
+    previously a bare StopIteration;
+  * ``policies._speed_fraction`` with a dead worker id — same bug class;
+  * ``ADSPPlus.tau_cap`` with an elastically joined worker whose stable
+    id falls outside the offline grid — previously IndexError;
+  * ``AdaComm`` restart — previously reused the stale loss baseline.
 """
+
+import math
 
 import numpy as np
 import pytest
@@ -89,3 +95,67 @@ def test_legacy_fraction_for_dead_worker_raises_keyerror():
     adapter = LegacyPolicyAdapter(OldStyle())
     with pytest.raises(KeyError, match="no alive worker"):
         adapter.fraction_for(View(), 42)
+
+
+def test_speed_fraction_dead_worker_raises_keyerror():
+    """A bare next(...) raised StopIteration, which a generator-running
+    caller silently swallows as exhaustion."""
+    from repro.cluster.policies import BatchTuneBSP
+
+    class WS:
+        def __init__(self, index, v):
+            self.index = index
+            self.profile = type("P", (), {"v": v})()
+
+    class View:
+        workers = [WS(0, 1.0), WS(2, 3.0)]  # id 1 departed
+
+    policy = BatchTuneBSP()
+    assert policy.fraction_for(View(), 2) == pytest.approx(0.75)
+    with pytest.raises(KeyError, match="no alive worker"):
+        policy.fraction_for(View(), 1)
+
+
+def test_adsp_plus_tau_cap_survives_elastic_join():
+    """tau_cap is indexed by stable worker id, dense only for the initial
+    fleet: an elastic joiner (id ≥ len(tau_cap)) must run uncapped, not
+    IndexError. Exercised end to end through the simulator."""
+    from repro.cluster import ChurnSchedule, join, make_policy
+    from repro.core.theory import WorkerProfile
+    from repro.edgesim import SimConfig, Simulator
+    from repro.edgesim.tasks import svm_task
+
+    profiles = [WorkerProfile(v=1.0, o=0.2), WorkerProfile(v=2.0, o=0.2)]
+    policy = make_policy("adsp_plus", gamma=20.0, tau_cap=(3, 3))
+    churn = ChurnSchedule([join(15.0, WorkerProfile(v=1.0, o=0.2))])
+    sim = Simulator(svm_task(2), profiles, policy,
+                    SimConfig(max_seconds=80.0, base_batch=32, gamma=20.0,
+                              epoch_seconds=40.0),
+                    churn=churn)
+    res = sim.train(80.0)
+    assert len(sim.workers) == 3  # the joiner is live and training
+    assert sim.workers[-1].index == 2  # id beyond the tau_cap grid
+    assert res.total_commits > 0
+    assert sim.workers[-1].steps > 0
+
+
+def test_adacomm_restart_resets_loss_baseline():
+    from repro.cluster.policies import AdaComm
+
+    class View:
+        workers = []
+
+        @staticmethod
+        def recent_global_loss():
+            return 0.25
+
+    policy = AdaComm(tau0=16)
+    policy.on_started(View())
+    policy.on_checkpoint(View())  # seeds the baseline
+    assert policy._loss0 == 0.25 and policy._last_loss == 0.25
+    policy.on_checkpoint(View())  # uses it
+    # restart: both baselines must clear, not just τ
+    policy.tau = 3
+    policy.on_started(View())
+    assert policy.tau == policy.tau0
+    assert math.isnan(policy._loss0) and math.isnan(policy._last_loss)

@@ -1,0 +1,72 @@
+"""Property sweeps for the ShardPlan (mirrors the hypothesis-gated
+pattern of test_rule_backends_property.py — skipped in the bare
+container, exercised with the dev extras)."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import numpy as np
+
+from repro.ps import ShardPlan
+from repro.transport import dense_nbytes
+
+
+@st.composite
+def trees(draw):
+    """Random nested dicts of abstract leaves with ragged shapes/dtypes."""
+    n = draw(st.integers(1, 12))
+    dtypes = st.sampled_from([np.float32, np.float16, np.int32])
+    leaves = {}
+    for i in range(n):
+        rank = draw(st.integers(0, 3))
+        shape = tuple(draw(st.integers(1, 64)) for _ in range(rank))
+        leaf = jax.ShapeDtypeStruct(shape, draw(dtypes))
+        if draw(st.booleans()):
+            leaves.setdefault("nested", {})[f"leaf{i}"] = leaf
+        else:
+            leaves[f"leaf{i}"] = leaf
+    return leaves
+
+
+@given(tree=trees(), k=st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_plan_properties(tree, k):
+    plan = ShardPlan.build(tree, k)
+    n_leaves = len(jax.tree.leaves(tree))
+    # clamped, never empty
+    assert 1 <= plan.n_shards == min(k, n_leaves)
+    # a partition: every leaf in exactly one shard, bytes conserved
+    seen = sorted(
+        i for s in range(plan.n_shards) for i in plan.shard_leaf_indices(s)
+    )
+    assert seen == list(range(n_leaves))
+    sizes = plan.shard_nbytes()
+    assert sum(sizes) == dense_nbytes(tree) == sum(plan.leaf_nbytes)
+    # balance: greedy best-fit never exceeds the even split by more than
+    # the largest leaf
+    assert max(sizes) <= sum(sizes) / plan.n_shards + max(plan.leaf_nbytes)
+    # determinism incl. abstract/concrete agreement
+    assert plan == ShardPlan.build(tree, k)
+
+
+@given(tree=trees(), k=st.integers(1, 8), data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_slice_merge_roundtrip(tree, k, data):
+    concrete = jax.tree.map(
+        lambda a: np.zeros(a.shape, a.dtype), tree
+    )
+    plan = ShardPlan.build(concrete, k)
+    shard = data.draw(st.integers(0, plan.n_shards - 1))
+    sliced = plan.slice(concrete, shard)
+    assert len(sliced) == len(plan.shard_leaf_indices(shard))
+    merged = plan.merge(concrete, shard, [x + 1 for x in sliced])
+    flat_in, flat_out = jax.tree.leaves(concrete), jax.tree.leaves(merged)
+    idx = set(plan.shard_leaf_indices(shard))
+    for i, (a, b) in enumerate(zip(flat_in, flat_out)):
+        if i in idx:
+            np.testing.assert_array_equal(b, a + 1)
+        else:
+            assert b is a
