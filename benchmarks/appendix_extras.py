@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import itertools
 
-from repro.core.sync import ADSPPlus, make_policy
+from repro.cluster import ADSPPlus
 from repro.edgesim.tasks import rnn_task, svm_task
 
 from .common import (GAMMA, default_policy, row, run_sim, standard_profiles,

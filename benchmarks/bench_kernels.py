@@ -69,7 +69,7 @@ def _bench_train_step_backends() -> list[str]:
     """The unified train step end-to-end, reference vs Pallas-fused rule
     backend (the fused kernels on their actual hot path, not only as
     isolated ops). Interpret mode on CPU: structure cost only."""
-    from repro.core.jaxcompat import use_mesh
+    from repro.compat import use_mesh
     from repro.ps import CommitConfig, UpdateRules, make_train_step
 
     def quad_loss(params, batch):

@@ -19,7 +19,7 @@ import time
 from repro.cluster import make_policy
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles
-from repro.edgesim.tasks import cnn_task, make_task
+from repro.edgesim.tasks import cnn_task
 
 # Benchmark-scale defaults: Γ=20 s virtual; the CNN task needs a few
 # hundred check periods' worth of steps to converge — same period count

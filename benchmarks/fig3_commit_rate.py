@@ -5,9 +5,8 @@ fixed rate."""
 
 from __future__ import annotations
 
-import numpy as np
 
-from repro.core import theory
+from repro.control import theory
 
 from .common import GAMMA, default_policy, row, run_sim, standard_profiles, standard_task
 

@@ -26,6 +26,7 @@ MODULES = [
     "bench_kernels",
     "bench_transport",
     "bench_shards",
+    "bench_control",
     "roofline_table",
 ]
 

@@ -29,7 +29,7 @@ import argparse
 import math
 
 from repro.cluster import ChurnSchedule, join, leave, make_policy, speed
-from repro.core.theory import WorkerProfile, heterogeneity_degree
+from repro.control.theory import WorkerProfile, heterogeneity_degree
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ec2_profiles, with_links
 from repro.edgesim.tasks import cnn_task

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.jaxcompat import use_mesh
+from repro.compat import use_mesh
 from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig

@@ -19,6 +19,7 @@ from .policies import (
     BSP,
     FixedAdaComm,
     SSP,
+    SyncPolicy,
     TAP,
     make_policy,
 )
@@ -50,7 +51,7 @@ __all__ = [
     # policies
     "ClusterPolicy", "BSP", "SSP", "TAP", "FixedAdaComm", "AdaComm",
     "ADSP", "ADSPPlus", "BatchTuneBSP", "BatchTuneFixedAdaComm",
-    "make_policy",
+    "SyncPolicy", "make_policy",
     # protocol
     "Event", "ClusterStarted", "StepDone", "CommitApplied", "Checkpoint",
     "EpochEnd", "WorkerJoined", "WorkerLeft", "SpeedChanged",

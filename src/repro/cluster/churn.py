@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.theory import WorkerProfile
+from repro.control.theory import WorkerProfile
 
 __all__ = ["ChurnAction", "ChurnSchedule", "join", "leave", "speed"]
 

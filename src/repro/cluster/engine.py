@@ -1,4 +1,4 @@
-"""ClusterEngine: the single control-plane executor (DESIGN.md §2).
+"""ClusterEngine: the single control-plane executor (DESIGN.md §2, §12).
 
 The engine sits between exactly one policy and exactly one backend:
 
@@ -10,9 +10,16 @@ The engine sits between exactly one policy and exactly one backend:
 Both backends — the virtual-clock ``edgesim.Simulator`` and the real
 mesh loop (``cluster.mesh_backend.MeshBackend``) — report through the
 same entry points, so Alg. 1/Alg. 2 logic exists exactly once. The
-engine also implements ``core.search.OnlineSystem`` (``commit_counts`` /
-``evaluate``), which is how a ``Search`` command turns into live probe
+engine also implements ``control.search.OnlineSystem`` (``commit_counts``
+/ ``evaluate``), which is how a ``Search`` command turns into live probe
 windows on whichever backend is attached.
+
+A ``Search`` command opens an incremental ``control.SearchSession``: the
+engine feeds it one probe window at a time, and because each window is
+ordinary live execution (``backend.run_window``), churn and speed-shift
+events dispatch *during* the search — the engine forwards them to the
+active session, which restarts on the new fleet (or aborts past its
+restart budget) instead of scoring a window that mixes two fleets.
 
 Elastic churn: ``worker_joined`` / ``worker_left`` / ``speed_changed``
 keep the policy's rate rule current while workers come and go. A joining
@@ -23,7 +30,7 @@ forcing a catch-up burst.
 
 from __future__ import annotations
 
-from repro.core.search import decide_commit_rate
+from repro.control.search import SearchSession
 
 from .protocol import (
     ArmTimer,
@@ -81,6 +88,14 @@ class LegacyPolicyAdapter(ClusterPolicy):
             raise KeyError(f"no alive worker with id {index}")
         return self.inner.batch_fraction(view, pos)
 
+    def supports_retarget(self) -> bool:
+        return hasattr(self.inner, "retarget")
+
+    def retarget(self, view, c_target: int) -> list[Command]:
+        # legacy retarget hooks mutate state directly and return nothing
+        self.inner.retarget(view, c_target)
+        return []
+
     def on_started(self, view) -> list[Command]:
         self.inner.on_sim_start(view)
         return self.batch_fractions(view)
@@ -114,6 +129,7 @@ class ClusterEngine:
         self.policy = coerce_policy(policy)
         self.backend = backend
         self.parked: set[int] = set()
+        self._search: SearchSession | None = None
         backend.bind(self)
 
     # ------------------------------------------------------------ view
@@ -181,15 +197,22 @@ class ClusterEngine:
             w.commits = w.commit_credit
             w.step_credit = min(p.steps for p in peers)
             w.steps = w.step_credit
+        self._notify_search_churn()
         self.dispatch(WorkerJoined(w.index))
 
     def worker_left(self, index: int) -> None:
         """Called after the backend removed the worker."""
         self.parked.discard(index)
+        self._notify_search_churn()
         self.dispatch(WorkerLeft(index))
 
     def speed_changed(self, w) -> None:
+        self._notify_search_churn()
         self.dispatch(SpeedChanged(w.index, w.profile.v))
+
+    def _notify_search_churn(self) -> None:
+        if self._search is not None:
+            self._search.notify_churn()
 
     # --------------------------------------------------------- dispatching
     def dispatch(self, event: Event) -> list[Command]:
@@ -222,9 +245,23 @@ class ClusterEngine:
     def commit_counts(self) -> list[int]:
         return [w.commits for w in self.workers]
 
+    def _retarget_cmds(self, c_target: int) -> list[Command]:
+        """``policy.retarget`` guarded: a policy without real retargeting
+        support (the base no-op, or a legacy strategy object without a
+        ``retarget`` hook) must fail loudly — a silent no-op would let the
+        Alg. 1 search probe candidates that never take effect."""
+        if not self.policy.supports_retarget():
+            raise TypeError(
+                f"policy {self.policy.name!r} ({type(self.policy).__name__}) "
+                "does not support commit-rate retargeting; evaluate/"
+                "set_c_target/Search need a policy that overrides "
+                "ClusterPolicy.retarget (the ADSP family does)"
+            )
+        return self.policy.retarget(self, int(c_target))
+
     def evaluate(self, c_target: int, probe_seconds: float):
         """Probe a candidate C_target live for a window (Alg. 1 line 10)."""
-        self.execute(self.policy.retarget(self, int(c_target)))
+        self.execute(self._retarget_cmds(c_target))
         return self.backend.run_window(probe_seconds)
 
     def run_window(self, seconds: float):
@@ -232,10 +269,46 @@ class ClusterEngine:
 
     def set_c_target(self, c_target: int) -> None:
         """Adopt a target outright (Scheduler / Fig. 3 sweep support)."""
-        self.execute(self.policy.retarget(self, int(c_target)))
+        self.execute(self._retarget_cmds(c_target))
+
+    @property
+    def search_active(self) -> bool:
+        """True while a SearchSession is consuming probe windows."""
+        return self._search is not None and self._search.active
 
     def _run_search(self, cmd: Search) -> None:
-        chosen, trace = decide_commit_rate(self, cmd.probe_seconds, cmd.max_probes)
-        if hasattr(self.policy, "traces"):
-            self.policy.traces.append(trace)
-        self.execute(self.policy.retarget(self, chosen))
+        """Open a SearchSession and pump it one probe window at a time.
+
+        Each window is live execution on the backend, so events (steps,
+        commits, checkpoints, churn) dispatch normally *during* the
+        search; churn invalidates the in-flight window and restarts the
+        session on the new fleet. A ``Search`` arriving while a session
+        is active (e.g. a drift trigger firing during one of the
+        session's own probe windows) is dropped — the running session
+        already is the re-search.
+        """
+        if self.search_active:
+            return
+        session = SearchSession(
+            probe_seconds=cmd.probe_seconds,
+            max_probes=cmd.max_probes,
+            patience=cmd.patience,
+            eps_tie=cmd.eps_tie,
+            reward_model=cmd.reward_model,
+        )
+        self._search = session
+        session.trace.t_start = self.now
+        try:
+            cand = session.begin(self.commit_counts())
+            while cand is not None:
+                self.execute(self._retarget_cmds(cand))
+                ts, ls = self.backend.run_window(cmd.probe_seconds)
+                if session.churned:
+                    cand = session.restart(self.commit_counts())
+                else:
+                    cand = session.probe_window_complete(ts, ls)
+        finally:
+            self._search = None
+        session.trace.t_end = self.now
+        self.execute(self._retarget_cmds(session.trace.chosen))
+        self.execute(self.policy.on_search_done(self, session.trace))

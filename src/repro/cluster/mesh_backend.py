@@ -34,8 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import theory
-from repro.core.theory import WorkerProfile
+from repro.control import theory
+from repro.control.theory import WorkerProfile
 from repro.ps import CommitConfig, UpdateRules, make_train_step
 from repro.transport import Codec, dense_nbytes, get_codec
 
@@ -159,7 +159,7 @@ class MeshBackend:
         rounds = max(int(math.ceil(seconds / self.round_seconds)), 2)
         for _ in range(rounds):
             self.run_round()
-        from repro.core.search import pad_probe_samples
+        from repro.control.search import pad_probe_samples
 
         ts = [t for t, _ in self.losses if t >= start]
         ls = [l for t, l in self.losses if t >= start]

@@ -15,8 +15,10 @@ import math
 
 import numpy as np
 
-from repro.core import theory
-from repro.core.search import SearchTrace  # noqa: F401  (re-export for callers)
+from repro.control import theory
+from repro.control.drift import DriftDetector, speed_fractions
+from repro.control.reward import get_reward_model
+from repro.control.search import SearchTrace  # noqa: F401  (re-export for callers)
 
 from .protocol import (
     ArmTimer,
@@ -36,6 +38,7 @@ __all__ = [
     "ADSPPlus",
     "BatchTuneBSP",
     "BatchTuneFixedAdaComm",
+    "SyncPolicy",
     "make_policy",
 ]
 
@@ -151,14 +154,20 @@ class ADSP(ClusterPolicy):
     * at every Checkpoint (period Γ) commit rates are re-derived as
       ΔC_i = C_target − c_i, equalizing cumulative commit counts
       (→ SetRate commands);
-    * at every EpochEnd the scheduler runs the online search (Alg. 1 /
-      core.search.decide_commit_rate → a Search command the engine
-      executes, calling ``retarget`` with the winner).
+    * the online search (Alg. 1 / ``control.SearchSession``) fires as a
+      Search command the engine executes incrementally, calling
+      ``retarget`` with the winner. When it fires is ``search_mode``:
+      ``"epoch"`` (paper: every EpochEnd), ``"drift"`` (a
+      ``control.DriftDetector`` watches the per-worker speed fractions
+      and the loss trajectory and re-searches mid-epoch when the fleet
+      the current C_target was chosen for no longer exists), or
+      ``"both"``.
 
     ``search=False`` freezes C_target (used by unit tests and by the
     Fig. 3 commit-rate sweep where ΔC is set exogenously). Elastic churn:
     WorkerJoined/WorkerLeft/SpeedChanged all re-derive rates, so a joining
-    worker is folded into the rate rule immediately.
+    worker is folded into the rate rule immediately — and in drift mode
+    may additionally trigger an immediate re-search.
     """
 
     name: str = "adsp"
@@ -168,18 +177,43 @@ class ADSP(ClusterPolicy):
     search: bool = True
     probe_seconds: float = 60.0
     max_probes: int = 8
+    # Alg. 1 knobs: ε-tie patience (0 = paper's break-on-first-miss climb)
+    # and the reward model scoring probe windows (control.reward registry).
+    search_patience: int = 0
+    eps_tie: float = 0.0
+    reward_model: str = "log_slope"
+    # When to re-search: "epoch" (paper), "drift", or "both".
+    search_mode: str = "epoch"
+    drift_threshold: float = 0.25  # speed-fraction TV distance triggering re-search
+    drift_cooldown: float = 120.0  # min virtual seconds between drift triggers
     # Fixed commit-rate mode (Fig. 3 sweep): with search=False the target
     # advances by `delta_per_period` each check period, pinning every
     # worker's ΔC_target ≈ delta_per_period.
     delta_per_period: int = 1
     c_target: int = dataclasses.field(default=0, init=False)
     traces: list = dataclasses.field(default_factory=list, init=False)
+    drift: DriftDetector | None = dataclasses.field(default=None, init=False)
+
+    def __post_init__(self):
+        if self.search_mode not in ("epoch", "drift", "both"):
+            raise ValueError(
+                f"search_mode must be epoch|drift|both, got {self.search_mode!r}"
+            )
+        # fail at construction, not when the first search fires mid-run
+        get_reward_model(self.reward_model)
 
     def wants_commit(self, view, w) -> bool:
         return view.now >= w.next_commit_time
 
     def on_started(self, view) -> list[Command]:
         self.c_target = max(self.initial_c_target, 1)
+        if self.search and self.search_mode in ("drift", "both"):
+            self.drift = DriftDetector(
+                threshold=self.drift_threshold, cooldown=self.drift_cooldown
+            )
+            self.drift.rebaseline(speed_fractions(view), view.now)
+        else:
+            self.drift = None
         return super().on_started(view) + self.rate_commands(view)
 
     def on_commit_applied(self, view, w) -> list[Command]:
@@ -195,25 +229,54 @@ class ADSP(ClusterPolicy):
         # expected to add ≥ delta_per_period commits, then re-derive rates.
         counts = [ws.commits for ws in view.workers]
         self.c_target = max(self.c_target, max(counts) + self.delta_per_period)
-        return self.rate_commands(view)
+        if self.drift is not None:
+            self.drift.observe_loss(view.recent_global_loss())
+        return self.rate_commands(view) + self._drift_commands(view)
 
     def on_epoch_end(self, view) -> list[Command]:
-        if not self.search:
+        if not self.search or self.search_mode == "drift":
             return []
-        return [Search(self.probe_seconds, self.max_probes)]
+        return [self.search_command()]
 
     def on_worker_joined(self, view, w) -> list[Command]:
-        return super().on_worker_joined(view, w) + self.rate_commands(view)
+        return (super().on_worker_joined(view, w) + self.rate_commands(view)
+                + self._drift_commands(view))
 
     def on_worker_left(self, view, index: int) -> list[Command]:
-        return super().on_worker_left(view, index) + self.rate_commands(view)
+        return (super().on_worker_left(view, index) + self.rate_commands(view)
+                + self._drift_commands(view))
 
     def on_speed_changed(self, view, w) -> list[Command]:
-        return super().on_speed_changed(view, w) + self.rate_commands(view)
+        return (super().on_speed_changed(view, w) + self.rate_commands(view)
+                + self._drift_commands(view))
 
     def retarget(self, view, c_target: int) -> list[Command]:
         self.c_target = int(c_target)
         return self.rate_commands(view)
+
+    def on_search_done(self, view, trace) -> list[Command]:
+        cmds = super().on_search_done(view, trace)  # records the trace
+        if self.drift is not None and not trace.aborted:
+            # the chosen C_target belongs to *this* fleet: drift measures
+            # from here on. An ABORTED search keeps the old baseline —
+            # its choice was never scored against this fleet, so the
+            # drift signal must stay armed to retry after the cooldown
+            # (in pure drift mode there is no epoch clock to fall back on).
+            self.drift.rebaseline(speed_fractions(view), view.now)
+        return cmds
+
+    def search_command(self) -> Search:
+        return Search(self.probe_seconds, self.max_probes,
+                      patience=self.search_patience, eps_tie=self.eps_tie,
+                      reward_model=self.reward_model)
+
+    def _drift_commands(self, view) -> list[Command]:
+        """Mid-epoch re-search trigger (search_mode drift/both)."""
+        if self.drift is None:
+            return []
+        if self.drift.should_search(speed_fractions(view), view.now):
+            return [self.search_command()]
+        return []
 
     def rate_commands(self, view) -> list[Command]:
         """Alg. 2 rate rule: ΔC_i = C_target − c_i, timers re-armed.
@@ -298,6 +361,47 @@ class BatchTuneFixedAdaComm(FixedAdaComm):
 
     def fraction_for(self, view, index: int) -> float:
         return _speed_fraction(view, index)
+
+
+# ---------------------------------------------------------------------------
+# Legacy strategy-object base (pre-engine API)
+# ---------------------------------------------------------------------------
+
+
+class SyncPolicy:
+    """Legacy strategy-object base (the pre-engine API, kept from the
+    retired legacy package).
+
+    Third-party subclasses implementing ``should_commit`` /
+    ``may_start_next_step`` / ``on_*`` hooks still run everywhere a
+    policy is accepted: the engine adapts them with
+    ``repro.cluster.LegacyPolicyAdapter``. New policies should subclass
+    ``repro.cluster.ClusterPolicy`` instead.
+    """
+
+    name: str = "base"
+    apply_mode: str = "immediate"  # or "barrier"
+
+    def should_commit(self, sim, w) -> bool:
+        raise NotImplementedError
+
+    def may_start_next_step(self, sim, w) -> bool:
+        return True
+
+    def on_sim_start(self, sim) -> None:
+        pass
+
+    def on_commit_applied(self, sim, w) -> None:
+        pass
+
+    def on_checkpoint(self, sim) -> None:
+        pass
+
+    def on_epoch(self, sim) -> None:
+        pass
+
+    def batch_fraction(self, sim, worker_index: int) -> float:
+        return 1.0 / sim.num_workers
 
 
 _POLICIES = {

@@ -168,11 +168,18 @@ class SetBatchFraction(Command):
 
 @dataclasses.dataclass(frozen=True)
 class Search(Command):
-    """Run Alg. 1 (DECIDECOMMITRATE) using the engine as the OnlineSystem;
-    the engine calls back into ``policy.retarget`` with the winner."""
+    """Run Alg. 1 (DECIDECOMMITRATE): the engine opens an incremental
+    ``control.SearchSession``, probes candidates one live window at a
+    time (churn restarts the session), and calls back into
+    ``policy.retarget`` with the winner. ``patience``/``eps_tie`` are the
+    ε-tie patience guard and ``reward_model`` names a registered
+    ``control.RewardModel`` (see repro.control)."""
 
     probe_seconds: float
     max_probes: int
+    patience: int = 0
+    eps_tie: float = 0.0
+    reward_model: str = "log_slope"
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +198,7 @@ class WorkerView:
     """
 
     index: int
-    profile: object  # core.theory.WorkerProfile (v, o)
+    profile: object  # control.theory.WorkerProfile (v, o)
     steps: int = 0
     steps_since_commit: int = 0
     commits: int = 0
@@ -325,6 +332,22 @@ class ClusterPolicy:
 
     def retarget(self, view, c_target: int) -> list[Command]:
         """Alg. 1 support: adopt a (candidate) C_target. Base: no-op."""
+        return []
+
+    def supports_retarget(self) -> bool:
+        """True iff ``retarget`` actually does something. The engine
+        refuses to run a search / set_c_target against a policy whose
+        retarget is the base no-op (a silent non-retarget would probe
+        candidates that never take effect)."""
+        return type(self).retarget is not ClusterPolicy.retarget
+
+    def on_search_done(self, view, trace) -> list[Command]:
+        """A SearchSession finished (the engine already retargeted to
+        ``trace.chosen``). Base: record the trace on policies that keep a
+        ``traces`` log."""
+        traces = getattr(self, "traces", None)
+        if traces is not None:
+            traces.append(trace)
         return []
 
     # -- helpers -------------------------------------------------------------

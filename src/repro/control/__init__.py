@@ -1,0 +1,57 @@
+"""The ADSP control plane (DESIGN.md §12).
+
+Everything the scheduler *decides with* lives here, mirroring the
+``repro.ps``/``repro.transport`` registry pattern:
+
+  * ``control.search`` — Alg. 1: the incremental :class:`SearchSession`
+    state machine (one probe window per transition, churn-aware), the
+    blocking ``decide_commit_rate`` wrapper, and the per-epoch
+    ``Scheduler``;
+  * ``control.reward`` — §4.2 reward models behind the pluggable
+    ``RewardModel`` registry (``curve_fit`` paper-exact, ``log_slope``
+    drift-free default);
+  * ``control.drift`` — :class:`DriftDetector`: mid-epoch re-search
+    triggers from speed-fraction / loss-trajectory drift;
+  * ``control.theory`` — the paper's analytical results (Eqn. 3 implicit
+    momentum, Alg. 2 transforms, Appendix C speed models).
+
+The executor side — events, commands, policies, the engine — stays in
+``repro.cluster``; this package is pure decision logic on plain
+Python/numpy scalars, importable without jax device state.
+"""
+
+from .drift import DriftDetector, speed_fractions
+from .reward import (
+    LossCurveFit,
+    RewardModel,
+    fit_loss_curve,
+    get_reward_model,
+    log_slope_reward,
+    register_reward_model,
+    reward,
+    reward_from_fit,
+    reward_model_names,
+)
+from .search import (
+    OnlineSystem,
+    Scheduler,
+    SearchSession,
+    SearchTrace,
+    decide_commit_rate,
+    pad_probe_samples,
+)
+from .theory import WorkerProfile
+
+__all__ = [
+    # search (Alg. 1)
+    "OnlineSystem", "Scheduler", "SearchSession", "SearchTrace",
+    "decide_commit_rate", "pad_probe_samples",
+    # reward models
+    "LossCurveFit", "RewardModel", "fit_loss_curve", "get_reward_model",
+    "log_slope_reward", "register_reward_model", "reward", "reward_from_fit",
+    "reward_model_names",
+    # drift
+    "DriftDetector", "speed_fractions",
+    # theory
+    "WorkerProfile",
+]

@@ -1,0 +1,104 @@
+"""Drift detection for mid-epoch re-search (DESIGN.md §12).
+
+The paper's scheduler re-runs Alg. 1 on a fixed epoch clock (20 minutes).
+Adaptive-control related work (Wang et al., *Adaptive Federated Learning
+in Resource-Constrained Edge Computing Systems*; Basani et al., *When
+Less is More*) re-tunes the synchronization knob when conditions *drift*
+instead: the chosen C_target is only optimal for the fleet it was
+searched on, so a mid-epoch speed shift, join, or leave strands the
+system on a stale target until the next epoch boundary.
+
+``DriftDetector`` watches two signals between searches:
+
+  * **speed fractions** — the normalized per-worker speed vector
+    f_i = v_i / Σv. Its total-variation distance from the baseline
+    recorded at the last (re-)search measures how much the heterogeneity
+    pattern moved; membership changes (join/leave) register as mass
+    appearing/disappearing at a worker id.
+  * **loss trajectory** — the smoothed global loss observed at
+    checkpoints. A loss *regressing* above its best-since-baseline by
+    more than ``loss_rise_tol`` (relative) means the current commit rate
+    stopped working even though no profile changed (e.g. gradient noise
+    from a batch rebalance).
+
+When either signal exceeds its threshold — and the ``cooldown`` since the
+last trigger has elapsed — ``should_search`` fires once; the policy turns
+that into a ``Search`` command and the detector re-baselines when the
+search completes (``rebaseline``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+__all__ = ["DriftDetector", "speed_fractions"]
+
+
+def speed_fractions(view) -> dict[int, float]:
+    """Normalized speed share per stable worker id over the alive fleet."""
+    total = sum(w.profile.v for w in view.workers)
+    if total <= 0:
+        return {}
+    return {w.index: w.profile.v / total for w in view.workers}
+
+
+@dataclasses.dataclass
+class DriftDetector:
+    """See module docstring. All state is plain floats/dicts — the
+    detector lives inside a policy and must stay trivially serializable.
+    """
+
+    threshold: float = 0.25  # total-variation distance of speed fractions
+    loss_rise_tol: float = 0.1  # relative loss regression vs best-since-baseline
+    cooldown: float = 120.0  # min (virtual) seconds between triggers
+    _baseline: dict[int, float] = dataclasses.field(default_factory=dict, init=False)
+    _best_loss: float = dataclasses.field(default=math.inf, init=False)
+    _last_loss: float = dataclasses.field(default=math.nan, init=False)
+    _last_trigger: float = dataclasses.field(default=-math.inf, init=False)
+
+    # ------------------------------------------------------------ baseline
+    def rebaseline(self, fractions: Mapping[int, float], now: float) -> None:
+        """Record the fleet the current C_target was chosen for. Called
+        when a search completes (and once at start)."""
+        self._baseline = dict(fractions)
+        self._best_loss = math.inf
+        self._last_loss = math.nan
+        self._last_trigger = max(self._last_trigger, now - self.cooldown)
+
+    # ------------------------------------------------------------- signals
+    def fleet_drift(self, fractions: Mapping[int, float]) -> float:
+        """Total-variation distance ½·Σ|f_now − f_base| over the union of
+        worker ids (a departed/joined worker contributes its full share)."""
+        ids = set(self._baseline) | set(fractions)
+        return 0.5 * sum(
+            abs(fractions.get(i, 0.0) - self._baseline.get(i, 0.0)) for i in ids
+        )
+
+    def observe_loss(self, loss: float | None) -> None:
+        """Feed the smoothed global loss at a checkpoint."""
+        if loss is None or not math.isfinite(loss):
+            return
+        self._last_loss = loss
+        self._best_loss = min(self._best_loss, loss)
+
+    def loss_regressed(self) -> bool:
+        if not math.isfinite(self._best_loss) or math.isnan(self._last_loss):
+            return False
+        return self._last_loss > self._best_loss * (1.0 + self.loss_rise_tol)
+
+    # ------------------------------------------------------------- trigger
+    def should_search(self, fractions: Mapping[int, float], now: float) -> bool:
+        """True exactly when a re-search should fire now; stamps the
+        cooldown so a burst of churn events triggers once."""
+        if not self._baseline:
+            # never baselined: adopt this fleet silently, don't trigger
+            self.rebaseline(fractions, now)
+            return False
+        if now - self._last_trigger < self.cooldown:
+            return False
+        if self.fleet_drift(fractions) > self.threshold or self.loss_regressed():
+            self._last_trigger = now
+            return True
+        return False

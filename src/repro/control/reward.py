@@ -1,4 +1,4 @@
-"""Online-search reward from §4.2 of the ADSP paper.
+"""Online-search reward models from §4.2 of the ADSP paper.
 
 The scheduler compares configurations that do NOT start from the same
 system state, so raw final loss is not comparable. The paper fits the
@@ -18,16 +18,36 @@ The fit is a tiny nonlinear least squares; we implement a Gauss-Newton /
 grid-seeded curve fit in numpy (no scipy in the container) with safeguards
 for the degenerate windows that occur early in training (flat or rising
 loss), where we fall back to a slope-based reward.
+
+Reward models are pluggable (mirroring the ``repro.ps``/``repro.transport``
+registries): a ``RewardModel`` maps one probe window's (times, losses) to a
+scalar, larger = faster convergence, and must be a *pure deterministic*
+function of the window — the search compares model outputs across windows.
+Built-ins:
+
+  * ``curve_fit`` — the paper-exact absolute-time reward (``reward``);
+  * ``log_slope`` — the drift-free normalized decay rate
+    (``log_slope_reward``), the default used by Alg. 1 here.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
-__all__ = ["LossCurveFit", "fit_loss_curve", "reward_from_fit", "reward", "log_slope_reward"]
+__all__ = [
+    "LossCurveFit",
+    "fit_loss_curve",
+    "reward_from_fit",
+    "reward",
+    "log_slope_reward",
+    "RewardModel",
+    "register_reward_model",
+    "get_reward_model",
+    "reward_model_names",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +62,9 @@ class LossCurveFit:
         return 1.0 / (self.a1_sq * np.asarray(t, dtype=np.float64) + self.a2) + self.a3
 
 
+_FAILED_FIT = LossCurveFit(np.nan, np.nan, np.nan, np.inf, ok=False)
+
+
 def _fit_given_a3(t: np.ndarray, loss: np.ndarray, a3: float) -> tuple[float, float, float]:
     """With a3 fixed, 1/(ℓ−a3) = a1² t + a2 is linear — solve by least squares.
 
@@ -54,7 +77,9 @@ def _fit_given_a3(t: np.ndarray, loss: np.ndarray, a3: float) -> tuple[float, fl
     A = np.stack([t, np.ones_like(t)], axis=1)
     coef, *_ = np.linalg.lstsq(A, z, rcond=None)
     a1_sq, a2 = float(coef[0]), float(coef[1])
-    if a1_sq < 0:
+    # a1² must be strictly positive: a1² = 0 is a flat curve (no decay
+    # information), a1² < 0 a rising one — neither is a valid 1/t fit.
+    if a1_sq <= 0:
         return np.nan, np.nan, np.inf
     denom = a1_sq * t + a2
     if np.any(denom <= 1e-12):
@@ -69,16 +94,26 @@ def fit_loss_curve(times: Sequence[float], losses: Sequence[float]) -> LossCurve
 
     a3 is the asymptotic loss: it must lie strictly below min(losses).
     We grid-search a3 and solve the conditionally-linear subproblem exactly.
+
+    Never raises: degenerate windows (fewer than 3 samples, mismatched or
+    non-1-D inputs, non-finite values, flat or rising loss) return a fit
+    with ``ok=False`` — callers branch on ``fit.ok``, not on exceptions.
     """
     t = np.asarray(times, dtype=np.float64)
     l = np.asarray(losses, dtype=np.float64)
     if t.shape != l.shape or t.ndim != 1 or t.size < 3:
-        raise ValueError("need >= 3 (time, loss) pairs")
+        return _FAILED_FIT
+    if not (np.all(np.isfinite(t)) and np.all(np.isfinite(l))):
+        return _FAILED_FIT
     t = t - t[0]  # shift origin; reward only depends on curve shape
 
     lmin, lmax = float(np.min(l)), float(np.max(l))
+    if lmax <= lmin:
+        # perfectly flat window: no decay information — lstsq would fit
+        # a1² within rounding error of zero and bless a meaningless curve
+        return _FAILED_FIT
     span = max(lmax - lmin, 1e-6)
-    best = LossCurveFit(np.nan, np.nan, np.nan, np.inf, ok=False)
+    best = _FAILED_FIT
     best_frac = 0.5
 
     def try_frac(frac):
@@ -131,13 +166,11 @@ def reward(
     """
     t = np.asarray(times, dtype=np.float64)
     l = np.asarray(losses, dtype=np.float64)
+    if t.size == 0 or t.shape != l.shape or t.ndim != 1:
+        return 0.0  # no observations ⇒ no ordering information
     if ell_ref is None:
         ell_ref = float(l[0] - 0.9 * max(l[0] - np.min(l), 1e-6))
-    try:
-        fit = fit_loss_curve(t, l)
-    except ValueError:
-        fit = LossCurveFit(np.nan, np.nan, np.nan, np.inf, ok=False)
-    r = reward_from_fit(fit, ell_ref)
+    r = reward_from_fit(fit_loss_curve(t, l), ell_ref)
     if np.isfinite(r) and r >= 0:
         return float(r)
     # Slope fallback: reward = −dℓ/dt.
@@ -156,23 +189,75 @@ def log_slope_reward(times, losses) -> float:
     compares windows against one fixed loss level; when probe windows are
     sampled sequentially on a decaying curve, later windows start closer
     to ℓ_ref and win regardless of their decay *rate* (drift bias). The
-    normalized rate is invariant to the window's starting level, so
-    consecutive candidates compare fairly. Used by Alg. 1's implementation
-    here; the paper-exact reward stays available as `reward`.
+    normalized rate is invariant to the window's starting level — and to
+    a constant time shift of the whole window — so consecutive candidates
+    compare fairly. Used by Alg. 1's implementation here; the paper-exact
+    reward stays available as ``reward`` / the ``curve_fit`` model.
     """
     t = np.asarray(times, dtype=np.float64)
     l = np.asarray(losses, dtype=np.float64)
-    if t.size < 2 or t[-1] <= t[0]:
+    if t.size < 2 or t.shape != l.shape or t.ndim != 1 or t[-1] <= t[0]:
         return 0.0  # no time span observed ⇒ no decay-rate information
     a3 = 0.0
-    try:
-        fit = fit_loss_curve(t, l)
-        if fit.ok and np.isfinite(fit.a3):
-            a3 = min(fit.a3, float(l.min()) - 1e-9)
-    except ValueError:
-        pass
+    fit = fit_loss_curve(t, l)
+    if fit.ok and np.isfinite(fit.a3):
+        a3 = min(fit.a3, float(l.min()) - 1e-9)
     y = np.log(np.maximum(l - a3, 1e-12))
     tt = t - t[0]
     A = np.stack([tt, np.ones_like(tt)], axis=1)
     coef, *_ = np.linalg.lstsq(A, y, rcond=None)
     return float(-coef[0])
+
+
+# ---------------------------------------------------------------------------
+# Reward-model registry (mirrors repro.ps / repro.transport)
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class RewardModel(Protocol):
+    """Scores one probe window: larger = faster convergence. Must be a
+    pure deterministic function of the (times, losses) window."""
+
+    def __call__(self, times: Sequence[float], losses: Sequence[float]) -> float: ...
+
+
+_REWARD_MODELS: dict[str, RewardModel] = {}
+
+
+def register_reward_model(name: str, model: RewardModel) -> RewardModel:
+    """Register ``model`` under ``name`` (last registration wins)."""
+    _REWARD_MODELS[name] = model
+    return model
+
+
+def get_reward_model(name: str | RewardModel | None) -> RewardModel:
+    """Resolve a reward model by registry name; callables pass through and
+    ``None`` yields the default (``log_slope``)."""
+    if name is None:
+        return _REWARD_MODELS["log_slope"]
+    if callable(name):
+        return name
+    try:
+        return _REWARD_MODELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown reward model {name!r}; known: {sorted(_REWARD_MODELS)}"
+        ) from None
+
+
+def reward_model_names() -> tuple[str, ...]:
+    return tuple(sorted(_REWARD_MODELS))
+
+
+# NOTE: a RewardModel sees one window at a time, so the registered
+# ``curve_fit`` scores each window against its *own* default ℓ_ref (90%
+# of that window's drop) rather than one reference shared across the
+# candidates being compared — on sequentially-sampled probes that
+# carries the drift bias described in ``log_slope_reward``. It is kept
+# for paper-fidelity experiments; ``log_slope`` (reference-free by
+# construction) is the search default. Callers who need the paper's
+# shared-reference comparison can register a closure capturing ℓ_ref:
+# ``register_reward_model("curve_fit@ref", lambda t, l: reward(t, l, REF))``.
+register_reward_model("curve_fit", reward)
+register_reward_model("log_slope", log_slope_reward)

@@ -1,0 +1,319 @@
+"""Alg. 1 — Commit-Rate Adjustment at the Scheduler (online search).
+
+The scheduler is substrate-agnostic: it talks to the running system through
+the ``OnlineSystem`` protocol, which both the edge simulator
+(``repro.edgesim``) and the cluster runtime (``repro.launch.train``)
+implement. ``evaluate`` runs the system *live* (no state reset — this is
+the paper's online search) for a probe window under a given C_target and
+returns the (time, loss) samples observed.
+
+DECIDECOMMITRATE starts from C_target = max_i c_i + 1 (the smallest value
+letting every worker commit ≥ once per period), compares the rewards of
+C_target and C_target+1, and climbs while the reward improves. §4.2 argues
+the optimum is to the right of the start point, so a one-directional climb
+suffices. Two guards bound the climb: ``max_probes`` caps total probe
+windows, and the ε-tie **patience** guard lets up to ``patience``
+consecutive near-tie probes (reward within ``eps_tie`` of the best, in
+relative terms) extend the climb instead of ending it — one noisy plateau
+probe cannot terminate the search, and a noisy plateau cannot climb
+forever either. With the defaults (patience=0) the climb is exactly the
+paper's: break on the first non-improving probe.
+
+The climb itself is the :class:`SearchSession` state machine: one
+``probe_window_complete`` transition per probe window, so the engine can
+interleave probes with normal event dispatch — and churn or speed-shift
+events arriving *mid-probe* invalidate the window and restart (or, past
+``max_restarts``, abort) the session instead of being invisible to it.
+``decide_commit_rate`` is the blocking convenience wrapper that drives a
+session to completion against an ``OnlineSystem``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence
+
+from .reward import RewardModel, get_reward_model
+
+__all__ = [
+    "OnlineSystem",
+    "SearchTrace",
+    "SearchSession",
+    "decide_commit_rate",
+    "Scheduler",
+    "pad_probe_samples",
+]
+
+
+def pad_probe_samples(ts: list, ls: list) -> tuple[list, list]:
+    """Ensure a probe window yields ≥3 (time, loss) samples — the minimum
+    the reward curve fit needs — by inserting a midpoint. Shared by every
+    backend's ``run_window`` so the sampling contract lives in one place.
+
+    Degenerate windows (shorter than the eval interval, or cut off by
+    convergence) can arrive with 0 or 1 samples, or with all samples at
+    one instant; those yield a synthetic flat window (zero reward slope)
+    instead of an IndexError / duplicate time points that break the
+    curve fit's slope normalization.
+    """
+    ts, ls = list(ts), list(ls)
+    if not ts:
+        return ts, ls
+    if len(ts) == 1 or ts[-1] <= ts[0]:
+        # A single observed instant carries no decay-rate information:
+        # expand to a flat 1-second window so the fit sees slope 0.
+        t0, l0 = ts[-1], ls[-1]
+        return [t0, t0 + 0.5, t0 + 1.0], [l0, l0, l0]
+    if len(ts) < 3:
+        ts.insert(1, (ts[0] + ts[-1]) / 2)
+        ls.insert(1, (ls[0] + ls[-1]) / 2)
+    return ts, ls
+
+
+class OnlineSystem(Protocol):
+    """What Alg. 1 needs from the system under control."""
+
+    def commit_counts(self) -> Sequence[int]:
+        """Current cumulative commit count c_i per worker."""
+        ...
+
+    def evaluate(self, c_target: int, probe_seconds: float) -> tuple[Sequence[float], Sequence[float]]:
+        """Run live with commit rates ΔC_i = C_target − c_i for
+        ``probe_seconds`` (virtual) seconds; return (times, losses) sampled
+        during the window (≥3 samples: start / middle / end)."""
+        ...
+
+
+@dataclasses.dataclass
+class SearchTrace:
+    """Record of one search, for EXPERIMENTS.md and tests."""
+
+    candidates: list[int] = dataclasses.field(default_factory=list)
+    rewards: list[float] = dataclasses.field(default_factory=list)
+    chosen: int = -1
+    restarts: int = 0  # churn-forced restarts absorbed by the session
+    aborted: bool = False  # True if churn exhausted max_restarts
+    # every window the backend actually ran for this search: scored ones
+    # (including those of climbs later abandoned by a restart) plus the
+    # churn-invalidated window behind each restart
+    windows: int = 0
+    # (virtual) time span of the search, stamped by the engine; -1 when
+    # the driver keeps no clock (e.g. decide_commit_rate on a bare system)
+    t_start: float = -1.0
+    t_end: float = -1.0
+
+    @property
+    def probe_windows(self) -> int:
+        """Probe windows consumed, counting both the discarded window
+        behind every churn restart and the scored windows of abandoned
+        climbs. Falls back to the final climb's length for traces built
+        without a session (e.g. hand-made oracles)."""
+        return self.windows if self.windows else len(self.candidates) + self.restarts
+
+
+@dataclasses.dataclass
+class SearchSession:
+    """Incremental DECIDECOMMITRATE (Alg. 1 lines 8–16): one probe window
+    per transition, driven by probe-window-complete events.
+
+    Lifecycle::
+
+        s = SearchSession(...)
+        cand = s.begin(commit_counts)        # -> first candidate to probe
+        while cand is not None:
+            ...run the system live at C_target=cand for probe_seconds...
+            # churn mid-window? -> s.notify_churn(); then either
+            #   s.restart(commit_counts)  (window invalid, start over), or
+            #   the session aborts itself past max_restarts
+            cand = s.probe_window_complete(times, losses)
+        s.trace.chosen                        # the winner (engine retargets)
+
+    States: ``idle`` → ``probing`` → ``done`` | ``aborted``. The climb
+    keeps the best candidate seen; a probe improving on it advances the
+    climb, a probe within ``eps_tie`` (relative) of it spends one unit of
+    ``patience`` and keeps climbing, anything worse — or patience/probes
+    exhausted — ends the search at the best candidate. Defaults
+    (patience=0, eps_tie=0) reproduce the paper's break-on-first-miss
+    climb bit for bit.
+    """
+
+    probe_seconds: float = 60.0
+    max_probes: int = 16
+    patience: int = 0
+    eps_tie: float = 0.0
+    reward_model: str | RewardModel | None = "log_slope"
+    max_restarts: int = 2
+    # -- state ---------------------------------------------------------------
+    state: str = dataclasses.field(default="idle", init=False)
+    trace: SearchTrace = dataclasses.field(default_factory=SearchTrace, init=False)
+    candidate: int = dataclasses.field(default=-1, init=False)
+    _reward: RewardModel = dataclasses.field(default=None, init=False, repr=False)
+    _best_c: int = dataclasses.field(default=-1, init=False)
+    _best_r: float = dataclasses.field(default=0.0, init=False)
+    _have_best: bool = dataclasses.field(default=False, init=False)
+    _misses: int = dataclasses.field(default=0, init=False)
+    _probes: int = dataclasses.field(default=0, init=False)
+    _churned: bool = dataclasses.field(default=False, init=False)
+
+    @property
+    def active(self) -> bool:
+        return self.state == "probing"
+
+    @property
+    def churned(self) -> bool:
+        """True if churn arrived since the current probe window started."""
+        return self._churned
+
+    # ------------------------------------------------------------ lifecycle
+    def begin(self, commit_counts: Sequence[int]) -> int:
+        """Start (or restart) the climb from C_target = max_i c_i + 1.
+        Returns the first candidate to probe."""
+        self._reward = get_reward_model(self.reward_model)
+        self.candidate = int(max(commit_counts)) + 1
+        self.trace.candidates = [self.candidate]
+        self.trace.rewards = []
+        self.trace.chosen = -1
+        self._have_best = False
+        self._best_c, self._best_r = -1, 0.0
+        self._misses = 0
+        self._probes = 0
+        self._churned = False
+        self.state = "probing"
+        return self.candidate
+
+    def notify_churn(self) -> None:
+        """A worker joined/left or changed speed mid-probe: the window in
+        flight mixes two fleets and must not be scored."""
+        if self.state == "probing":
+            self._churned = True
+
+    def restart(self, commit_counts: Sequence[int]) -> int | None:
+        """Throw away the climb and start over on the new fleet (commit
+        counts changed under us). Past ``max_restarts`` the session aborts
+        — the epoch/drift trigger will search again later — and the best
+        candidate probed so far (if any) is kept as the choice.
+
+        Returns the next candidate to probe, or None if the session ended.
+        """
+        if self.state != "probing":
+            return None
+        self.trace.windows += 1  # the churn-invalidated window still ran
+        if self.trace.restarts >= self.max_restarts:
+            self.trace.aborted = True
+            self._finish(aborted=True)
+            return None
+        self.trace.restarts += 1
+        self.begin(commit_counts)  # does not reset trace.restarts/windows
+        return self.candidate
+
+    def probe_window_complete(self, times, losses) -> int | None:
+        """Consume the probe window observed for ``self.candidate``.
+        Returns the next candidate to probe, or None when the search is
+        done (``trace.chosen`` holds the winner)."""
+        if self.state != "probing":
+            raise RuntimeError(f"probe_window_complete in state {self.state!r}")
+        if self._churned:
+            raise RuntimeError(
+                "probe window invalidated by churn; call restart() first"
+            )
+        self._probes += 1
+        self.trace.windows += 1
+        r = float(self._reward(times, losses))
+        if not self._have_best:
+            # First probe: its reward enters the trace lazily, at the first
+            # comparison (or at _finish if max_probes == 1).
+            self._have_best = True
+            self._best_c, self._best_r = self.candidate, r
+        else:
+            if not self.trace.rewards:
+                self.trace.rewards.append(self._best_r)
+            self.trace.rewards.append(r)
+            if r > self._best_r:
+                self._best_c, self._best_r = self.candidate, r
+                self._misses = 0
+            else:
+                drop = self._best_r - r
+                near_tie = drop <= self.eps_tie * max(abs(self._best_r), 1e-12)
+                if near_tie and self._misses < self.patience:
+                    self._misses += 1  # noisy plateau: spend patience, climb on
+                else:
+                    self._finish()
+                    return None
+        if self._probes >= self.max_probes:
+            self._finish()
+            return None
+        self.candidate += 1
+        self.trace.candidates.append(self.candidate)
+        return self.candidate
+
+    def _finish(self, aborted: bool = False) -> None:
+        self.state = "aborted" if aborted else "done"
+        if self._have_best:
+            self.trace.chosen = self._best_c
+        else:
+            # aborted before any window completed: keep the start candidate
+            self.trace.chosen = self.candidate
+        if not self.trace.rewards and self._have_best:
+            self.trace.rewards.append(self._best_r)
+        # drop the candidate left un-probed when the climb ended early
+        n = self._probes if self._probes else 1
+        del self.trace.candidates[n:]
+
+
+def decide_commit_rate(
+    system: OnlineSystem,
+    probe_seconds: float = 60.0,
+    max_probes: int = 16,
+    patience: int = 0,
+    eps_tie: float = 0.0,
+    reward_model: str | RewardModel | None = "log_slope",
+) -> tuple[int, SearchTrace]:
+    """DECIDECOMMITRATE (Alg. 1 lines 8–16), blocking form: drives a
+    :class:`SearchSession` to completion against an ``OnlineSystem``.
+
+    Returns the chosen C_target and the search trace. The paper probes each
+    candidate for ~1 minute; probe_seconds is virtual time in the simulator.
+    """
+    session = SearchSession(
+        probe_seconds=probe_seconds,
+        max_probes=max_probes,
+        patience=patience,
+        eps_tie=eps_tie,
+        reward_model=reward_model,
+    )
+    cand = session.begin(system.commit_counts())
+    while cand is not None:
+        ts, ls = system.evaluate(cand, probe_seconds)
+        cand = session.probe_window_complete(ts, ls)
+    return session.trace.chosen, session.trace
+
+
+@dataclasses.dataclass
+class Scheduler:
+    """MAINFUNCTION (Alg. 1 lines 1–7): per-epoch commit-rate control.
+
+    Drives an OnlineSystem that additionally exposes ``run(seconds)`` and
+    ``set_c_target(c)``; the edgesim simulator satisfies this.
+    """
+
+    epoch_seconds: float = 1200.0  # paper default: 20-minute epochs
+    probe_seconds: float = 60.0
+    max_probes: int = 16
+    patience: int = 0
+    eps_tie: float = 0.0
+    reward_model: str | RewardModel | None = "log_slope"
+    traces: list[SearchTrace] = dataclasses.field(default_factory=list)
+
+    def run_epoch(self, system) -> int:
+        c_target, trace = decide_commit_rate(
+            system, self.probe_seconds, self.max_probes,
+            patience=self.patience, eps_tie=self.eps_tie,
+            reward_model=self.reward_model,
+        )
+        self.traces.append(trace)
+        spent = self.probe_seconds * len(trace.candidates)
+        remaining = max(self.epoch_seconds - spent, 0.0)
+        system.set_c_target(c_target)
+        if remaining > 0:
+            system.run(remaining)
+        return c_target

@@ -19,7 +19,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.theory import WorkerProfile, heterogeneity_degree
+from repro.control.theory import WorkerProfile, heterogeneity_degree
 
 __all__ = [
     "ratio_profiles",

@@ -46,12 +46,18 @@ Semantics (matching the paper's testbed + Alg. 2):
   paper's criterion) or when the loss first reaches ``target_loss``.
 
 Control plane: the simulator is a *backend* of
-``repro.cluster.ClusterEngine`` (DESIGN.md §2). Every decision point —
-commit-or-not, block-or-start, rates, timers, batch fractions, the Alg. 1
-search — is an event dispatched through the engine to the active policy;
-the simulator only executes physics (virtual clock, gradients, PS math).
-The same engine+policy pair drives the real mesh loop, so Alg. 1/Alg. 2
-logic exists exactly once.
+``repro.cluster.ClusterEngine`` (DESIGN.md §2, §12). Every decision
+point — commit-or-not, block-or-start, rates, timers, batch fractions,
+the Alg. 1 search — is an event dispatched through the engine to the
+active policy; the simulator only executes physics (virtual clock,
+gradients, PS math). The same engine+policy pair drives the real mesh
+loop, so Alg. 1/Alg. 2 logic exists exactly once. A ``Search`` runs as
+an incremental ``repro.control.SearchSession`` whose probe windows are
+live simulation, so churn landing mid-probe restarts the session — and
+with ``ADSP(search_mode="drift"|"both")`` a churn or speed-shift event
+can itself trigger a mid-epoch re-search (the engine re-enters
+``_run_until`` for the probe windows; its clock guards keep time
+monotone across that nesting).
 
 Elastic churn: ``add_worker`` / ``remove_worker`` / ``set_speed`` (or a
 declarative ``cluster.ChurnSchedule``) change the fleet mid-run; the
@@ -73,7 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster import ChurnSchedule, ClusterEngine
-from repro.core.theory import WorkerProfile
+from repro.control.theory import WorkerProfile
 from repro.ps.sharding import ShardPlan
 from repro.transport import Codec, dense_nbytes, get_codec
 
@@ -576,22 +582,38 @@ class Simulator:
                 self._local_lr = self.cfg.local_lr * (
                     self.cfg.local_lr_decay ** (self.now / self.cfg.gamma)
                 )
-                self.engine.checkpoint()
+                # Advance the timer BEFORE dispatching: a drift-triggered
+                # Search inside the checkpoint handler re-enters this loop
+                # through its probe windows, and a stale _next_checkpoint
+                # would make the nested frame fire this same checkpoint
+                # again (and the outer += would then skip a later one).
                 self._next_checkpoint += self.cfg.gamma
+                self.engine.checkpoint()
 
     def _run_until(self, t_end: float) -> None:
+        # Re-entrant: a drift-triggered Search executed while firing a
+        # churn/checkpoint timer runs its probe windows through a nested
+        # _run_until on this same heap, possibly advancing the clock past
+        # this frame's t_end — the max() guards keep time monotone when
+        # the outer frame resumes.
         while self._heap and not self.converged:
-            t = self._heap[0][0]
+            head = self._heap[0]
+            t = head[0]
             if self._fire_timers(min(t, t_end)):
                 return
+            if not self._heap or self._heap[0] is not head:
+                # a timer dispatch (churn → drift Search) ran a nested
+                # probe window that consumed heap events: the peek is
+                # stale — re-evaluate instead of popping a later event
+                continue
             if t > t_end:
-                self.now = t_end
+                self.now = max(self.now, t_end)
                 return
             t, _, kind, wid, arg = heapq.heappop(self._heap)
             w = self._by_id.get(wid)
             if w is None:  # event of a departed worker
                 continue
-            self.now = t
+            self.now = max(self.now, t)
             if kind == "step_done":
                 self._on_step_done(w)
             elif kind == "commit_arrive":
@@ -600,7 +622,8 @@ class Simulator:
                 self._on_shard_arrive(w, arg)
             elif kind == "pull_done":
                 self._on_pull_done(w)
-        self.now = min(t_end, self.now) if self._heap else t_end
+        if not self._heap:
+            self.now = max(self.now, t_end)
 
     def _eval_global(self) -> None:
         loss = float(self.task.eval_fn(self.global_params, self.task.eval_batch))
@@ -644,7 +667,7 @@ class Simulator:
         if not self.converged:  # don't jump the clock past a finished run
             self.now = max(self.now, start + seconds)
         self._eval_global()
-        from repro.core.search import pad_probe_samples
+        from repro.control.search import pad_probe_samples
 
         ts = [t for t, _ in self.loss_history if t >= start]
         ls = [l for t, l in self.loss_history if t >= start]

@@ -26,7 +26,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
-from repro.core.jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, use_mesh
+from repro.compat import SCAN_IN_PARTIAL_AUTO_BROKEN, use_mesh
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build
@@ -55,7 +55,7 @@ def run_one(arch: str, shape: str, mesh_name: str, tau: int = 4,
     if (spec.kind == "train" and SCAN_IN_PARTIAL_AUTO_BROKEN
             and not overrides.get("granularity")):
         # This jax's SPMD partitioner aborts on lax.scan inside a partially
-        # manual shard_map (see core.jaxcompat); the layer-group scans make
+        # manual shard_map (see repro.compat); the layer-group scans make
         # worker-axis train steps uncompilable, so measure the accum
         # (no-worker-axis) variant and say so in the artifact.
         overrides["granularity"] = "accum"

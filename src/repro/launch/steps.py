@@ -8,7 +8,6 @@ dry-run lowers these; launchers call them with real arrays.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -34,10 +34,11 @@ import numpy as np
 
 from repro.checkpoint import save_train_state
 from repro.cluster import ADSP, ClusterEngine
+from repro.control import reward_model_names
 from repro.cluster.mesh_backend import MeshBackend, MeshTask
 from repro.configs import get_config, get_smoke
-from repro.core.jaxcompat import use_mesh
-from repro.core.theory import WorkerProfile
+from repro.compat import use_mesh
+from repro.control.theory import WorkerProfile
 from repro.data.synthetic import lm_tokens
 from repro.models import lm
 from repro.models.config import ModelConfig
@@ -74,6 +75,9 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
                  update_rules: UpdateRules | None = None,
                  codec=None,
                  n_shards: int = 1,
+                 search_mode: str = "epoch",
+                 drift_threshold: float = 0.25,
+                 reward_model: str = "log_slope",
                  ) -> tuple[MeshBackend, ClusterEngine, ADSP]:
     """Build the (backend, engine, policy) triple for an arch on a mesh."""
     from repro.launch.mesh import worker_axes_for
@@ -96,9 +100,14 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
         local_lr=local_lr, global_lr=global_lr, profiles=profiles,
         rules=update_rules, codec=codec, n_shards=n_shards,
     )
+    # drift mode stays armed even with no epoch cadence configured: the
+    # detector, not the epoch clock, decides when to search
     policy = ADSP(
-        gamma=gamma_rounds, search=bool(search_every),
+        gamma=gamma_rounds,
+        search=bool(search_every) or search_mode in ("drift", "both"),
         probe_seconds=3.0, max_probes=4,
+        search_mode=search_mode, drift_threshold=drift_threshold,
+        drift_cooldown=4 * gamma_rounds, reward_model=reward_model,
     )
     engine = ClusterEngine(policy, backend)
     return backend, engine, policy
@@ -118,6 +127,16 @@ def main(argv=None):
                    help="check period Γ in commit rounds")
     p.add_argument("--search-every", type=int, default=0,
                    help="run Alg. 1 search every N commits (0 = off)")
+    p.add_argument("--search-mode", default="epoch",
+                   choices=["epoch", "drift", "both"],
+                   help="when to re-search: on the epoch clock (paper), "
+                        "on detected fleet drift, or both")
+    p.add_argument("--drift-threshold", type=float, default=0.25,
+                   help="speed-fraction TV distance triggering a drift "
+                        "re-search (--search-mode drift|both)")
+    p.add_argument("--reward-model", default="log_slope",
+                   choices=reward_model_names(),
+                   help="probe-window reward model (repro.control registry)")
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
@@ -135,6 +154,8 @@ def main(argv=None):
         local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
         gamma_rounds=args.gamma_rounds, search_every=args.search_every,
         update_rules=rules, codec=codec, n_shards=args.ps_shards,
+        search_mode=args.search_mode, drift_threshold=args.drift_threshold,
+        reward_model=args.reward_model,
     )
     lr_rule, cr_rule = backend.rules
     print(f"# arch={cfg.name} params={cfg.total_params()/1e6:.1f}M "

@@ -66,7 +66,7 @@ def annotate(x: jax.Array, logical: Sequence[str | None], rules: Mapping) -> jax
 
 
 def _axis_size(axis) -> int:
-    from repro.core.jaxcompat import ambient_mesh_axes
+    from repro.compat import ambient_mesh_axes
 
     sizes = ambient_mesh_axes()
     if not sizes:

@@ -26,8 +26,6 @@ final position masked, so a (B, S) batch trains S−1 predictions.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Mapping
 
 import jax
 import jax.numpy as jnp

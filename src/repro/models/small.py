@@ -15,7 +15,6 @@ plus ``loss_fn(params, batch)`` used by the simulator's grad function.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Commit configuration and the training state carried across commits.
 
-``CommitConfig`` is the ADSP commit behaviour knob set (moved here from
-``repro.core.commit``, which re-exports it for compatibility).
+``CommitConfig`` is the ADSP commit behaviour knob set.
 
 ``AdspState`` generalizes the seed's (params, prev_delta, step) triple:
 optimizer state is *rule-owned* —
@@ -31,7 +30,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import theory
+from repro.control import theory
 
 __all__ = ["CommitConfig", "AdspState", "effective_momentum"]
 

@@ -1,7 +1,7 @@
 """One train-step factory for every ADSP granularity and rule backend.
 
 ``make_train_step`` replaces the seed's twice-written local-update/commit
-math (``core.commit.make_adsp_step`` + ``core.accum.make_accum_step``,
+math (the seed's ``make_adsp_step`` + ``make_accum_step`` factories,
 both now thin shims over this): one τ-masked microstep scan feeds one
 CommitRule apply, with the worker axes deciding whether a shard_map +
 pmean wraps it.
@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
+from repro.compat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
 
 from .rules import LocalRule, UpdateRules
 from .sharding import ShardPlan

@@ -27,7 +27,7 @@ def test_missing_leaf_raises(tmp_path):
 
 
 def test_train_state_helpers(tmp_path):
-    from repro.core.commit import AdspState
+    from repro.ps import AdspState
 
     state = AdspState.create({"w": jnp.ones((4, 4))})
     p = tmp_path / "s.npz"

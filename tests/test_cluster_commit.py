@@ -4,14 +4,35 @@
 tests/test_dryrun_smoke.py which runs in a subprocess with fake devices.)
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.accum import make_accum_step
-from repro.core.commit import AdspState, CommitConfig, effective_momentum, make_adsp_step
-from repro.core.jaxcompat import use_mesh
+from repro.compat import use_mesh
+from repro.ps import (
+    AdspState,
+    CommitConfig,
+    UpdateRules,
+    effective_momentum,
+    make_train_step,
+)
+
+SEED_RULES = UpdateRules(local="sgd", commit="momentum_delta", backend="reference")
+
+
+def make_adsp_step(loss_fn, cfg, mesh, batch_spec=None):
+    """The seed's worker-axes ADSP step via the unified factory."""
+    return make_train_step(loss_fn, cfg, SEED_RULES, mesh=mesh,
+                           batch_spec=batch_spec)
+
+
+def make_accum_step(loss_fn, cfg):
+    """The seed's τ-step accumulation (no worker axis) via the factory."""
+    return make_train_step(loss_fn, dataclasses.replace(cfg, worker_axes=()),
+                           SEED_RULES)
 
 
 def quad_loss(params, batch):

@@ -33,7 +33,7 @@ from repro.cluster import (
     speed,
 )
 from repro.cluster.mesh_backend import MeshBackend, MeshTask
-from repro.core.theory import WorkerProfile
+from repro.control.theory import WorkerProfile
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles
 from repro.edgesim.tasks import svm_task
@@ -174,7 +174,7 @@ def test_mesh_backend_multiworker_subprocess(tmp_path):
         import numpy as np
         from repro.cluster import ADSP, ClusterEngine
         from repro.cluster.mesh_backend import MeshBackend, MeshTask
-        from repro.core.theory import WorkerProfile
+        from repro.control.theory import WorkerProfile
 
         rng = np.random.default_rng(0)
         w_true = rng.normal(size=(4, 1)).astype(np.float32)

@@ -10,7 +10,13 @@ they run in the bare container unlike test_reward_search.py):
   * ``policies._speed_fraction`` with a dead worker id — same bug class;
   * ``ADSPPlus.tau_cap`` with an elastically joined worker whose stable
     id falls outside the offline grid — previously IndexError;
-  * ``AdaComm`` restart — previously reused the stale loss baseline.
+  * ``AdaComm`` restart — previously reused the stale loss baseline;
+  * search under churn — a worker leaving/joining mid-probe-window must
+    restart the SearchSession, not crash nor corrupt the SearchTrace;
+  * ``ClusterEngine.evaluate``/``set_c_target`` against a policy without
+    retarget support — a clear TypeError naming the policy, previously a
+    silent no-op (base ClusterPolicy) or a bare AttributeError (legacy
+    strategy objects).
 """
 
 import math
@@ -18,8 +24,8 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.reward import log_slope_reward
-from repro.core.search import pad_probe_samples
+from repro.control.reward import log_slope_reward
+from repro.control.search import pad_probe_samples
 
 
 def test_pad_probe_samples_normal_cases_unchanged():
@@ -121,7 +127,7 @@ def test_adsp_plus_tau_cap_survives_elastic_join():
     fleet: an elastic joiner (id ≥ len(tau_cap)) must run uncapped, not
     IndexError. Exercised end to end through the simulator."""
     from repro.cluster import ChurnSchedule, join, make_policy
-    from repro.core.theory import WorkerProfile
+    from repro.control.theory import WorkerProfile
     from repro.edgesim import SimConfig, Simulator
     from repro.edgesim.tasks import svm_task
 
@@ -159,3 +165,147 @@ def test_adacomm_restart_resets_loss_baseline():
     policy.on_started(View())
     assert policy.tau == policy.tau0
     assert math.isnan(policy._loss0) and math.isnan(policy._last_loss)
+
+
+# ---------------------------------------------------------------------------
+# Search under churn (SearchSession restart semantics, end to end)
+# ---------------------------------------------------------------------------
+
+
+def _search_sim(churn_actions, probe_seconds=30.0, max_probes=4):
+    from repro.cluster import ChurnSchedule, make_policy
+    from repro.edgesim import SimConfig, Simulator
+    from repro.edgesim.profiles import ratio_profiles
+    from repro.edgesim.tasks import svm_task
+
+    profiles = ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)
+    policy = make_policy("adsp", gamma=20.0, search=True,
+                         probe_seconds=probe_seconds, max_probes=max_probes)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    max_seconds=4000.0, local_lr=0.05)
+    churn = ChurnSchedule(churn_actions)
+    return Simulator(svm_task(len(profiles)), profiles, policy, cfg,
+                     churn=churn), policy
+
+
+def _assert_trace_consistent(tr):
+    assert tr.chosen in tr.candidates, (tr.chosen, tr.candidates)
+    # candidates climb by exactly 1 from the (re)start point
+    assert tr.candidates == list(range(tr.candidates[0],
+                                       tr.candidates[0] + len(tr.candidates)))
+    assert len(tr.rewards) <= len(tr.candidates)
+    assert all(np.isfinite(r) for r in tr.rewards)
+
+
+def test_search_survives_worker_leaving_mid_probe_window():
+    """A worker leaving inside a probe window must not crash the session:
+    the window is discarded, the climb restarts on the surviving fleet,
+    and the recorded SearchTrace stays self-consistent."""
+    from repro.cluster import leave
+
+    sim, policy = _search_sim([leave(10.0, worker=2)])
+    sim.engine.epoch_end()  # churn lands inside the first probe window
+    assert len(policy.traces) == 1
+    tr = policy.traces[0]
+    assert tr.restarts >= 1
+    _assert_trace_consistent(tr)
+    assert sim.num_workers == 2
+    assert policy.c_target == tr.chosen
+    sim.run(50.0)  # and the system keeps training normally
+    assert all(w.steps > 0 for w in sim.workers)
+
+
+def test_search_survives_worker_joining_mid_probe_window():
+    from repro.cluster import join
+    from repro.control.theory import WorkerProfile
+
+    sim, policy = _search_sim([join(10.0, WorkerProfile(v=2.0, o=0.2))])
+    sim.engine.epoch_end()
+    assert len(policy.traces) == 1
+    tr = policy.traces[0]
+    assert tr.restarts >= 1
+    _assert_trace_consistent(tr)
+    assert sim.num_workers == 4
+    # the joiner is folded into the restarted climb's rate rule
+    assert all(w.delta_c_target >= 1 for w in sim.workers)
+
+
+def test_search_aborts_cleanly_under_sustained_churn():
+    """Churn in *every* probe window exhausts the restart budget: the
+    session aborts (no infinite search), keeps a valid choice, and the
+    trace records the abort."""
+    from repro.cluster import speed
+
+    actions = [speed(10.0 + 30.0 * k, worker=2, v=3.0 + k) for k in range(6)]
+    sim, policy = _search_sim(actions)
+    sim.engine.epoch_end()
+    assert len(policy.traces) == 1
+    tr = policy.traces[0]
+    assert tr.aborted and tr.restarts >= 1
+    assert tr.chosen >= 1
+    assert policy.c_target == tr.chosen
+    assert not sim.engine.search_active
+
+
+# ---------------------------------------------------------------------------
+# Retarget guard: evaluate/set_c_target against non-retargeting policies
+# ---------------------------------------------------------------------------
+
+
+def test_set_c_target_non_adsp_policy_raises_typeerror():
+    """BSP never overrides retarget: driving Alg. 1 machinery against it
+    must fail loudly (naming the policy), not silently no-op."""
+    from repro.cluster import make_policy
+    from repro.control.theory import WorkerProfile
+    from repro.edgesim import SimConfig, Simulator
+    from repro.edgesim.tasks import svm_task
+
+    profiles = [WorkerProfile(v=1.0, o=0.2), WorkerProfile(v=2.0, o=0.2)]
+    sim = Simulator(svm_task(2), profiles, make_policy("bsp"),
+                    SimConfig(max_seconds=50.0, base_batch=32))
+    with pytest.raises(TypeError, match="'bsp'.*does not support"):
+        sim.set_c_target(3)
+    with pytest.raises(TypeError, match="BSP"):
+        sim.engine.evaluate(3, 5.0)
+
+
+def test_legacy_policy_without_retarget_raises_typeerror():
+    """A legacy strategy object (pre-engine API) without a retarget hook:
+    previously AttributeError from deep inside the search."""
+    from repro.cluster import SyncPolicy, coerce_policy
+
+    class OldStyle(SyncPolicy):
+        name = "third_party"
+
+        def should_commit(self, sim, w):
+            return True
+
+    adapter = coerce_policy(OldStyle())
+    assert not adapter.supports_retarget()
+
+    from repro.cluster.engine import ClusterEngine
+
+    eng = ClusterEngine.__new__(ClusterEngine)
+    eng.policy = adapter
+    with pytest.raises(TypeError, match="'third_party'"):
+        eng._retarget_cmds(3)
+
+
+def test_legacy_policy_with_retarget_is_delegated():
+    from repro.cluster import SyncPolicy, coerce_policy
+
+    calls = []
+
+    class OldStyleTunable(SyncPolicy):
+        name = "tunable"
+
+        def should_commit(self, sim, w):
+            return True
+
+        def retarget(self, view, c_target):
+            calls.append(c_target)
+
+    adapter = coerce_policy(OldStyleTunable())
+    assert adapter.supports_retarget()
+    assert adapter.retarget(None, 7) == []
+    assert calls == [7]

@@ -1,0 +1,481 @@
+"""The repro.control subsystem: SearchSession state machine, pre-refactor
+parity of the epoch-mode search, ε-tie patience, reward-model registry,
+and drift-triggered mid-epoch re-search (hypothesis-free, runs in the
+bare container).
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import ADSP, ClusterEngine, ChurnSchedule, make_policy, speed
+from repro.control import (
+    DriftDetector,
+    SearchSession,
+    SearchTrace,
+    decide_commit_rate,
+    get_reward_model,
+    log_slope_reward,
+    reward_model_names,
+)
+from repro.control.theory import WorkerProfile
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import svm_task
+
+PROFILES = ratio_profiles((1, 1, 3), base_v=1.0, o=0.2)
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor parity: the SearchSession-driven epoch search must reproduce
+# the blocking decide_commit_rate loop bit for bit on default links.
+# ---------------------------------------------------------------------------
+
+
+def _pre_refactor_decide(system, probe_seconds=60.0, max_probes=16):
+    """Verbatim pre-refactor decide_commit_rate (the blocking Alg. 1 loop
+    retired by the repro.control migration) — the parity oracle."""
+    trace = SearchTrace()
+    c_target = int(max(system.commit_counts())) + 1
+
+    t1, l1 = system.evaluate(c_target, probe_seconds)
+    trace.candidates.append(c_target)
+
+    probes = 1
+    while probes < max_probes:
+        t2, l2 = system.evaluate(c_target + 1, probe_seconds)
+        probes += 1
+        r1 = log_slope_reward(t1, l1)
+        r2 = log_slope_reward(t2, l2)
+        if not trace.rewards:
+            trace.rewards.append(r1)
+        trace.candidates.append(c_target + 1)
+        trace.rewards.append(r2)
+        if r2 > r1:
+            c_target, t1, l1 = c_target + 1, t2, l2
+        else:
+            break
+    trace.chosen = c_target
+    if not trace.rewards:  # max_probes == 1
+        trace.rewards.append(log_slope_reward(t1, l1))
+    return c_target, trace
+
+
+def _make_sim(max_probes):
+    policy = make_policy("adsp", gamma=20.0, search=True,
+                         probe_seconds=20.0, max_probes=max_probes)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    max_seconds=2000.0, local_lr=0.05)
+    return Simulator(svm_task(len(PROFILES)), PROFILES, policy, cfg)
+
+
+@pytest.mark.parametrize("max_probes", [1, 4, 8])
+def test_epoch_search_parity_with_pre_refactor_loop(max_probes):
+    """Two identically-seeded simulators, default (infinite-bandwidth)
+    links: the event-driven SearchSession search and the retired blocking
+    loop must produce the same probes, the same SearchTrace — candidates,
+    rewards bit for bit — and the same chosen C_target."""
+    sim_new = _make_sim(max_probes)
+    sim_new.engine.epoch_end()  # Search command → SearchSession
+    assert len(sim_new.policy.traces) == 1
+    new = sim_new.policy.traces[0]
+
+    sim_old = _make_sim(max_probes)
+    chosen, old = _pre_refactor_decide(
+        sim_old.engine, probe_seconds=20.0, max_probes=max_probes
+    )
+    sim_old.engine.set_c_target(chosen)  # the engine did this after _run_search
+
+    assert new.candidates == old.candidates
+    assert new.rewards == old.rewards  # exact float equality
+    assert new.chosen == old.chosen == chosen
+    assert new.restarts == 0 and not new.aborted
+    assert sim_new.policy.c_target == sim_old.policy.c_target
+    # both consumed the same probe windows of virtual time
+    assert sim_new.now == sim_old.now
+    assert sim_new.loss_history[-1] == sim_old.loss_history[-1]
+
+
+def test_decide_commit_rate_wrapper_matches_oracle():
+    """The blocking convenience wrapper drives a session to the same
+    result as the oracle loop."""
+    sim_a, sim_b = _make_sim(6), _make_sim(6)
+    c_new, tr_new = decide_commit_rate(sim_a.engine, 20.0, 6)
+    c_old, tr_old = _pre_refactor_decide(sim_b.engine, 20.0, 6)
+    assert (c_new, tr_new.candidates, tr_new.rewards, tr_new.chosen) == (
+        c_old, tr_old.candidates, tr_old.rewards, tr_old.chosen)
+
+
+# ---------------------------------------------------------------------------
+# SearchSession state machine + ε-tie patience
+# ---------------------------------------------------------------------------
+
+
+class ScriptedSystem:
+    """OnlineSystem whose windows carry a scripted reward per candidate:
+    the window is a flat line at the scripted value and the reward model
+    reads it straight off, so climb decisions are exactly controlled."""
+
+    def __init__(self, rewards_by_candidate, counts=(0, 0, 0)):
+        self.rewards = dict(rewards_by_candidate)
+        self._counts = list(counts)
+        self.probed = []
+
+    @staticmethod
+    def reward_model(ts, ls):
+        return float(ls[0])
+
+    def commit_counts(self):
+        return self._counts
+
+    def evaluate(self, c_target, probe_seconds):
+        self.probed.append(c_target)
+        r = self.rewards[c_target]
+        return [0.0, 1.0, 2.0], [r, r, r]
+
+
+def test_patience_zero_breaks_on_first_miss():
+    sys = ScriptedSystem({1: 1.0, 2: 0.98, 3: 1.2})
+    chosen, trace = decide_commit_rate(sys, 1.0, 8,
+                                       reward_model=ScriptedSystem.reward_model)
+    assert chosen == 1
+    assert sys.probed == [1, 2]  # the dip ended the climb immediately
+    assert trace.candidates == [1, 2]
+    assert trace.rewards == [1.0, 0.98]
+
+
+def test_patience_survives_one_noisy_probe():
+    """Regression (the docstring's promised patience guard): one noisy
+    near-tie probe must not end the climb — with patience the search sees
+    past the dip and finds the better candidate behind it."""
+    sys = ScriptedSystem({1: 1.0, 2: 0.98, 3: 1.2, 4: 0.5})
+    chosen, trace = decide_commit_rate(sys, 1.0, 8, patience=1, eps_tie=0.05,
+                                       reward_model=ScriptedSystem.reward_model)
+    assert chosen == 3  # climbed through the noisy probe at 2
+    assert sys.probed == [1, 2, 3, 4]
+    assert trace.candidates == [1, 2, 3, 4]
+    assert trace.rewards == [1.0, 0.98, 1.2, 0.5]
+    assert trace.chosen == 3
+
+
+def test_patience_exhausts_on_sustained_plateau():
+    """A *sustained* plateau spends all patience and ends the climb — the
+    guard bounds noisy plateaus in both directions."""
+    sys = ScriptedSystem({1: 1.0, 2: 0.99, 3: 0.985, 4: 0.98, 5: 2.0})
+    chosen, _ = decide_commit_rate(sys, 1.0, 16, patience=2, eps_tie=0.05,
+                                   reward_model=ScriptedSystem.reward_model)
+    assert chosen == 1
+    assert sys.probed == [1, 2, 3, 4]  # 2 misses tolerated, 3rd ends it
+
+
+def test_patience_large_drop_ends_climb_despite_patience():
+    sys = ScriptedSystem({1: 1.0, 2: 0.5, 3: 9.0})
+    chosen, _ = decide_commit_rate(sys, 1.0, 8, patience=3, eps_tie=0.05,
+                                   reward_model=ScriptedSystem.reward_model)
+    assert chosen == 1  # 50% drop is no tie: stop at once
+    assert sys.probed == [1, 2]
+
+
+def test_session_max_probes_caps_climb():
+    sys = ScriptedSystem({c: float(c) for c in range(1, 20)})
+    chosen, trace = decide_commit_rate(sys, 1.0, 5,
+                                       reward_model=ScriptedSystem.reward_model)
+    assert chosen == 5  # ever-improving, capped by the probe budget
+    assert trace.candidates == [1, 2, 3, 4, 5]
+    assert len(trace.rewards) == 5
+
+
+def test_session_single_probe_budget():
+    sys = ScriptedSystem({1: 0.7})
+    chosen, trace = decide_commit_rate(sys, 1.0, 1,
+                                       reward_model=ScriptedSystem.reward_model)
+    assert chosen == 1
+    assert trace.candidates == [1] and trace.rewards == [0.7]
+
+
+def test_session_churn_restart_and_abort():
+    s = SearchSession(probe_seconds=1.0, max_probes=8, max_restarts=1,
+                      reward_model=ScriptedSystem.reward_model)
+    assert s.begin([0, 0]) == 1
+    s.notify_churn()
+    assert s.churned
+    with pytest.raises(RuntimeError, match="invalidated by churn"):
+        s.probe_window_complete([0.0, 1.0], [1.0, 1.0])
+    # restart on the new fleet: climb starts over at max(counts)+1
+    assert s.restart([2, 2]) == 3
+    assert s.trace.restarts == 1 and s.active and not s.churned
+    # a clean probe now scores
+    assert s.probe_window_complete([0.0, 1.0, 2.0], [1.0, 1.0, 1.0]) == 4
+    # churn again: restart budget exhausted → abort, keep best-so-far
+    s.notify_churn()
+    assert s.restart([5, 5]) is None
+    assert s.state == "aborted" and s.trace.aborted
+    assert s.trace.chosen == 3  # the only candidate actually scored
+    assert s.trace.candidates == [3]
+
+
+def test_session_abort_before_any_probe_keeps_start_candidate():
+    s = SearchSession(max_probes=4, max_restarts=0)
+    s.begin([1, 1])
+    s.notify_churn()
+    assert s.restart([1, 1]) is None
+    assert s.trace.aborted and s.trace.chosen == 2  # max(counts)+1
+
+
+def test_reward_model_registry():
+    assert set(reward_model_names()) >= {"curve_fit", "log_slope"}
+    assert get_reward_model("log_slope") is log_slope_reward
+    assert get_reward_model(None) is log_slope_reward
+    fn = lambda ts, ls: 1.0  # noqa: E731
+    assert get_reward_model(fn) is fn
+    with pytest.raises(KeyError, match="unknown reward model"):
+        get_reward_model("magic")
+
+
+# ---------------------------------------------------------------------------
+# DriftDetector
+# ---------------------------------------------------------------------------
+
+
+def test_drift_detector_fleet_drift_metric():
+    d = DriftDetector(threshold=0.25, cooldown=0.0)
+    d.rebaseline({0: 0.2, 1: 0.2, 2: 0.6}, now=0.0)
+    assert d.fleet_drift({0: 0.2, 1: 0.2, 2: 0.6}) == pytest.approx(0.0)
+    # a worker leaving moves its whole share
+    assert d.fleet_drift({0: 0.5, 1: 0.5}) == pytest.approx(0.6)
+    assert not d.should_search({0: 0.21, 1: 0.19, 2: 0.6}, now=1.0)
+    assert d.should_search({0: 0.5, 1: 0.5}, now=2.0)
+
+
+def test_drift_detector_cooldown_limits_trigger_rate():
+    d = DriftDetector(threshold=0.1, cooldown=100.0)
+    d.rebaseline({0: 0.5, 1: 0.5}, now=0.0)
+    shifted = {0: 0.9, 1: 0.1}
+    assert d.should_search(shifted, now=10.0)
+    assert not d.should_search(shifted, now=50.0)  # still cooling down
+    assert d.should_search(shifted, now=120.0)
+
+
+def test_drift_detector_loss_regression_triggers():
+    d = DriftDetector(threshold=0.9, loss_rise_tol=0.1, cooldown=0.0)
+    base = {0: 0.5, 1: 0.5}
+    d.rebaseline(base, now=0.0)
+    d.observe_loss(1.0)
+    d.observe_loss(0.8)
+    assert not d.should_search(base, now=1.0)
+    d.observe_loss(0.95)  # regressed >10% above the best (0.8)
+    assert d.should_search(base, now=2.0)
+
+
+def test_drift_detector_first_fleet_adopted_silently():
+    d = DriftDetector(threshold=0.1, cooldown=0.0)
+    assert not d.should_search({0: 1.0}, now=0.0)  # baselines, no trigger
+    assert d.should_search({0: 0.5, 1: 0.5}, now=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Drift-triggered re-search, end to end on both backends
+# ---------------------------------------------------------------------------
+
+
+def test_drift_mode_researches_mid_epoch_on_speed_shift():
+    """--search-mode drift: a mid-run speed shift triggers Alg. 1 *before*
+    any epoch boundary (epoch_seconds is never reached here)."""
+    policy = make_policy("adsp", gamma=20.0, search=True, search_mode="drift",
+                        drift_threshold=0.25, drift_cooldown=10.0,
+                        probe_seconds=10.0, max_probes=3)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=1e9, base_batch=32,
+                    max_seconds=4000.0, local_lr=0.05)
+    churn = ChurnSchedule([speed(30.0, worker=0, v=0.1)])  # fast worker throttled 10x
+    sim = Simulator(svm_task(len(PROFILES)), PROFILES, policy, cfg, churn=churn)
+    sim.run(25.0)
+    assert policy.traces == []  # no drift yet, and no epoch clock at all
+    sim.run(75.0)
+    assert len(policy.traces) >= 1, "speed shift did not trigger a re-search"
+    tr = policy.traces[0]
+    assert tr.chosen >= 1
+    assert tr.t_start == 30.0  # triggered by the shift itself, mid-epoch
+    # later checkpoints may advance c_target past the chosen value, but
+    # never below it
+    assert policy.c_target >= tr.chosen
+
+
+def test_epoch_mode_does_not_search_mid_epoch():
+    policy = make_policy("adsp", gamma=20.0, search=True, search_mode="epoch",
+                        probe_seconds=10.0, max_probes=3)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=1e9, base_batch=32,
+                    max_seconds=4000.0, local_lr=0.05)
+    churn = ChurnSchedule([speed(30.0, worker=0, v=0.1)])
+    sim = Simulator(svm_task(len(PROFILES)), PROFILES, policy, cfg, churn=churn)
+    sim.run(100.0)
+    assert policy.traces == []  # only the epoch clock may search
+
+
+def test_drift_mode_on_mesh_backend_speed_shift():
+    """The same drift wiring drives the real mesh loop: a set_speed on the
+    MeshBackend triggers a mid-run re-search through the engine."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.cluster.mesh_backend import MeshBackend, MeshTask
+
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(4, 1)).astype(np.float32)
+
+    def loss_fn(params, mb):
+        x, y = mb
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    def make_microbatches(round_idx, tau, n_workers):
+        r = np.random.default_rng(round_idx + 1)
+        x = r.normal(size=(tau, 64, 4)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(x @ w_true)
+
+    task = MeshTask({"w": jnp.zeros((4, 1), jnp.float32)}, loss_fn,
+                    make_microbatches)
+    mesh = jax.make_mesh((1,), ("data",))
+    backend = MeshBackend(task, mesh, worker_axes=("data",), tau=4,
+                          local_lr=0.1, global_lr=1.0,
+                          batch_spec=jax.sharding.PartitionSpec(None, "data"))
+    policy = ADSP(gamma=8.0, search=True, search_mode="drift",
+                  drift_threshold=0.25, drift_cooldown=1.0,
+                  probe_seconds=2.0, max_probes=2)
+    engine = ClusterEngine(policy, backend)
+    backend.train(rounds=5, check_period=policy.gamma)
+    assert policy.traces == []
+    backend.set_speed(0, 0.1)  # single worker: fraction stays 1.0 → no drift
+    assert policy.traces == []
+    # loss regression is the other drift signal: against a primed (much
+    # lower) best-since-baseline, the next checkpoint's observed loss
+    # reads as regressed and must trigger a mid-run search on the mesh
+    policy.drift._best_loss = backend.recent_global_loss() / 100.0
+    engine.checkpoint()
+    assert len(policy.traces) >= 1
+    assert policy.c_target == policy.traces[-1].chosen
+
+
+def test_search_during_probe_window_is_not_reentrant():
+    """A drift trigger firing during a search's own probe window must not
+    open a nested session."""
+    policy = make_policy("adsp", gamma=20.0, search=True, search_mode="both",
+                        drift_threshold=0.01, drift_cooldown=0.0,
+                        probe_seconds=30.0, max_probes=3)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    max_seconds=4000.0, local_lr=0.05)
+    # speed shifts landing inside the epoch-end search's probe windows
+    churn = ChurnSchedule([speed(10.0, worker=2, v=0.3),
+                           speed(40.0, worker=2, v=3.0)])
+    sim = Simulator(svm_task(len(PROFILES)), PROFILES, policy, cfg, churn=churn)
+    sim.engine.epoch_end()
+    assert not sim.engine.search_active
+    # every trace is complete and self-consistent
+    for tr in policy.traces:
+        assert tr.chosen in tr.candidates
+
+
+def test_worker_profile_sanity():
+    with pytest.raises(ValueError):
+        WorkerProfile(v=0.0)
+
+
+def test_checkpoint_triggered_search_does_not_refire_checkpoint():
+    """Re-entrancy regression: a drift Search fired from inside a
+    checkpoint handler runs probe windows through a nested event loop —
+    the checkpoint that triggered it must not fire a second time in the
+    nested frame, and no later checkpoint may be skipped."""
+    fired = []
+
+    @__import__("dataclasses").dataclass
+    class LoggingADSP(ADSP):
+        def on_checkpoint(self, view):
+            fired.append(view.now)
+            return super().on_checkpoint(view)
+
+    policy = LoggingADSP(gamma=20.0, search=True, search_mode="drift",
+                         drift_threshold=0.9, drift_cooldown=0.0,
+                         probe_seconds=10.0, max_probes=2)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=1e9, base_batch=32,
+                    max_seconds=4000.0, local_lr=0.05)
+    sim = Simulator(svm_task(len(PROFILES)), PROFILES, policy, cfg)
+    sim.run(30.0)
+    # prime the detector so the NEXT checkpoint's loss reads as regressed
+    policy.drift._best_loss = sim.recent_global_loss() / 100.0
+    sim.run(90.0)
+    assert len(policy.traces) >= 1  # the checkpoint did trigger a search
+    assert fired == sorted(fired)
+    assert len(fired) == len(set(fired)), f"checkpoint double-fired: {fired}"
+    # every Γ boundary up to the clock fired exactly once — none skipped
+    expect = [t for t in np.arange(20.0, sim.now + 1e-9, 20.0)]
+    assert fired == expect, (fired, expect)
+
+
+def test_probe_windows_counts_abandoned_climb_windows():
+    """SearchTrace.probe_windows must count every window the backend ran:
+    scored windows of abandoned climbs and the churn-discarded one, not
+    just the final climb's length."""
+    s = SearchSession(probe_seconds=1.0, max_probes=8, max_restarts=2,
+                      reward_model=ScriptedSystem.reward_model)
+    s.begin([0, 0])
+    # climb scores 2 windows...
+    assert s.probe_window_complete([0, 1, 2], [1.0, 1.0, 1.0]) == 2
+    assert s.probe_window_complete([0, 1, 2], [2.0, 2.0, 2.0]) == 3
+    # ...then churn invalidates the 3rd window and restarts the climb
+    s.notify_churn()
+    assert s.restart([4, 4]) == 5
+    # the new climb scores 1 window and stops on a miss in the 2nd
+    assert s.probe_window_complete([0, 1, 2], [3.0, 3.0, 3.0]) == 6
+    assert s.probe_window_complete([0, 1, 2], [0.1, 0.1, 0.1]) is None
+    assert s.trace.chosen == 5
+    assert len(s.trace.candidates) == 2  # the final climb only
+    assert s.trace.probe_windows == 5  # 2 scored + 1 discarded + 2 scored
+
+
+def test_aborted_search_keeps_drift_baseline_armed():
+    """An ABORTED search (sustained churn) must not rebaseline the
+    DriftDetector: its choice was never scored against the fleet, and in
+    pure drift mode no epoch clock exists to retry — the standing drift
+    must re-trigger after the cooldown."""
+    policy = make_policy("adsp", gamma=20.0, search=True, search_mode="drift",
+                        drift_threshold=0.25, drift_cooldown=0.0,
+                        probe_seconds=1.0, max_probes=2)
+
+    class View:
+        now = 100.0
+        workers = ()
+
+        @staticmethod
+        def recent_global_loss():
+            return None
+
+    policy.drift = DriftDetector(threshold=0.25, cooldown=0.0)
+    policy.drift.rebaseline({0: 0.5, 1: 0.5}, now=0.0)
+    baseline = dict(policy.drift._baseline)
+    aborted = SearchTrace(candidates=[3], chosen=3, restarts=2, aborted=True)
+    policy.on_search_done(View(), aborted)
+    assert policy.drift._baseline == baseline  # untouched: signal stays armed
+    assert policy.drift.should_search({0: 0.9, 1: 0.1}, now=101.0)
+    done = SearchTrace(candidates=[3, 4], chosen=4)
+    policy.on_search_done(View(), done)
+    assert policy.drift._baseline == {}  # empty View fleet adopted
+
+
+def test_nested_search_does_not_pop_events_past_its_end():
+    """Stale-peek regression: when a drift search (triggered by churn
+    inside _run_until) overruns the outer run()'s horizon, the outer
+    frame must re-evaluate the heap instead of popping an event scheduled
+    after the search's end — the clock must stop exactly at the last
+    probe window's boundary."""
+    policy = make_policy("adsp", gamma=20.0, search=True, search_mode="drift",
+                        drift_threshold=0.25, drift_cooldown=10.0,
+                        probe_seconds=10.0, max_probes=3)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=1e9, base_batch=32,
+                    max_seconds=4000.0, local_lr=0.05)
+    churn = ChurnSchedule([speed(30.0, worker=0, v=0.1)])
+    sim = Simulator(svm_task(len(PROFILES)), PROFILES, policy, cfg, churn=churn)
+    sim.run(35.0)  # churn at 30 triggers a search overrunning t_end=35
+    assert len(policy.traces) == 1
+    tr = policy.traces[0]
+    assert tr.t_start == 30.0
+    # the clock stopped exactly where the last probe window ended — no
+    # event beyond the search's end was processed
+    assert sim.now == pytest.approx(30.0 + 10.0 * tr.windows)
+    assert sim.now == tr.t_end

@@ -1,11 +1,9 @@
 """MoE layer invariants: gating, capacity, shared experts, gradients."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.config import ModelConfig, MoEConfig
 from repro.models.moe import moe_apply, moe_init

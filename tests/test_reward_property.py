@@ -1,0 +1,120 @@
+"""Hypothesis property tests for the reward models (repro.control.reward).
+
+Contracts under test:
+  * ``log_slope_reward`` is invariant to a constant time shift of the
+    whole probe window (the drift-free property the search relies on
+    when comparing sequentially-sampled windows);
+  * ``fit_loss_curve`` NEVER raises — flat, rising, and degenerate
+    (short / mismatched / non-finite) windows return ``ok=False``;
+  * a valid decaying 1/t window still fits (``ok=True``) so the
+    never-raise hardening did not break the happy path.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st
+
+from repro.control.reward import fit_loss_curve, log_slope_reward, reward
+
+
+def _curve(a1_sq, a2, a3, t):
+    return 1.0 / (a1_sq * t + a2) + a3
+
+
+# ---------------------------------------------------------------------------
+# log_slope_reward: time-shift invariance
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.floats(0.005, 0.2),     # a1_sq (decay rate)
+    st.floats(0.1, 1.0),       # a2
+    st.floats(0.0, 2.0),       # a3 (asymptote)
+    st.floats(-1e4, 1e4),      # constant time shift
+    st.integers(4, 16),        # samples in the window
+)
+@settings(max_examples=80, deadline=None)
+def test_log_slope_reward_time_shift_invariant(a1_sq, a2, a3, shift, n):
+    """r(t + Δ, ℓ) == r(t, ℓ): the model normalizes the window to its own
+    start, so sequential probes compare fairly no matter when they were
+    sampled. (Equality up to the rounding of t + Δ itself — the shifted
+    time stamps are not exactly representable.)"""
+    t = np.linspace(0.0, 60.0, n)
+    loss = _curve(a1_sq, a2, a3, t)
+    r0 = log_slope_reward(t, loss)
+    assert log_slope_reward(t + shift, loss) == pytest.approx(r0, rel=1e-9, abs=1e-12)
+
+
+@given(st.floats(0.01, 0.2), st.floats(0.05, 0.5), st.floats(-1e3, 1e3))
+@settings(max_examples=50, deadline=None)
+def test_log_slope_reward_orders_decay_speed_any_origin(a1_slow, extra, shift):
+    """Faster decay ⇒ larger reward, regardless of the window's origin."""
+    t = np.linspace(0.0, 60.0, 10) + shift
+    slow = _curve(a1_slow, 0.5, 0.2, np.linspace(0.0, 60.0, 10))
+    fast = _curve(a1_slow + extra, 0.5, 0.2, np.linspace(0.0, 60.0, 10))
+    assert log_slope_reward(t, fast) > log_slope_reward(t, slow)
+
+
+# ---------------------------------------------------------------------------
+# fit_loss_curve: ok=False (never an exception) on bad windows
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(0.01, 100.0), st.integers(3, 12))
+@settings(max_examples=50, deadline=None)
+def test_fit_flat_window_returns_not_ok(level, n):
+    t = np.linspace(0.0, 60.0, n)
+    fit = fit_loss_curve(t, np.full(n, level))
+    assert not fit.ok
+
+
+@given(st.floats(1e-4, 1.0), st.floats(0.01, 10.0), st.integers(3, 12))
+@settings(max_examples=50, deadline=None)
+def test_fit_rising_window_returns_not_ok(slope, start, n):
+    t = np.linspace(0.0, 60.0, n)
+    fit = fit_loss_curve(t, start + slope * t)
+    assert not fit.ok
+
+
+@given(st.lists(st.floats(-1e6, 1e6), max_size=2),
+       st.lists(st.floats(-1e6, 1e6), max_size=2))
+@settings(max_examples=50, deadline=None)
+def test_fit_too_short_or_mismatched_returns_not_ok(ts, ls):
+    assert not fit_loss_curve(ts, ls).ok
+
+
+@given(st.integers(3, 8), st.sampled_from([np.nan, np.inf, -np.inf]))
+@settings(max_examples=30, deadline=None)
+def test_fit_non_finite_values_return_not_ok(n, bad):
+    t = np.linspace(0.0, 10.0, n)
+    l = np.linspace(3.0, 1.0, n)
+    l_bad = l.copy()
+    l_bad[n // 2] = bad
+    assert not fit_loss_curve(t, l_bad).ok
+    t_bad = t.copy()
+    t_bad[n // 2] = bad
+    assert not fit_loss_curve(t_bad, l).ok
+
+
+@given(st.floats(0.005, 0.3), st.floats(0.1, 1.0), st.floats(0.0, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_fit_valid_decaying_window_still_ok(a1_sq, a2, a3):
+    """The hardening must not reject real decaying windows."""
+    t = np.linspace(0.0, 60.0, 12)
+    fit = fit_loss_curve(t, _curve(a1_sq, a2, a3, t))
+    assert fit.ok
+    assert fit.a1_sq > 0
+
+
+@given(st.lists(st.floats(0.0, 1e4), min_size=0, max_size=8),
+       st.lists(st.floats(-10.0, 1e4), min_size=0, max_size=8))
+@settings(max_examples=80, deadline=None)
+def test_reward_pipeline_never_raises(ts, ls):
+    """End to end: arbitrary windows through either reward model produce
+    a float, never an exception (degenerate ⇒ 0 / slope fallback)."""
+    r1 = log_slope_reward(ts, ls)
+    r2 = reward(ts, ls)
+    assert isinstance(r1, float) and isinstance(r2, float)
+    assert not np.isnan(r1)

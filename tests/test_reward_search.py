@@ -5,8 +5,8 @@ import pytest
 pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.reward import fit_loss_curve, reward, reward_from_fit
-from repro.core.search import decide_commit_rate
+from repro.control.reward import fit_loss_curve, reward
+from repro.control.search import decide_commit_rate
 
 
 def _curve(a1_sq, a2, a3, t):

@@ -3,7 +3,6 @@ model, and the documented XLA cost_analysis loop-undercount."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import collective_bytes, model_flops, roofline_terms, xla_cost_dict

@@ -18,8 +18,8 @@ import numpy as np
 import pytest
 from numpy.testing import assert_array_equal
 
-from repro.core.jaxcompat import use_mesh
-from repro.core.theory import WorkerProfile
+from repro.compat import use_mesh
+from repro.control.theory import WorkerProfile
 from repro.cluster import make_policy
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles, with_links

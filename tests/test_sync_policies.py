@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core.sync import make_policy
+from repro.cluster import make_policy
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles
 from repro.edgesim.tasks import svm_task
@@ -93,7 +93,7 @@ def test_determinism():
 
 
 def test_heterogeneity_profiles_match_H():
-    from repro.core.theory import heterogeneity_degree
+    from repro.control.theory import heterogeneity_degree
     from repro.edgesim.profiles import heterogeneity_profiles
 
     for H in (1.0, 1.6, 2.4, 3.2):

@@ -1,10 +1,9 @@
 """End-to-end behaviour tests for the ADSP system (the paper's headline
 claims, at test scale)."""
 
-import numpy as np
 import pytest
 
-from repro.core.sync import make_policy
+from repro.cluster import make_policy
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles
 from repro.edgesim.tasks import cnn_task, svm_task

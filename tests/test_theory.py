@@ -5,7 +5,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="dev extra; pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import theory
+from repro.control import theory
 
 pos_floats = st.floats(0.1, 100.0, allow_nan=False)
 

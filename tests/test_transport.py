@@ -17,12 +17,12 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose, assert_array_equal
 
-from repro.core.jaxcompat import use_mesh
-from repro.core.theory import WorkerProfile
+from repro.compat import use_mesh
+from repro.control.theory import WorkerProfile
 from repro.edgesim import SimConfig, Simulator
 from repro.edgesim.profiles import ratio_profiles, with_links
 from repro.edgesim.tasks import svm_task
-from repro.core.sync import make_policy
+from repro.cluster import make_policy
 from repro.ps import AdspState, CommitConfig, UpdateRules, make_train_step
 from repro.transport import (
     Codec,

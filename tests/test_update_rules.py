@@ -2,12 +2,9 @@
 reference backend agreement, rule semantics, and AdamW-at-worker e2e.
 
 Parity contract: ``make_train_step`` with the sgd rule must match the
-seed factories bit-for-bit — checked (a) against the deprecated shims
-(which must preserve their exact defaults) and (b) against an inline
-re-statement of the seed's arithmetic, per granularity.
+seed factories bit-for-bit — checked against an inline re-statement of
+the seed's arithmetic (embedded verbatim below), per granularity.
 """
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +12,7 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose, assert_array_equal
 
-from repro.core.jaxcompat import use_mesh
+from repro.compat import use_mesh
 from repro.ps import (
     AdspState,
     CommitConfig,
@@ -89,8 +86,8 @@ def _seed_local_update_fn(loss_fn, cfg, unroll):
 
 def _seed_adsp_step(loss_fn, cfg, mesh, batch_spec, explicit_momentum=0.0):
     """Verbatim seed implementation (core.commit.make_adsp_step at PR 1)."""
-    from repro.core.jaxcompat import SCAN_IN_PARTIAL_AUTO_BROKEN
-    from repro.core.jaxcompat import shard_map as compat_shard_map
+    from repro.compat import SCAN_IN_PARTIAL_AUTO_BROKEN
+    from repro.compat import shard_map as compat_shard_map
 
     local_update = _seed_local_update_fn(
         loss_fn, cfg, unroll=True if SCAN_IN_PARTIAL_AUTO_BROKEN else 1
@@ -204,12 +201,10 @@ def test_train_step_matches_seed_arithmetic(problem, granularity):
     assert int(state.step) == int(s) == 3
 
 
-def test_train_step_matches_deprecated_shims(problem):
-    """The in-place shims (make_adsp_step / make_accum_step) must keep
-    their exact seed defaults — same outputs as direct make_train_step."""
-    from repro.core.accum import make_accum_step
-    from repro.core.commit import make_adsp_step
-
+def test_legacy_state_and_scalar_tau_still_accepted(problem):
+    """Seed-era entry conventions survive the shim retirement: a bare
+    ``AdspState.create(params)`` (no rule-owned state) and the legacy
+    scalar ``tau_active`` both work against the unified factory."""
     params, batch = problem
     cfg = CommitConfig(tau=2, local_lr=0.05, global_lr=1.0, worker_axes=("data",))
     mesh = _mesh1()
@@ -217,30 +212,18 @@ def test_train_step_matches_deprecated_shims(problem):
     tau = jnp.asarray([2], jnp.int32)
     direct = make_train_step(quad_loss, cfg, UpdateRules(backend="reference"),
                              mesh=mesh, batch_spec=jax.sharding.PartitionSpec(None, "data"))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        shim = make_adsp_step(quad_loss, cfg, mesh,
-                              batch_spec=jax.sharding.PartitionSpec(None, "data"))
-        accum_shim = make_accum_step(quad_loss, cfg)
+    accum = make_train_step(quad_loss,
+                            CommitConfig(tau=2, local_lr=0.05, global_lr=1.0,
+                                         worker_axes=()),
+                            UpdateRules(backend="reference"))
     with use_mesh(mesh):
         s_direct, l_direct = direct(direct.init(params), mbs, tau)
-        s_shim, l_shim = shim(AdspState.create(params), mbs, tau)
-        # legacy scalar tau_active still accepted by the accum shim
-        s_accum, _ = accum_shim(AdspState.create(params), mbs, jnp.asarray(2, jnp.int32))
-    assert_array_equal(np.asarray(s_direct.params["w"]), np.asarray(s_shim.params["w"]))
-    assert_array_equal(np.asarray(l_direct), np.asarray(l_shim))
+        s_legacy, l_legacy = direct(AdspState.create(params), mbs, tau)
+        # legacy scalar tau_active still accepted by the accum path
+        s_accum, _ = accum(AdspState.create(params), mbs, jnp.asarray(2, jnp.int32))
+    assert_array_equal(np.asarray(s_direct.params["w"]), np.asarray(s_legacy.params["w"]))
+    assert_array_equal(np.asarray(l_direct), np.asarray(l_legacy))
     assert np.asarray(s_accum.params["w"]).shape == (4, 1)
-
-
-def test_shims_warn_deprecation(problem):
-    from repro.core.accum import make_accum_step
-    from repro.core.commit import make_adsp_step
-
-    cfg = CommitConfig(tau=1, worker_axes=("data",))
-    with pytest.warns(DeprecationWarning):
-        make_adsp_step(quad_loss, cfg, _mesh1())
-    with pytest.warns(DeprecationWarning):
-        make_accum_step(quad_loss, cfg)
 
 
 # ---------------------------------------------------------------------------
