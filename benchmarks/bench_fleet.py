@@ -1,0 +1,163 @@
+"""Fleet orchestration benchmark (DESIGN.md §13): discovered failures vs
+scripted churn, and lease-tracker scalability.
+
+Scenario A — silent stall on a barrier fleet. A 64-worker BSP fleet
+trains to a target loss; one worker *silently stalls* early (no
+WorkerLeft — it just goes dark). Three runs:
+
+  * ``oracle``    — the stall is replaced by a scripted WorkerLeft at the
+    same instant: the best any failure detector could do.
+  * ``lease``     — the stall stays silent, but the heartbeat/lease layer
+    (``repro.fleet``) discovers the death at lease expiry and synthesizes
+    the departure. Claim: time-to-target within 10 % of the oracle
+    (``within_10pct=1``).
+  * ``no_lease``  — the stall stays silent and nothing watches: the
+    barrier waits for the dead worker forever, so the run never reaches
+    the target (``stalled=1``; with a non-barrier policy this would show
+    as a >2× slowdown instead).
+
+Scenario B — scheduler value. The same fleet with the capability-aware
+``proportional`` scheduler (batch shares follow heartbeat-reported
+speeds) vs the static equal split: ``sched_speedup`` = t_conv(static) /
+t_conv(scheduled) — on a barrier policy load-balancing the stragglers
+directly shortens every round.
+
+Scenario C — ``heartbeat_10k``: a 10 000-worker heartbeat-only fleet
+(joins, scattered silent stalls, half recovering in time) driven for an
+hour of virtual time directly through the ``FleetMonitor``. Lease expiry
+is a *batch* check over statically computed deadlines — no per-worker
+timer events — so the whole hour simulates in well under 10 s of wall
+time (``under_10s=1``) and exactly the non-recovering stalls are
+discovered (``expired_ok=1``).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.cluster import ChurnSchedule, churn, make_policy
+from repro.control.theory import WorkerProfile
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import fleet_profiles
+from repro.edgesim.tasks import svm_task
+from repro.fleet import FleetConfig, FleetMonitor, LeaseConfig, MetricsLog
+
+from .common import row
+
+M = 64
+STALL_T = 10.0
+STALLED = 5  # worker id that goes dark
+TARGET = 0.02
+LOCAL_LR = 0.01  # slow convergence so the TTL is amortized, as at scale
+LEASE = LeaseConfig(ttl=6.0, heartbeat_period=2.0)
+MAX_SECONDS = 600.0
+
+
+def _run(actions, fleet=None, scheduler=None, metrics=None):
+    cfg = SimConfig(max_seconds=MAX_SECONDS, base_batch=32, gamma=20.0,
+                    epoch_seconds=300.0, target_loss=TARGET,
+                    eval_interval=1.0, local_lr=LOCAL_LR)
+    if scheduler is not None:
+        fleet = FleetConfig(lease=LEASE, scheduler=scheduler)
+    task = svm_task(M, seed=0)
+    profiles = fleet_profiles(M, spread=4.0, seed=2, o=0.2)
+    t0 = time.time()
+    sim = Simulator(task, profiles, make_policy("bsp"), cfg,
+                    churn=ChurnSchedule(actions) if actions else None,
+                    fleet=fleet, metrics=metrics)
+    res = sim.train()
+    return sim, res, time.time() - t0
+
+
+def _heartbeat_10k(m: int = 10_000, horizon: float = 3600.0):
+    """Heartbeat-only fleet at 10k scale, driven straight through the
+    FleetMonitor (no training physics — this measures the lease layer)."""
+    lease = LeaseConfig(ttl=30.0, heartbeat_period=10.0)
+    rng = np.random.default_rng(0)
+    monitor = FleetMonitor(FleetConfig(lease=lease))
+    profile = WorkerProfile(v=1.0, o=0.2)
+    t0 = time.time()
+    for wid in range(m):
+        monitor.join(wid, 0.0, profile)
+    stalls = rng.choice(m, size=m // 100, replace=False)
+    events = []
+    for i, wid in enumerate(stalls):
+        ts = float(rng.uniform(0.0, horizon * 0.8))
+        events.append((ts, "stall", int(wid)))
+        if i % 2 == 0:  # half resume before their lease runs out
+            events.append((ts + lease.ttl * 0.25, "recover", int(wid)))
+    events.sort()
+    discovered: list[int] = []
+    for t, kind, wid in events:
+        while monitor.next_expiry() <= t:
+            discovered.extend(monitor.expired_due(monitor.next_expiry()))
+        if kind == "stall":
+            monitor.stall(wid, t)
+        elif wid in monitor:
+            monitor.recover(wid, t)
+    while math.isfinite(monitor.next_expiry()) and monitor.next_expiry() <= horizon:
+        discovered.extend(monitor.expired_due(monitor.next_expiry()))
+    wall = time.time() - t0
+    want = len(stalls) - (len(stalls) + 1) // 2  # non-recovering stalls
+    return wall, horizon, m, len(discovered), want
+
+
+def main(full: bool = False) -> list[str]:
+    rows = []
+
+    # Scenario A: oracle / lease / no-lease --------------------------------
+    _, res_o, wall = _run([churn.leave(STALL_T, STALLED)])
+    rows.append(row("bench_fleet/oracle", wall, res_o.elapsed,
+                    t_conv=res_o.convergence_time, converged=int(res_o.converged)))
+
+    log = MetricsLog()
+    _, res_l, wall = _run([churn.stall(STALL_T, STALLED)],
+                          fleet=FleetConfig(lease=LEASE), metrics=log)
+    expiries = [r for r in log.of("lease") if r.event == "expired"]
+    disc = [r for r in log.of("churn") if r.discovered]
+    ratio = res_l.convergence_time / res_o.convergence_time
+    rows.append(row(
+        "bench_fleet/lease", wall, res_l.elapsed,
+        t_conv=res_l.convergence_time, converged=int(res_l.converged),
+        discover_t=expiries[0].t if expiries else -1.0,
+        discovered=len(disc), ratio_vs_oracle=ratio,
+        within_10pct=int(res_l.converged and ratio <= 1.10),
+    ))
+
+    _, res_n, wall = _run([churn.stall(STALL_T, STALLED)])
+    slowdown = res_n.convergence_time / res_o.convergence_time
+    rows.append(row(
+        "bench_fleet/no_lease", wall, res_n.elapsed,
+        t_conv=res_n.convergence_time, converged=int(res_n.converged),
+        stalled=int(not res_n.converged or slowdown > 2.0),
+    ))
+
+    # Scenario B: capability-aware scheduler vs static equal split ---------
+    _, res_static, wall_s = _run([])
+    _, res_sched, wall_p = _run([], scheduler="proportional")
+    rows.append(row(
+        "bench_fleet/scheduler", wall_s + wall_p,
+        res_static.elapsed + res_sched.elapsed,
+        t_conv_static=res_static.convergence_time,
+        t_conv_sched=res_sched.convergence_time,
+        sched_speedup=res_static.convergence_time / res_sched.convergence_time,
+        both_converged=int(res_static.converged and res_sched.converged),
+    ))
+
+    # Scenario C: 10k-worker heartbeat-only fleet --------------------------
+    m = 10_000 if not full else 50_000
+    wall, horizon, workers, got, want = _heartbeat_10k(m=m)
+    rows.append(row(
+        "bench_fleet/heartbeat_10k", wall, horizon,
+        workers=workers, host_seconds=wall, under_10s=int(wall < 10.0),
+        discovered=got, expected=want, expired_ok=int(got == want),
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

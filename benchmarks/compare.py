@@ -1,0 +1,146 @@
+"""Compare two benchmark snapshots and flag regressions.
+
+Usage::
+
+    python -m benchmarks.compare BASELINE.json CURRENT.json \
+        [--threshold 0.2] [--strict]
+
+Rows are matched by name. Two classes of checks:
+
+  * **Gates** — boolean derived keys where 1 is a pass (``converged``,
+    ``within_10pct``, ``expired_ok``, ...). A gate that held in the
+    baseline and dropped is always a regression.
+  * **Ratios** — machine-*independent* derived metrics with a known
+    direction: keys containing ``t_conv``/``ratio``/``waiting`` must not
+    rise by more than ``--threshold`` (default 20 %); keys containing
+    ``speedup`` must not fall by more than it.
+
+``us_per_call`` (and other host-time quantities) are machine-dependent —
+they are reported as info lines but never fail the comparison, so a CI
+runner change can't fake a perf regression.
+
+Exit status: 0 unless ``--strict`` is given and regressions were found.
+CI runs the non-strict pass on every build (visibility) and the strict
+pass against the committed ``BENCH_<n>.json`` history (enforcement).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+# derived keys where the value 1 means "claim held"
+GATE_KEYS = {
+    "converged", "both_converged", "within_10pct", "expired_ok",
+    "under_10s", "before_epoch_end", "drift_no_later", "roundtrip_ok",
+    "stalled",
+}
+LOWER_BETTER = ("t_conv", "ratio", "waiting", "probes")
+HIGHER_BETTER = ("speedup",)
+MACHINE_DEPENDENT = ("us_per_call", "host_seconds", "wall")
+
+
+def _rows_by_name(path: pathlib.Path) -> dict[str, dict]:
+    data = json.loads(path.read_text())
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def _num(v):
+    if isinstance(v, bool):
+        return float(v)
+    if isinstance(v, (int, float)):
+        return float(v)
+    if v == "inf":
+        return math.inf
+    return None
+
+
+def compare(baseline: pathlib.Path, current: pathlib.Path,
+            threshold: float = 0.2) -> tuple[list[str], list[str]]:
+    """Returns (regressions, info_lines)."""
+    base, cur = _rows_by_name(baseline), _rows_by_name(current)
+    regressions, info = [], []
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name]["derived"], cur[name]["derived"]
+        for key in sorted(set(b) & set(c)):
+            bv, cv = _num(b[key]), _num(c[key])
+            if bv is None or cv is None:
+                continue
+            if any(s in key for s in MACHINE_DEPENDENT):
+                continue  # host-time quantities never gate
+            if key in GATE_KEYS:
+                if bv >= 1.0 > cv:
+                    regressions.append(
+                        f"{name}: gate {key} dropped {bv:g} -> {cv:g}")
+                continue
+            if any(s in key for s in LOWER_BETTER):
+                if math.isfinite(bv) and cv > bv * (1.0 + threshold):
+                    regressions.append(
+                        f"{name}: {key} rose {bv:g} -> {cv:g} "
+                        f"(>{threshold:.0%})")
+                elif cv != bv:
+                    info.append(f"{name}: {key} {bv:g} -> {cv:g}")
+            elif any(s in key for s in HIGHER_BETTER):
+                if math.isfinite(bv) and cv < bv * (1.0 - threshold):
+                    regressions.append(
+                        f"{name}: {key} fell {bv:g} -> {cv:g} "
+                        f"(>{threshold:.0%})")
+                elif cv != bv:
+                    info.append(f"{name}: {key} {bv:g} -> {cv:g}")
+        # host-time trajectory: informational only
+        bus, cus = base[name].get("us_per_call"), cur[name].get("us_per_call")
+        if bus and cus and abs(cus - bus) > 0.5 * bus:
+            info.append(f"{name}: us_per_call {bus:.0f} -> {cus:.0f} (info)")
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        shown = ", ".join(missing[:5])
+        more = f" … +{len(missing) - 5} more" if len(missing) > 5 else ""
+        info.append(f"{len(missing)} rows only in baseline "
+                    f"(not compared): {shown}{more}")
+    return regressions, info
+
+
+def latest_snapshot(root: pathlib.Path) -> pathlib.Path | None:
+    best, best_n = None, -1
+    for p in root.glob("BENCH_*.json"):
+        suffix = p.stem.split("_", 1)[1]
+        if suffix.isdigit() and int(suffix) > best_n:
+            best, best_n = p, int(suffix)
+    return best
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("baseline", nargs="?", default=None,
+                   help="baseline snapshot (default: highest BENCH_<n>.json)")
+    p.add_argument("current", help="snapshot to check")
+    p.add_argument("--threshold", type=float, default=0.2,
+                   help="relative worsening that counts as a regression")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on regressions (default: report only)")
+    args = p.parse_args(argv)
+
+    baseline = (pathlib.Path(args.baseline) if args.baseline
+                else latest_snapshot(pathlib.Path(__file__).resolve().parent.parent))
+    if baseline is None or not baseline.exists():
+        print("# no baseline snapshot found; nothing to compare")
+        return
+    current = pathlib.Path(args.current)
+    regressions, info = compare(baseline, current, args.threshold)
+    print(f"# baseline={baseline.name} current={current.name} "
+          f"threshold={args.threshold:.0%}")
+    for line in info:
+        print(f"INFO  {line}")
+    for line in regressions:
+        print(f"REGRESSION  {line}")
+    if not regressions:
+        print("# no regressions")
+    elif args.strict:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

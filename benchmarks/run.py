@@ -5,7 +5,9 @@ paper-scale sweeps (more workers / more grid points); default sizes are
 CPU-budget versions with identical structure. ``--json PATH`` also
 writes the rows as structured records (name / us_per_call / derived
 key-values) so the perf trajectory can be tracked as ``BENCH_*.json``
-artifacts and diffed across commits.
+artifacts and diffed across commits. ``--snapshot`` writes the same
+record to the next numbered ``BENCH_<n>.json`` in the repo root — the
+append-only perf history ``benchmarks.compare`` diffs against.
 """
 
 from __future__ import annotations
@@ -27,8 +29,21 @@ MODULES = [
     "bench_transport",
     "bench_shards",
     "bench_control",
+    "bench_fleet",
     "roofline_table",
 ]
+
+
+def next_snapshot_path(root: pathlib.Path | None = None) -> pathlib.Path:
+    """Next numbered ``BENCH_<n>.json`` in the repo root (1-based)."""
+    root = root or pathlib.Path(__file__).resolve().parent.parent
+    taken = set()
+    for p in root.glob("BENCH_*.json"):
+        suffix = p.stem.split("_", 1)[1]
+        if suffix.isdigit():
+            taken.add(int(suffix))
+    n = max(taken, default=0) + 1
+    return root / f"BENCH_{n}.json"
 
 
 def _parse_row(module: str, line: str) -> dict:
@@ -55,6 +70,9 @@ def main(argv=None) -> None:
     p.add_argument("--full", action="store_true", help="paper-scale sweeps")
     p.add_argument("--json", metavar="PATH", default=None,
                    help="also write structured records to PATH")
+    p.add_argument("--snapshot", action="store_true",
+                   help="also write the records to the next numbered "
+                        "BENCH_<n>.json in the repo root")
     args = p.parse_args(argv)
 
     mods = args.only if args.only else MODULES
@@ -80,16 +98,21 @@ def main(argv=None) -> None:
                             "us_per_call": None,
                             "derived": {"error": type(e).__name__}})
             failures += 1
+    payload = json.dumps({
+        "generated_unix": time.time(),
+        "modules": list(mods),
+        "full": args.full,
+        "failures": failures,
+        "rows": records,
+    }, indent=1)
+    targets = []
     if args.json:
-        out = pathlib.Path(args.json)
+        targets.append(pathlib.Path(args.json))
+    if args.snapshot:
+        targets.append(next_snapshot_path())
+    for out in targets:
         out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps({
-            "generated_unix": time.time(),
-            "modules": list(mods),
-            "full": args.full,
-            "failures": failures,
-            "rows": records,
-        }, indent=1))
+        out.write_text(payload)
         print(f"# wrote {out} ({len(records)} rows)", file=sys.stderr, flush=True)
     if failures:
         sys.exit(1)

@@ -8,7 +8,7 @@ ClusterEngine over pluggable backends: the virtual-clock edge simulator
 ``repro.launch.train``).
 """
 
-from .churn import ChurnAction, ChurnSchedule, join, leave, speed
+from .churn import ChurnAction, ChurnSchedule, join, leave, recover, speed, stall
 from .engine import ClusterEngine, LegacyPolicyAdapter, coerce_policy
 from .policies import (
     ADSP,
@@ -58,5 +58,6 @@ __all__ = [
     "Command", "Commit", "Block", "Resume", "ArmTimer", "SetRate",
     "SetBatchFraction", "Search", "WorkerView",
     # churn
-    "ChurnAction", "ChurnSchedule", "join", "leave", "speed",
+    "ChurnAction", "ChurnSchedule", "join", "leave", "speed", "stall",
+    "recover",
 ]

@@ -14,23 +14,30 @@ from typing import Sequence
 
 from repro.control.theory import WorkerProfile
 
-__all__ = ["ChurnAction", "ChurnSchedule", "join", "leave", "speed"]
+__all__ = ["ChurnAction", "ChurnSchedule", "join", "leave", "speed",
+           "stall", "recover"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ChurnAction:
+    """``join``/``leave``/``speed`` are *administrative*: the engine hears
+    about them immediately. ``stall``/``recover`` are *silent*: the worker
+    freezes (or resumes) without any notice — only a lease layer
+    (``repro.fleet``) can discover the failure, which is exactly what
+    ``benchmarks/bench_fleet.py`` measures."""
+
     at: float  # virtual time
-    kind: str  # "join" | "leave" | "speed"
+    kind: str  # "join" | "leave" | "speed" | "stall" | "recover"
     profile: WorkerProfile | None = None  # join
-    worker: int | None = None  # leave / speed (stable worker id)
+    worker: int | None = None  # leave / speed / stall / recover (stable id)
     v: float | None = None  # speed
 
     def __post_init__(self):
-        if self.kind not in ("join", "leave", "speed"):
+        if self.kind not in ("join", "leave", "speed", "stall", "recover"):
             raise ValueError(f"unknown churn kind {self.kind!r}")
         if self.kind == "join" and self.profile is None:
             raise ValueError("join requires a profile")
-        if self.kind in ("leave", "speed") and self.worker is None:
+        if self.kind in ("leave", "speed", "stall", "recover") and self.worker is None:
             raise ValueError(f"{self.kind} requires a worker id")
         if self.kind == "speed" and (self.v is None or self.v <= 0):
             raise ValueError("speed requires a positive v")
@@ -46,6 +53,18 @@ def leave(at: float, worker: int) -> ChurnAction:
 
 def speed(at: float, worker: int, v: float) -> ChurnAction:
     return ChurnAction(at=at, kind="speed", worker=worker, v=v)
+
+
+def stall(at: float, worker: int) -> ChurnAction:
+    """Silent failure: the worker freezes mid-run with no departure
+    notice (heartbeats stop; only lease expiry can discover it)."""
+    return ChurnAction(at=at, kind="stall", worker=worker)
+
+
+def recover(at: float, worker: int) -> ChurnAction:
+    """A stalled worker resumes. Before its lease expired this is
+    invisible to the control plane; after, it is a discovered rejoin."""
+    return ChurnAction(at=at, kind="recover", worker=worker)
 
 
 @dataclasses.dataclass

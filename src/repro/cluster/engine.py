@@ -125,12 +125,17 @@ class ClusterEngine:
     """See module docstring. The engine is also the ClusterView handed to
     policies and the OnlineSystem handed to Alg. 1."""
 
-    def __init__(self, policy, backend):
+    def __init__(self, policy, backend, metrics=None):
         self.policy = coerce_policy(policy)
         self.backend = backend
+        self.metrics = metrics  # repro.fleet.MetricsSink | None
         self.parked: set[int] = set()
         self._search: SearchSession | None = None
         backend.bind(self)
+
+    def _record(self, rec) -> None:
+        if self.metrics is not None:
+            self.metrics.record(rec)
 
     # ------------------------------------------------------------ view
     @property
@@ -183,8 +188,9 @@ class ClusterEngine:
         self.dispatch(EpochEnd(self.now))
 
     # ------------------------------------------------------------ churn
-    def worker_joined(self, w) -> None:
-        """``w`` is already present in backend.workers.
+    def worker_joined(self, w, discovered: bool = False) -> None:
+        """``w`` is already present in backend.workers. ``discovered``
+        marks a lease-layer rejoin (repro.fleet).
 
         The joiner inherits the minimum peer commit count so the rate rule
         ΔC_i = C_target − c_i ramps it in at the shared pace, and the
@@ -198,13 +204,25 @@ class ClusterEngine:
             w.step_credit = min(p.steps for p in peers)
             w.steps = w.step_credit
         self._notify_search_churn()
-        self.dispatch(WorkerJoined(w.index))
+        if self.metrics is not None:
+            from repro.fleet.metrics import ChurnRecord
 
-    def worker_left(self, index: int) -> None:
-        """Called after the backend removed the worker."""
+            self._record(ChurnRecord(t=self.now, worker=w.index, event="join",
+                                     discovered=discovered))
+        self.dispatch(WorkerJoined(w.index, discovered=discovered))
+
+    def worker_left(self, index: int, discovered: bool = False) -> None:
+        """Called after the backend removed the worker. ``discovered``
+        marks a lease-expiry failure (repro.fleet) rather than a scripted
+        departure."""
         self.parked.discard(index)
         self._notify_search_churn()
-        self.dispatch(WorkerLeft(index))
+        if self.metrics is not None:
+            from repro.fleet.metrics import ChurnRecord
+
+            self._record(ChurnRecord(t=self.now, worker=index, event="leave",
+                                     discovered=discovered))
+        self.dispatch(WorkerLeft(index, discovered=discovered))
 
     def speed_changed(self, w) -> None:
         self._notify_search_churn()
@@ -217,6 +235,12 @@ class ClusterEngine:
     # --------------------------------------------------------- dispatching
     def dispatch(self, event: Event) -> list[Command]:
         cmds = self.policy.handle(self, event)
+        if (self.metrics is not None and not isinstance(event, EpochEnd)
+                and any(isinstance(c, Search) for c in cmds)):
+            # a Search outside the epoch clock is a drift/discovery trigger
+            from repro.fleet.metrics import DriftRecord
+
+            self._record(DriftRecord(t=self.now, cause=type(event).__name__))
         self.execute(cmds)
         return cmds
 
@@ -310,5 +334,13 @@ class ClusterEngine:
         finally:
             self._search = None
         session.trace.t_end = self.now
+        if self.metrics is not None:
+            from repro.fleet.metrics import SearchRecord
+
+            tr = session.trace
+            self._record(SearchRecord(t=self.now, chosen=int(tr.chosen),
+                                      windows=int(tr.probe_windows),
+                                      restarts=int(tr.restarts),
+                                      aborted=bool(tr.aborted)))
         self.execute(self._retarget_cmds(session.trace.chosen))
         self.execute(self.policy.on_search_done(self, session.trace))

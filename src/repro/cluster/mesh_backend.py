@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.control import theory
 from repro.control.theory import WorkerProfile
+from repro.fleet import CommitRecord, EvalRecord, FleetConfig, FleetMonitor
 from repro.ps import CommitConfig, UpdateRules, make_train_step
 from repro.transport import Codec, dense_nbytes, get_codec
 
@@ -91,11 +92,19 @@ class MeshBackend:
         explicit_momentum: float = 0.0,
         codec: str | Codec | None = None,
         n_shards: int = 1,
+        fleet: FleetConfig | None = None,
+        metrics=None,
     ):
         self.task = task
         self.mesh = mesh
         self.tau = tau
         self.round_seconds = round_seconds
+        # fleet layer (DESIGN.md §13): *observational* on the mesh — the
+        # worker set is baked into the compiled SPMD program, so leases
+        # can't evict anybody, but capability reports and the structured
+        # metrics stream flow into the same sink the simulator uses.
+        self.metrics = metrics
+        self.fleet = FleetMonitor(fleet, metrics=metrics) if fleet is not None else None
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         n_workers = int(np.prod([sizes[a] for a in worker_axes])) if worker_axes else 1
         if profiles is None:
@@ -138,12 +147,20 @@ class MeshBackend:
             self.codec.encoded_nbytes(task.init_params)
             if self.codec is not None else dense_nbytes(task.init_params)
         )
+        self._per_worker_nbytes = per_worker
         self.bytes_per_round = per_worker * n_workers
         self.bytes_to_ps = 0
+        if self.fleet is not None:
+            for w in self.workers:
+                self.fleet.join(w.index, 0.0, w.profile)
 
     # ------------------------------------------------------------ backend API
     def bind(self, engine: ClusterEngine) -> None:
         self.engine = engine
+        if self.fleet is not None:
+            # initial scheduler pass over the join-time capability reports
+            # (later passes ride each heartbeat-delivered set_speed report)
+            engine.execute(self.fleet.assignments(self.now))
 
     def wake(self, w) -> None:  # rounds are synchronous; nothing is parked
         pass
@@ -199,10 +216,20 @@ class MeshBackend:
         self.bytes_to_ps += self.bytes_per_round
         loss = float(loss)
         self.losses.append((self.now, loss))
+        if self.metrics is not None:
+            self.metrics.record(EvalRecord(t=self.now, loss=loss))
         for w, t in zip(self.workers, tau_arr):
             w.steps += int(t)
             w.steps_since_commit = 0
             w.commits += 1
+            if self.metrics is not None:
+                # one fused all-reduce round: latency is the round wall
+                # time; the pull is folded into the collective (0 bytes)
+                self.metrics.record(CommitRecord(
+                    t=self.now, worker=w.index, latency=self.round_seconds,
+                    push_bytes=float(self._per_worker_nbytes),
+                    pull_bytes=0.0, stale_shards=0, n_shards=self.n_shards,
+                ))
             self.engine.commit_applied(w)
         return loss
 
@@ -212,6 +239,11 @@ class MeshBackend:
         w = self.engine.worker(index)
         w.profile = dataclasses.replace(w.profile, v=v)
         self.engine.speed_changed(w)
+        if self.fleet is not None:
+            # rounds are synchronous: the capability report lands with the
+            # next round's commit rather than on a modelled link
+            self.fleet.report(index, self.now, v)
+            self.engine.execute(self.fleet.assignments(self.now))
 
     # ----------------------------------------------------------------- drive
     def train(

@@ -250,6 +250,18 @@ class ADSP(ClusterPolicy):
         return (super().on_speed_changed(view, w) + self.rate_commands(view)
                 + self._drift_commands(view))
 
+    def on_worker_lost(self, view, index: int) -> list[Command]:
+        """A lease expiry (repro.fleet) discovered this death — the PS was
+        never told. Feed the drift baseline: discovery bypasses the
+        TV-distance threshold, so even a small worker's silent failure
+        re-searches once the cooldown allows (on_worker_left already ran
+        the threshold-gated check; at most one Search survives because
+        the trigger stamps the cooldown)."""
+        if self.drift is None:
+            return []
+        self.drift.note_discovered_failure(view.now)
+        return self._drift_commands(view)
+
     def retarget(self, view, c_target: int) -> list[Command]:
         self.c_target = int(c_target)
         return self.rate_commands(view)

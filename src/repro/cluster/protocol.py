@@ -89,16 +89,22 @@ class EpochEnd(Event):
 
 @dataclasses.dataclass(frozen=True)
 class WorkerJoined(Event):
-    """A worker was added to the cluster (elastic scale-out)."""
+    """A worker was added to the cluster (elastic scale-out).
+    ``discovered`` marks a lease-layer rejoin (repro.fleet) rather than a
+    scripted/administrative join."""
 
     worker: int
+    discovered: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class WorkerLeft(Event):
-    """A worker left the cluster; ``worker`` is its (now dead) id."""
+    """A worker left the cluster; ``worker`` is its (now dead) id.
+    ``discovered`` marks a failure found by lease expiry (repro.fleet)
+    rather than a scripted/administrative departure."""
 
     worker: int
+    discovered: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -295,9 +301,16 @@ class ClusterPolicy:
         if isinstance(event, ClusterStarted):
             return self.on_started(view)
         if isinstance(event, WorkerJoined):
-            return self.on_worker_joined(view, _worker(view, event.worker))
+            cmds = self.on_worker_joined(view, _worker(view, event.worker))
+            if event.discovered:
+                cmds = cmds + self.on_worker_rejoined(
+                    view, _worker(view, event.worker))
+            return cmds
         if isinstance(event, WorkerLeft):
-            return self.on_worker_left(view, event.worker)
+            cmds = self.on_worker_left(view, event.worker)
+            if event.discovered:
+                cmds = cmds + self.on_worker_lost(view, event.worker)
+            return cmds
         if isinstance(event, SpeedChanged):
             return self.on_speed_changed(view, _worker(view, event.worker))
         raise TypeError(f"unknown event {event!r}")
@@ -326,6 +339,17 @@ class ClusterPolicy:
 
     def on_worker_left(self, view, index: int) -> list[Command]:
         return self.batch_fractions(view) + self.gating(view)
+
+    # Discovered-churn hooks: fired *in addition to* on_worker_joined /
+    # on_worker_left when the membership change came from the lease layer
+    # (repro.fleet) instead of a script — a discovered failure is stronger
+    # evidence the fleet moved than an administrative change of the same
+    # size. Base: no extra commands.
+    def on_worker_rejoined(self, view, w) -> list[Command]:
+        return []
+
+    def on_worker_lost(self, view, index: int) -> list[Command]:
+        return []
 
     def on_speed_changed(self, view, w) -> list[Command]:
         return self.batch_fractions(view)

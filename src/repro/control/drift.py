@@ -57,6 +57,7 @@ class DriftDetector:
     _best_loss: float = dataclasses.field(default=math.inf, init=False)
     _last_loss: float = dataclasses.field(default=math.nan, init=False)
     _last_trigger: float = dataclasses.field(default=-math.inf, init=False)
+    _pending_discovery: bool = dataclasses.field(default=False, init=False)
 
     # ------------------------------------------------------------ baseline
     def rebaseline(self, fractions: Mapping[int, float], now: float) -> None:
@@ -66,6 +67,7 @@ class DriftDetector:
         self._best_loss = math.inf
         self._last_loss = math.nan
         self._last_trigger = max(self._last_trigger, now - self.cooldown)
+        self._pending_discovery = False
 
     # ------------------------------------------------------------- signals
     def fleet_drift(self, fractions: Mapping[int, float]) -> float:
@@ -88,6 +90,16 @@ class DriftDetector:
             return False
         return self._last_loss > self._best_loss * (1.0 + self.loss_rise_tol)
 
+    def note_discovered_failure(self, now: float) -> None:
+        """A lease expiry (repro.fleet) removed a worker the PS was never
+        told about. Discovery is categorical evidence the baseline fleet
+        no longer exists, so the next ``should_search`` bypasses the
+        TV-distance threshold — a small worker's silent death still
+        re-searches — while the cooldown still rate-limits failure
+        cascades. The flag is consumed by the trigger and cleared by
+        ``rebaseline``."""
+        self._pending_discovery = True
+
     # ------------------------------------------------------------- trigger
     def should_search(self, fractions: Mapping[int, float], now: float) -> bool:
         """True exactly when a re-search should fire now; stamps the
@@ -98,7 +110,10 @@ class DriftDetector:
             return False
         if now - self._last_trigger < self.cooldown:
             return False
-        if self.fleet_drift(fractions) > self.threshold or self.loss_regressed():
+        if (self._pending_discovery
+                or self.fleet_drift(fractions) > self.threshold
+                or self.loss_regressed()):
+            self._pending_discovery = False
             self._last_trigger = now
             return True
         return False

@@ -26,6 +26,7 @@ __all__ = [
     "ec2_profiles",
     "smartphone_profiles",
     "heterogeneity_profiles",
+    "fleet_profiles",
     "with_links",
 ]
 
@@ -99,6 +100,30 @@ def smartphone_profiles(
     shares /= shares.sum()
     picks = rng.choice(len(scores), size=m, p=shares)
     return [WorkerProfile(v=float(scores[i]) * per_score, o=o) for i in picks]
+
+
+def fleet_profiles(
+    m: int,
+    spread: float = 4.0,
+    seed: int = 0,
+    o: float = 0.2,
+    bandwidth: float = float("inf"),
+    latency: float = 0.0,
+) -> list[WorkerProfile]:
+    """An m-worker edge fleet with speeds log-uniform across ``spread``
+    (v ∈ [1, spread], denser at the slow end — the long-tail device mix
+    the fleet scheduler targets) and a uniform link model. Used by
+    ``benchmarks/bench_fleet.py`` for large scheduled fleets where the
+    hand-curated Table 1/2 mixes don't scale."""
+    if m < 1 or spread < 1.0:
+        raise ValueError("need m >= 1 and spread >= 1")
+    rng = np.random.default_rng(seed)
+    vs = np.exp(rng.uniform(0.0, np.log(spread), size=m))
+    return [
+        WorkerProfile(v=float(v), o=o, bandwidth=float(bandwidth),
+                      latency=float(latency))
+        for v in vs
+    ]
 
 
 def heterogeneity_profiles(

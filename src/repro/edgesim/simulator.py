@@ -80,6 +80,7 @@ import numpy as np
 
 from repro.cluster import ChurnSchedule, ClusterEngine
 from repro.control.theory import WorkerProfile
+from repro.fleet import CommitRecord, EvalRecord, FleetConfig, FleetMonitor
 from repro.ps.sharding import ShardPlan
 from repro.transport import Codec, dense_nbytes, get_codec
 
@@ -147,7 +148,15 @@ class WorkerState:
     step_started: float = -1.0  # when the in-flight step was scheduled
     step_credit: int = 0  # joiner ramp-in credit (engine.worker_joined)
     commit_credit: int = 0
-    status: str = "idle"  # idle | computing | committing | awaiting_release | blocked
+    status: str = "idle"  # idle | computing | committing | awaiting_release | blocked | stalled | catching_up
+    # generation counter: bumped when the worker silently stalls (and on
+    # rejoin), so in-flight heap events of the frozen life are dropped
+    gen: int = 0
+    # metrics bookkeeping (repro.fleet): when the in-flight commit was
+    # decided, and what its pull will fetch
+    commit_started: float = -1.0
+    pending_pull_nbytes: float = 0.0
+    pending_pull_stale: int = 0
     residual: Pytree = ()  # codec error-feedback state (rule-owned)
     pending_commit: Pytree = None  # encoded payload of the in-flight commit
     # sharded PS (n_shards > 1) bookkeeping: the in-flight per-shard
@@ -187,10 +196,19 @@ class Simulator:
                  policy, config: SimConfig | None = None,
                  churn: ChurnSchedule | None = None,
                  codec: str | Codec = "identity",
-                 n_shards: int = 1):
+                 n_shards: int = 1,
+                 fleet: FleetConfig | None = None,
+                 metrics=None):
         self.task = task
         self.cfg = config or SimConfig()
         self.churn = churn
+        # fleet orchestration (DESIGN.md §13): heartbeat/lease failure
+        # discovery + capability-aware scheduling. None → zero overhead,
+        # bit-identical to the pre-fleet simulator.
+        self.metrics = metrics
+        self.fleet = FleetMonitor(fleet, metrics=metrics) if fleet is not None else None
+        self._lease_gone: dict[int, WorkerState] = {}  # expired, may rejoin
+        self._dead_time = 0.0  # offline spans of rejoined workers
         self.now = 0.0
         self._heap: list = []
         self._seq = itertools.count()
@@ -259,9 +277,13 @@ class Simulator:
             lambda w, u, lr: jax.tree.map(lambda a, b: a - lr * b, w, u)
         )
         # control plane ------------------------------------------------------
-        self.engine = ClusterEngine(policy, backend=self)
+        self.engine = ClusterEngine(policy, backend=self, metrics=metrics)
         self.policy = self.engine.policy
         self.engine.start()
+        if self.fleet is not None:
+            for w in self.workers:
+                self.fleet.join(w.index, 0.0, w.profile)
+            self.engine.execute(self.fleet.assignments(0.0))
         for w in self.workers:
             self._start_step(w)
         self._eval_global()
@@ -305,7 +327,11 @@ class Simulator:
         self.workers.append(w)
         self._by_id[w.index] = w
         self._refresh_global_lr()
+        if self.fleet is not None:
+            self.fleet.join(w.index, self.now, w.profile)
         self.engine.worker_joined(w)
+        if self.fleet is not None:
+            self.engine.execute(self.fleet.assignments(self.now))
         self._start_step(w)
         return w
 
@@ -322,32 +348,168 @@ class Simulator:
             raise KeyError(f"no alive worker with id {index}")
         if len(self.workers) == 1:
             raise ValueError("cannot remove the last worker")
-        del self._by_id[index]
+        if self.fleet is not None:
+            # administrative departure: retire the lease so a pending
+            # expiry can't synthesize a second WorkerLeft for this worker
+            self.fleet.scripted_leave(index, self.now)
+        self._remove(w, discovered=False)
+
+    def _remove(self, w: WorkerState, discovered: bool) -> None:
+        """Common tail of scripted removal and lease-expiry discovery."""
+        del self._by_id[w.index]
         self.workers.remove(w)
         self._departed.append((w, self.now))
-        self._barrier_buf.pop(index, None)
-        self._round_members.discard(index)
+        self._barrier_buf.pop(w.index, None)
+        self._round_members.discard(w.index)
         self._refresh_global_lr()
-        self.engine.worker_left(index)
+        self.engine.worker_left(w.index, discovered=discovered)
+        if self.fleet is not None:
+            self.engine.execute(self.fleet.assignments(self.now))
         self._maybe_release_barrier()
+
+    def stall_worker(self, index: int) -> None:
+        """Silent failure: the worker freezes with NO departure notice.
+        Its in-flight events are invalidated (generation bump) and its
+        heartbeats stop; the engine keeps planning around it until the
+        lease layer (if any) discovers the death at lease expiry. Without
+        a fleet monitor a stalled worker is simply gone dark — a barrier
+        policy will wait on it forever, which is exactly the failure mode
+        ``benchmarks/bench_fleet.py`` quantifies."""
+        w = self._by_id.get(index)
+        if w is None:
+            raise KeyError(f"no alive worker with id {index}")
+        if w.status == "stalled":
+            return
+        w.status = "stalled"
+        w.gen += 1  # drop this life's in-flight step/commit/pull events
+        if self.fleet is not None:
+            self.fleet.stall(index, self.now)
+
+    def recover_worker(self, index: int) -> None:
+        """A stalled worker comes back. Before its lease expired the
+        control plane never knew — it silently resumes stepping (in-flight
+        work of the frozen life was dropped). After expiry it is a
+        *discovered rejoin*: WorkerJoined(discovered=True) plus a state
+        catch-up over the partial-pull path (PR 4)."""
+        w = self._by_id.get(index)
+        if w is not None:
+            if w.status != "stalled":
+                return
+            if self.fleet is not None and not self.fleet.recover(index, self.now):
+                # raced: the lease expired in this same instant — still
+                # dead; the expiry timer will discover the departure
+                return
+            # crash semantics: whatever was mid-push/pull when it froze is
+            # lost; locally accumulated update survives (process lived on)
+            w.pending_commit = None
+            w.pending_shards = None
+            w.status = "idle"
+            self._start_step(w)
+            return
+        if index in self._lease_gone:
+            self._rejoin(self._lease_gone.pop(index))
+            return
+        raise KeyError(f"no worker with id {index} to recover")
+
+    def _discover_departure(self, index: int) -> None:
+        """Lease expiry: synthesize WorkerLeft(discovered=True) for a
+        worker that never said goodbye. Parked in ``_lease_gone`` so a
+        later recovery rejoins it (and so a scripted leave racing this
+        discovery dedupes to exactly one WorkerLeft)."""
+        w = self._by_id.get(index)
+        if w is None:
+            return  # already administratively removed
+        if len(self.workers) == 1:
+            return  # never evict the last worker; keep the run alive
+        self._lease_gone[index] = w
+        self._remove(w, discovered=True)
+
+    def _rejoin(self, w: WorkerState) -> None:
+        """A lease-expired worker comes back: pull it out of the departed
+        accounting (its offline span must not count as waiting), re-admit
+        it, and schedule a state catch-up. Like elastic joiners it loses
+        uncommitted local work and re-enters through the engine's ramp-in
+        credit (its pre-stall step/commit history is absorbed into the
+        credit baseline)."""
+        for i, (d, left_at) in enumerate(self._departed):
+            if d is w:
+                self._dead_time += self.now - left_at
+                del self._departed[i]
+                break
+        w.gen += 1
+        w.status = "catching_up"
+        w.pending_commit = None
+        w.pending_shards = None
+        w.update = self._zero
+        w.steps_since_commit = 0
+        w.residual = self._zero_residual
+        self.workers.append(w)
+        self._by_id[w.index] = w
+        self._refresh_global_lr()
+        if self.fleet is not None:
+            self.fleet.join(w.index, self.now, w.profile, rejoin=True)
+        self.engine.worker_joined(w, discovered=True)
+        if self.fleet is not None:
+            self.engine.execute(self.fleet.assignments(self.now))
+        # state catch-up: under a sharded PS only the shards whose version
+        # moved while the worker was dead ship (PR 4's partial-pull path);
+        # the monolithic PS re-ships dense params
+        if self.n_shards > 1:
+            self._schedule_partial_pull(w, kind="catchup_done")
+        else:
+            dur = self._pull_seconds(w)
+            w.comm_time += dur
+            self._bytes_from_ps += self._pull_nbytes
+            self._push(self.now + dur, "catchup_done", w.index)
+
+    def _on_catchup_done(self, w: WorkerState) -> None:
+        w.params = self.global_params
+        if self.n_shards > 1:
+            w.shard_known = list(self._ps_version)
+        w.status = "idle"
+        self._start_step(w)
 
     def set_speed(self, index: int, v: float) -> None:
         """Mid-run speed shift (throttling, contention, recovery)."""
         w = self._by_id[index]
         w.profile = dataclasses.replace(w.profile, v=v)
         self.engine.speed_changed(w)
+        if self.fleet is not None:
+            # the *scheduler* only learns the new capability at the next
+            # heartbeat arrival — reassignment is deferred to that report
+            t_rep = self.fleet.next_report_after(index, self.now)
+            if math.isfinite(t_rep):
+                self._push(t_rep, "hb_report", index)
+
+    def _on_hb_report(self, w: WorkerState) -> None:
+        if self.fleet is None or w.status == "stalled":
+            return
+        self.fleet.report(w.index, self.now, w.profile.v)
+        self.engine.execute(self.fleet.assignments(self.now))
 
     def _apply_churn(self, act) -> None:
         if act.kind == "join":
             self.add_worker(act.profile)
         elif act.kind == "leave":
+            if act.worker in self._lease_gone:
+                # the lease layer already discovered this departure —
+                # scripted leave and missed lease dedupe to ONE WorkerLeft
+                del self._lease_gone[act.worker]
+                return
             self.remove_worker(act.worker)
-        else:  # "speed"
+        elif act.kind == "speed":
             self.set_speed(act.worker, act.v)
+        elif act.kind == "stall":
+            self.stall_worker(act.worker)
+        else:  # "recover"
+            self.recover_worker(act.worker)
 
     # ------------------------------------------------------------------ events
     def _push(self, t: float, kind: str, wid: int, arg: int | None = None) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), kind, wid, arg))
+        # events carry the worker's generation: a silent stall bumps it,
+        # so the frozen life's in-flight events are dropped at pop
+        gen = self._by_id[wid].gen if wid in self._by_id else 0
+        heapq.heappush(self._heap, (t, next(self._seq), kind, wid, arg, gen))
 
     def _step_time(self, w: WorkerState) -> float:
         frac = self.engine.batch_fraction(w)
@@ -383,6 +545,7 @@ class Simulator:
         w.update = self._accum(w.update, grads, self._local_lr)
         if self.engine.step_done(w):
             w.status = "committing"
+            w.commit_started = self.now
             if self.n_shards > 1:
                 self._start_sharded_push(w)
             else:
@@ -463,17 +626,21 @@ class Simulator:
             w.shard_known[k] = self._ps_version[k]
         self._bytes_to_ps += self._shard_enc_nbytes[k]
 
-    def _schedule_partial_pull(self, w: WorkerState) -> None:
+    def _schedule_partial_pull(self, w: WorkerState,
+                               kind: str = "pull_done") -> None:
         """Pull only the shards whose PS version moved past the worker's
         local copy; the fixed O_i/2 + latency round trip (learning the
-        version vector) is paid even when nothing is stale."""
+        version vector) is paid even when nothing is stale. ``kind``
+        selects the completion event (``catchup_done`` for rejoin)."""
         stale = [k for k in range(self.n_shards)
                  if self._ps_version[k] > w.shard_known[k]]
         nbytes = sum(self._shard_pull_nbytes[k] for k in stale)
         dur = w.profile.o / 2.0 + w.profile.transfer_seconds(nbytes)
         w.comm_time += dur
         self._bytes_from_ps += nbytes
-        self._push(self.now + dur, "pull_done", w.index)
+        w.pending_pull_nbytes = float(nbytes)
+        w.pending_pull_stale = len(stale)
+        self._push(self.now + dur, kind, w.index)
 
     def _on_shard_arrive(self, w: WorkerState, k: int) -> None:
         if self.engine.policy.apply_mode == "barrier":
@@ -497,6 +664,8 @@ class Simulator:
         else:
             self._do_apply(w)
             self._bytes_from_ps += self._pull_nbytes
+            w.pending_pull_nbytes = float(self._pull_nbytes)
+            w.pending_pull_stale = 1
             self._push(self.now + self._pull_seconds(w), "pull_done", w.index)
 
     def _maybe_release_barrier(self) -> None:
@@ -520,10 +689,17 @@ class Simulator:
         self._barrier_buf.clear()
         for ww in self.workers:
             if ww.index in pulled:
+                if ww.status == "stalled":
+                    # its buffered payload was applied (it arrived at the
+                    # PS before the freeze) but the pull to a dead host is
+                    # lost; it resumes — or is evicted — via the lease path
+                    continue
                 if self.n_shards > 1:
                     self._schedule_partial_pull(ww)
                 else:
                     self._bytes_from_ps += self._pull_nbytes
+                    ww.pending_pull_nbytes = float(self._pull_nbytes)
+                    ww.pending_pull_stale = 1
                     self._push(self.now + self._pull_seconds(ww), "pull_done",
                                ww.index)
         self._round_members = set(self._by_id)
@@ -550,6 +726,19 @@ class Simulator:
         w.update = self._zero
         w.steps_since_commit = 0
         w.commits += 1
+        if self.metrics is not None:
+            push_b = (sum(self._shard_enc_nbytes) if self.n_shards > 1
+                      else self._enc_nbytes)
+            self.metrics.record(CommitRecord(
+                t=self.now, worker=w.index,
+                latency=(self.now - w.commit_started
+                         if w.commit_started >= 0 else 0.0),
+                push_bytes=float(push_b),
+                pull_bytes=w.pending_pull_nbytes,
+                stale_shards=w.pending_pull_stale,
+                n_shards=self.n_shards,
+            ))
+            w.commit_started = -1.0
         if self.n_shards > 1:
             # the pull teleports the PS state as of completion, so the
             # local copy now reflects every shard's current version
@@ -559,15 +748,27 @@ class Simulator:
 
     # ------------------------------------------------------------------ loop
     def _fire_timers(self, horizon: float) -> bool:
-        """Fire evals / churn / checkpoints due at or before ``horizon``.
-        Returns True if the run converged while doing so."""
+        """Fire evals / churn / lease expiries / checkpoints due at or
+        before ``horizon``. Returns True if the run converged while doing
+        so. Lease expiries are *batch* checks: the tracker keeps a heap of
+        statically computed deadlines (heartbeat streams are deterministic
+        between stall/recover/speed changes), so a 10k-worker fleet costs
+        O(changes·log M), not O(heartbeats)."""
         while True:
             candidates = [self._next_eval, self._next_checkpoint]
             nt = self.churn.next_time() if self.churn is not None else None
             if nt is not None:
                 candidates.append(nt)
+            le = self.fleet.next_expiry() if self.fleet is not None else math.inf
+            if math.isfinite(le):
+                candidates.append(le)
             t_min = min(candidates)
             if t_min > horizon:
+                return False
+            if self._heap and self._heap[0][0] < t_min:
+                # a previous timer handler scheduled cluster work (lease
+                # discovery released a barrier, churn rejoined a worker)
+                # due before the next timer: yield to the event loop
                 return False
             self.now = max(self.now, t_min)
             if t_min == self._next_eval:
@@ -576,8 +777,13 @@ class Simulator:
                 if self.converged:
                     return True
             elif nt is not None and t_min == nt:
+                # scripted churn fires before lease discovery at ties —
+                # an administrative leave beats the expiry to the punch
                 for act in self.churn.due(self.now):
                     self._apply_churn(act)
+            elif t_min == le:
+                for wid in self.fleet.expired_due(self.now):
+                    self._discover_departure(wid)
             else:
                 self._local_lr = self.cfg.local_lr * (
                     self.cfg.local_lr_decay ** (self.now / self.cfg.gamma)
@@ -596,10 +802,20 @@ class Simulator:
         # _run_until on this same heap, possibly advancing the clock past
         # this frame's t_end — the max() guards keep time monotone when
         # the outer frame resumes.
-        while self._heap and not self.converged:
-            head = self._heap[0]
-            t = head[0]
+        while not self.converged:
+            head = self._heap[0] if self._heap else None
+            t = head[0] if head is not None else t_end
             if self._fire_timers(min(t, t_end)):
+                return
+            if head is None:
+                if self._heap:
+                    # a timer woke the cluster up (lease discovery released
+                    # a deadlocked barrier, churn rejoined a worker, ...)
+                    continue
+                # heap empty and every timer ≤ t_end fired: the cluster is
+                # idle (or deadlocked) — the clock still advances, so the
+                # eval/lease/churn timers keep firing next frame
+                self.now = max(self.now, t_end)
                 return
             if not self._heap or self._heap[0] is not head:
                 # a timer dispatch (churn → drift Search) ran a nested
@@ -609,9 +825,11 @@ class Simulator:
             if t > t_end:
                 self.now = max(self.now, t_end)
                 return
-            t, _, kind, wid, arg = heapq.heappop(self._heap)
+            t, _, kind, wid, arg, gen = heapq.heappop(self._heap)
             w = self._by_id.get(wid)
             if w is None:  # event of a departed worker
+                continue
+            if gen != w.gen:  # event of a stalled (pre-freeze) life
                 continue
             self.now = max(self.now, t)
             if kind == "step_done":
@@ -622,12 +840,18 @@ class Simulator:
                 self._on_shard_arrive(w, arg)
             elif kind == "pull_done":
                 self._on_pull_done(w)
+            elif kind == "catchup_done":
+                self._on_catchup_done(w)
+            elif kind == "hb_report":
+                self._on_hb_report(w)
         if not self._heap:
             self.now = max(self.now, t_end)
 
     def _eval_global(self) -> None:
         loss = float(self.task.eval_fn(self.global_params, self.task.eval_batch))
         self.loss_history.append((self.now, loss))
+        if self.metrics is not None:
+            self.metrics.record(EvalRecord(t=self.now, loss=loss))
         if self.cfg.target_loss is not None and loss <= self.cfg.target_loss:
             self._declare_converged()
             return
@@ -709,6 +933,9 @@ class Simulator:
         elapsed = self.now
         active = sum(elapsed - w.joined_at for w in self.workers)
         active += sum(left - w.joined_at for w, left in self._departed)
+        # offline spans of lease-expired-then-rejoined workers are neither
+        # computation nor waiting — the host was dead
+        active -= self._dead_time
         waiting = max(active - comp, 0.0)
         return SimResult(
             policy=self.engine.policy.name,

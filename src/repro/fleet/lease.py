@@ -1,0 +1,193 @@
+"""Heartbeat/lease failure detection (DESIGN.md §13).
+
+Every worker holds a *lease*: it is granted at join for ``ttl`` (virtual)
+seconds and renewed each time a heartbeat **arrives** at the PS.
+Heartbeats are ordinary traffic on the worker's link model — sent every
+``heartbeat_period`` and delivered one link delay later (latency plus the
+small payload over the worker's bandwidth) — so a congested or
+high-latency link can miss the TTL and look exactly like a death. A
+missed lease synthesizes ``WorkerLeft(discovered=True)``; a later rejoin
+synthesizes ``WorkerJoined(discovered=True)`` with state catch-up over
+the partial-shard-pull path.
+
+Scale: the tracker never materializes one timer event per worker per
+period. Healthy heartbeat streams are deterministic — worker ``i``'s
+k-th heartbeat arrives at ``anchor + k·period + delay`` — so the lease
+of a healthy worker can only expire at a *statically computable* time
+(at grant, when the first arrival or the steady-state inter-arrival gap
+overshoots the TTL) or when its stream is interrupted (``stall``). Only
+those finitely many expiry candidates enter a heap, entries are lazily
+invalidated by a per-worker token, and ``pop_expired`` drains everything
+due in one batch. A 10k-worker heartbeat-only fleet therefore costs
+O(changes·log M), not O(workers · time/period) — the difference between
+seconds and minutes in ``benchmarks/bench_fleet.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+__all__ = ["LeaseConfig", "LeaseTracker", "heartbeat_delay"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseConfig:
+    """Lease protocol knobs (virtual seconds / bytes).
+
+    ``ttl`` must comfortably exceed ``heartbeat_period`` plus the worst
+    link delay, or healthy workers flap (the tracker models that
+    faithfully rather than forbidding it — see the false-positive tests).
+    """
+
+    ttl: float = 15.0
+    heartbeat_period: float = 5.0
+    hb_nbytes: int = 256  # heartbeat payload (capability report) on the link
+
+    def __post_init__(self):
+        if self.ttl <= 0 or self.heartbeat_period <= 0:
+            raise ValueError("ttl and heartbeat_period must be positive")
+
+
+def heartbeat_delay(profile, hb_nbytes: int) -> float:
+    """One-way delivery time of a heartbeat over a worker's link."""
+    return profile.transfer_seconds(hb_nbytes)
+
+
+@dataclasses.dataclass
+class _Lease:
+    anchor: float  # when the current heartbeat phase started (join/recover)
+    period: float
+    delay: float
+    ttl: float
+    token: int = 0
+    expiry: float = math.inf  # currently scheduled expiry (inf = healthy)
+    stalled_at: float | None = None
+
+
+class LeaseTracker:
+    """See module docstring. All times are the caller's virtual clock."""
+
+    def __init__(self):
+        self._info: dict[int, _Lease] = {}
+        self._heap: list[tuple[float, int, int]] = []  # (deadline, wid, token)
+
+    # ------------------------------------------------------------ queries
+    def __contains__(self, wid: int) -> bool:
+        return wid in self._info
+
+    def __len__(self) -> int:
+        return len(self._info)
+
+    def stalled(self, wid: int) -> bool:
+        info = self._info.get(wid)
+        return info is not None and info.stalled_at is not None
+
+    def next_expiry(self) -> float:
+        """Earliest pending lease expiry (inf if every lease is healthy)."""
+        while self._heap:
+            deadline, wid, token = self._heap[0]
+            info = self._info.get(wid)
+            if info is None or info.token != token:
+                heapq.heappop(self._heap)
+                continue
+            return deadline
+        return math.inf
+
+    def pop_expired(self, now: float) -> list[int]:
+        """Batch-drain every lease expired at or before ``now``. Expired
+        workers are forgotten; re-admission goes through ``grant``."""
+        out = []
+        while self._heap and self._heap[0][0] <= now:
+            _deadline, wid, token = heapq.heappop(self._heap)
+            info = self._info.get(wid)
+            if info is None or info.token != token:
+                continue
+            del self._info[wid]
+            out.append(wid)
+        return out
+
+    def next_report_after(self, wid: int, now: float) -> float:
+        """Arrival time of the first heartbeat sent strictly after ``now``
+        (how long a capability change takes to reach the PS). inf while
+        the worker is stalled or unknown."""
+        info = self._info.get(wid)
+        if info is None or info.stalled_at is not None:
+            return math.inf
+        k = max(1, math.floor((now - info.anchor) / info.period) + 1)
+        return info.anchor + k * info.period + info.delay
+
+    # ------------------------------------------------------- transitions
+    def grant(self, wid: int, now: float, cfg: LeaseConfig, delay: float) -> None:
+        """Admit ``wid``: lease until ``now + ttl``, renewals from its
+        periodic heartbeat stream. Re-granting an existing worker resets
+        its schedule (used by rejoin)."""
+        info = _Lease(anchor=now, period=cfg.heartbeat_period, delay=delay,
+                      ttl=cfg.ttl,
+                      token=self._bump(wid))
+        self._info[wid] = info
+        self._schedule_steady_state(wid, info, first_deadline=now + cfg.ttl)
+
+    def stall(self, wid: int, now: float) -> None:
+        """The worker silently stopped (no departure notice): heartbeats
+        sent at or before ``now`` still deliver, nothing after."""
+        info = self._info.get(wid)
+        if info is None or info.stalled_at is not None:
+            return
+        info.stalled_at = now
+        last_k = math.floor((now - info.anchor) / info.period)
+        if last_k >= 1:
+            last_arrival = info.anchor + last_k * info.period + info.delay
+            deadline = last_arrival + info.ttl
+        else:  # stalled before its first heartbeat: only the grant holds
+            deadline = info.anchor + info.ttl
+        # an already-scheduled earlier expiry (TTL misconfiguration) wins
+        deadline = min(deadline, info.expiry)
+        info.token = self._bump(wid)
+        info.expiry = deadline
+        heapq.heappush(self._heap, (deadline, wid, info.token))
+
+    def recover(self, wid: int, now: float) -> bool:
+        """The worker resumed sending (phase re-anchored at ``now``).
+        Returns False if its lease already expired — the caller must take
+        the rejoin path instead. Recovering *before* expiry cancels the
+        pending expiry iff the first new heartbeat lands in time."""
+        info = self._info.get(wid)
+        if info is None:
+            return False
+        if now >= info.expiry:
+            # the deadline already passed (or ties): the expiry stands —
+            # the caller's next batch check will pop it as a discovery
+            return False
+        info.stalled_at = None
+        info.anchor = now
+        first_deadline = info.expiry if info.expiry < math.inf else now + info.ttl
+        info.token = self._bump(wid)
+        self._schedule_steady_state(wid, info, first_deadline=first_deadline)
+        return True
+
+    def forget(self, wid: int) -> None:
+        """Administrative departure (scripted leave): drop the lease so no
+        expiry is ever synthesized for this worker."""
+        self._info.pop(wid, None)
+
+    # -------------------------------------------------------------- internals
+    def _bump(self, wid: int) -> int:
+        info = self._info.get(wid)
+        return info.token + 1 if info is not None else 0
+
+    def _schedule_steady_state(self, wid: int, info: _Lease,
+                               first_deadline: float) -> None:
+        """Given a healthy periodic stream anchored at ``info.anchor`` and
+        a lease currently valid until ``first_deadline``, schedule the one
+        expiry the deterministic schedule implies (or none)."""
+        a1 = info.anchor + info.period + info.delay
+        if a1 > first_deadline:
+            info.expiry = first_deadline  # first renewal arrives too late
+        elif info.period > info.ttl:
+            info.expiry = a1 + info.ttl  # renewals can't keep up
+        else:
+            info.expiry = math.inf
+            return
+        heapq.heappush(self._heap, (info.expiry, wid, info.token))

@@ -1,0 +1,231 @@
+"""Structured metrics stream (DESIGN.md §13).
+
+Every fleet-visible occurrence — a commit round trip, a search, a drift
+trigger, a lease grant/expiry, a churn event — is a typed, append-only
+record emitted into a shared sink. Producers are the ``ClusterEngine``
+(search/drift/churn), the edge simulator (commit latency, push/pull
+bytes, shard staleness, lease events), and the mesh backend (per-round
+commit records); consumers are ``benchmarks/`` and
+``tools/fleet_report.py``.
+
+Records follow the repo's registry idiom (``repro.ps`` rules,
+``repro.transport`` codecs): each record class registers under a string
+``kind`` and round-trips losslessly through ``to_dict``/``from_dict``,
+so a run's stream can be persisted as JSONL and re-loaded for analysis.
+Sinks are anything with ``record(rec)``; ``MetricsLog`` keeps the stream
+in memory, ``JsonlSink`` appends to a file as the run executes. A ``None``
+sink everywhere means "don't record" — producers guard every emission so
+an uninstrumented run pays nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Iterable, Protocol, runtime_checkable
+
+__all__ = [
+    "MetricRecord", "CommitRecord", "EvalRecord", "SearchRecord",
+    "DriftRecord", "LeaseRecord", "ChurnRecord", "CapabilityRecord",
+    "AssignRecord",
+    "MetricsSink", "MetricsLog", "JsonlSink",
+    "record_kinds", "to_dict", "from_dict", "load_jsonl",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricRecord:
+    """Base class; all records are immutable and carry the (virtual) time
+    ``t`` they describe. ``kind`` is the registry key (class attribute)."""
+
+    t: float
+
+    kind = "base"
+
+
+_KINDS: dict[str, type] = {}
+
+
+def _register(kind: str):
+    def deco(cls):
+        cls.kind = kind
+        _KINDS[kind] = cls
+        return cls
+    return deco
+
+
+def record_kinds() -> list[str]:
+    return sorted(_KINDS)
+
+
+@_register("commit")
+@dataclasses.dataclass(frozen=True)
+class CommitRecord(MetricRecord):
+    """One complete commit round trip (push → apply → pull), stamped at
+    pull completion. ``latency`` spans commit decision to pull done —
+    barrier waits included, which is what makes it worth recording."""
+
+    worker: int
+    latency: float
+    push_bytes: float
+    pull_bytes: float
+    stale_shards: int  # shards the pull actually fetched
+    n_shards: int
+
+
+@_register("eval")
+@dataclasses.dataclass(frozen=True)
+class EvalRecord(MetricRecord):
+    """A global-loss evaluation (simulator eval clock / mesh round)."""
+
+    loss: float
+
+
+@_register("search")
+@dataclasses.dataclass(frozen=True)
+class SearchRecord(MetricRecord):
+    """An Alg. 1 SearchSession finished (t = completion time)."""
+
+    chosen: int
+    windows: int
+    restarts: int
+    aborted: bool
+
+
+@_register("drift")
+@dataclasses.dataclass(frozen=True)
+class DriftRecord(MetricRecord):
+    """A mid-epoch re-search was triggered outside the epoch clock;
+    ``cause`` names the event type that carried the Search command."""
+
+    cause: str
+
+
+@_register("lease")
+@dataclasses.dataclass(frozen=True)
+class LeaseRecord(MetricRecord):
+    """Lease lifecycle: granted | stalled | expired | rejoined."""
+
+    worker: int
+    event: str
+
+
+@_register("churn")
+@dataclasses.dataclass(frozen=True)
+class ChurnRecord(MetricRecord):
+    """Fleet membership changed. ``discovered`` distinguishes failures
+    found by the lease layer from scripted/administrative changes."""
+
+    worker: int
+    event: str  # "join" | "leave"
+    discovered: bool
+
+
+@_register("capability")
+@dataclasses.dataclass(frozen=True)
+class CapabilityRecord(MetricRecord):
+    """A worker's heartbeat-reported capability (speed v) reached the PS."""
+
+    worker: int
+    v: float
+
+
+@_register("assign")
+@dataclasses.dataclass(frozen=True)
+class AssignRecord(MetricRecord):
+    """The device scheduler (re)assigned a worker's batch/data share."""
+
+    worker: int
+    fraction: float
+    data_share: float
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+
+def to_dict(rec: MetricRecord) -> dict:
+    d = dataclasses.asdict(rec)
+    d["kind"] = rec.kind
+    return d
+
+
+def from_dict(d: dict) -> MetricRecord:
+    d = dict(d)
+    kind = d.pop("kind")
+    try:
+        cls = _KINDS[kind]
+    except KeyError:
+        raise KeyError(f"unknown metric kind {kind!r}; known: {record_kinds()}")
+    return cls(**d)
+
+
+def load_jsonl(path) -> list[MetricRecord]:
+    out = []
+    for line in pathlib.Path(path).read_text().splitlines():
+        line = line.strip()
+        if line:
+            out.append(from_dict(json.loads(line)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class MetricsSink(Protocol):
+    def record(self, rec: MetricRecord) -> None: ...
+
+
+class MetricsLog:
+    """In-memory append-only sink with query helpers."""
+
+    def __init__(self):
+        self.records: list[MetricRecord] = []
+
+    def record(self, rec: MetricRecord) -> None:
+        self.records.append(rec)
+
+    def of(self, kind: str) -> list[MetricRecord]:
+        return [r for r in self.records if r.kind == kind]
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def to_jsonl(self, path) -> None:
+        pathlib.Path(path).write_text(
+            "".join(json.dumps(to_dict(r)) + "\n" for r in self.records)
+        )
+
+    @classmethod
+    def from_records(cls, records: Iterable[MetricRecord]) -> "MetricsLog":
+        log = cls()
+        for r in records:
+            log.record(r)
+        return log
+
+
+class JsonlSink:
+    """Streaming JSONL sink: one record per line, flushed as emitted so a
+    crashed run still leaves an analyzable prefix."""
+
+    def __init__(self, path):
+        self.path = pathlib.Path(path)
+        self._fh = self.path.open("w")
+
+    def record(self, rec: MetricRecord) -> None:
+        self._fh.write(json.dumps(to_dict(rec)) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        self._fh.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

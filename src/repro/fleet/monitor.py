@@ -1,0 +1,126 @@
+"""FleetMonitor: the PS-side fleet orchestrator (DESIGN.md §13).
+
+Owns the pieces a real parameter server's control plane would: the
+``LeaseTracker`` (who is alive, by heartbeat evidence), the capability
+table (what each device last *reported*, not what it truly is), the
+optional ``DeviceScheduler`` (how batch/data shares follow capabilities),
+and the metrics sink every fleet event is recorded into. Backends call
+its transition methods from their own clocks; it never touches training
+state and emits only plain records and ``SetBatchFraction`` commands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.cluster.protocol import Command, SetBatchFraction
+
+from .lease import LeaseConfig, LeaseTracker, heartbeat_delay
+from .metrics import AssignRecord, CapabilityRecord, LeaseRecord, MetricsSink
+from .scheduler import DeviceScheduler, get_scheduler
+
+__all__ = ["FleetConfig", "FleetMonitor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-orchestration knobs for a backend run.
+
+    ``scheduler=None`` leaves batch fractions to the policy (the status
+    quo); a scheduler name activates capability-aware assignment on every
+    membership change and capability report."""
+
+    lease: LeaseConfig = dataclasses.field(default_factory=LeaseConfig)
+    scheduler: str | None = None
+    scheduler_kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+class FleetMonitor:
+    """See module docstring. ``metrics`` may be None (record nothing)."""
+
+    def __init__(self, config: FleetConfig, metrics: MetricsSink | None = None):
+        self.config = config
+        self.metrics = metrics
+        self.leases = LeaseTracker()
+        self.reported_v: dict[int, float] = {}
+        self.scheduler: DeviceScheduler | None = (
+            get_scheduler(config.scheduler, **config.scheduler_kwargs)
+            if config.scheduler is not None else None
+        )
+
+    # ------------------------------------------------------------- helpers
+    def _emit(self, rec) -> None:
+        if self.metrics is not None:
+            self.metrics.record(rec)
+
+    def delay_for(self, profile) -> float:
+        return heartbeat_delay(profile, self.config.lease.hb_nbytes)
+
+    def __contains__(self, wid: int) -> bool:
+        return wid in self.leases
+
+    # ---------------------------------------------------------- transitions
+    def join(self, wid: int, now: float, profile, *, rejoin: bool = False) -> None:
+        """Admit a worker: grant its lease and take its join-time
+        capability report (the join handshake carries one)."""
+        self.leases.grant(wid, now, self.config.lease, self.delay_for(profile))
+        self.reported_v[wid] = float(profile.v)
+        self._emit(LeaseRecord(t=now, worker=wid,
+                               event="rejoined" if rejoin else "granted"))
+        self._emit(CapabilityRecord(t=now, worker=wid, v=float(profile.v)))
+
+    def stall(self, wid: int, now: float) -> None:
+        """The worker went silent — no departure notice, heartbeats stop.
+        Its stale capability report lingers until the lease expires."""
+        self.leases.stall(wid, now)
+        self._emit(LeaseRecord(t=now, worker=wid, event="stalled"))
+
+    def recover(self, wid: int, now: float) -> bool:
+        """Heartbeats resumed; False means the lease already expired and
+        the caller must re-admit through the rejoin path."""
+        return self.leases.recover(wid, now)
+
+    def scripted_leave(self, wid: int, now: float) -> None:
+        """Administrative departure: the PS was told, so the lease is
+        dropped and can never also expire (the scripted-vs-discovered
+        dedupe guarantee)."""
+        self.leases.forget(wid)
+        self.reported_v.pop(wid, None)
+
+    def expired_due(self, now: float) -> list[int]:
+        """Batch-drain expired leases; each is a discovered failure."""
+        gone = self.leases.pop_expired(now)
+        for wid in gone:
+            self.reported_v.pop(wid, None)
+            self._emit(LeaseRecord(t=now, worker=wid, event="expired"))
+        return gone
+
+    def next_expiry(self) -> float:
+        return self.leases.next_expiry()
+
+    # -------------------------------------------------- capability reports
+    def report(self, wid: int, now: float, v: float) -> None:
+        """A heartbeat carrying a fresh capability reached the PS."""
+        if wid in self.leases:
+            self.reported_v[wid] = float(v)
+            self._emit(CapabilityRecord(t=now, worker=wid, v=float(v)))
+
+    def next_report_after(self, wid: int, now: float) -> float:
+        return self.leases.next_report_after(wid, now)
+
+    # ----------------------------------------------------------- scheduling
+    def assignments(self, now: float) -> list[Command]:
+        """Scheduler pass over the current capability table, as
+        SetBatchFraction commands (empty without a scheduler)."""
+        if self.scheduler is None or not self.reported_v:
+            return []
+        asg = self.scheduler.assign(self.reported_v)
+        cmds: list[Command] = []
+        for wid, frac in sorted(asg.fractions.items()):
+            if not math.isfinite(frac) or frac <= 0:
+                continue
+            cmds.append(SetBatchFraction(wid, frac))
+            self._emit(AssignRecord(t=now, worker=wid, fraction=frac,
+                                    data_share=asg.data_shares[wid]))
+        return cmds

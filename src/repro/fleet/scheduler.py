@@ -1,0 +1,131 @@
+"""Capability-aware device scheduling (DESIGN.md §13).
+
+A ``DeviceScheduler`` maps the fleet's *reported* capabilities — the
+speeds carried by heartbeats, not the simulator's ground-truth profiles —
+to per-worker batch fractions and data shares. Assignments are applied
+through the existing ``SetBatchFraction`` command, so schedulers compose
+with every backend exactly like the BatchTune policies do; unlike those,
+a scheduler sees only what the PS could actually know (capability reports
+lag reality by up to one heartbeat period, and a stalled worker's last
+report lingers until its lease expires).
+
+Registry idiom mirrors ``repro.ps`` / ``repro.transport``: schedulers
+register under a string name and are built by ``get_scheduler(name)``.
+
+In this codebase a worker's *data share* is realized through its batch
+fraction (``make_batch`` draws ``fraction · M · base_batch`` examples
+from the worker's stream), so ``FleetAssignment.data_shares`` equals the
+fractions for the built-in schedulers; the two are kept as separate
+fields because a scheduler may legitimately split them (e.g. rebalancing
+a non-IID corpus without growing a device's step time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+__all__ = [
+    "FleetAssignment", "DeviceScheduler",
+    "UniformScheduler", "ProportionalScheduler", "SqrtScheduler",
+    "register_scheduler", "get_scheduler", "scheduler_names",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetAssignment:
+    """Per-worker shares, each a dict keyed by stable worker id; both
+    sum to 1 over the fleet the scheduler was given."""
+
+    fractions: dict[int, float]
+    data_shares: dict[int, float]
+
+
+class DeviceScheduler:
+    """Base contract: ``assign`` is a pure function of the reported
+    capability table (worker id → reported speed v)."""
+
+    name = "base"
+
+    def assign(self, reported_v: Mapping[int, float]) -> FleetAssignment:
+        raise NotImplementedError
+
+
+_SCHEDULERS: dict[str, type] = {}
+
+
+def register_scheduler(cls: type) -> type:
+    _SCHEDULERS[cls.name] = cls
+    return cls
+
+
+def scheduler_names() -> list[str]:
+    return sorted(_SCHEDULERS)
+
+
+def get_scheduler(name: str, **kwargs) -> DeviceScheduler:
+    try:
+        cls = _SCHEDULERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scheduler {name!r}; known: {scheduler_names()}"
+        )
+    return cls(**kwargs)
+
+
+def _normalized(weights: Mapping[int, float]) -> dict[int, float]:
+    total = sum(weights.values())
+    if total <= 0 or not math.isfinite(total):
+        n = max(len(weights), 1)
+        return {i: 1.0 / n for i in weights}
+    return {i: w / total for i, w in weights.items()}
+
+
+@register_scheduler
+class UniformScheduler(DeviceScheduler):
+    """Equal split — the static 1/M assignment every policy defaults to."""
+
+    name = "uniform"
+
+    def assign(self, reported_v):
+        frac = _normalized({i: 1.0 for i in reported_v})
+        return FleetAssignment(fractions=frac, data_shares=dict(frac))
+
+
+@dataclasses.dataclass
+@register_scheduler
+class ProportionalScheduler(DeviceScheduler):
+    """Shares ∝ reported speed, with a starvation floor: every worker is
+    guaranteed ``floor``/M of the global batch (floor ∈ [0, 1)), the rest
+    is divided proportionally. floor=0 is pure speed-proportional
+    (BatchTune's assignment, but from reports instead of ground truth)."""
+
+    floor: float = 0.25
+    name = "proportional"
+
+    def __post_init__(self):
+        if not 0.0 <= self.floor < 1.0:
+            raise ValueError(f"floor must be in [0, 1), got {self.floor}")
+
+    def assign(self, reported_v):
+        prop = _normalized(dict(reported_v))
+        m = max(len(prop), 1)
+        frac = {i: self.floor / m + (1.0 - self.floor) * p
+                for i, p in prop.items()}
+        return FleetAssignment(fractions=frac, data_shares=dict(frac))
+
+
+@dataclasses.dataclass
+@register_scheduler
+class SqrtScheduler(DeviceScheduler):
+    """Shares ∝ √(reported speed): a compromise that shortens the
+    straggler's step without concentrating the dataset on fast devices
+    (the concentration concern of the fog-learning literature)."""
+
+    name = "sqrt"
+
+    def assign(self, reported_v):
+        frac = _normalized({i: math.sqrt(max(v, 0.0))
+                            for i, v in reported_v.items()})
+        return FleetAssignment(fractions=frac, data_shares=dict(frac))

@@ -40,6 +40,7 @@ from repro.configs import get_config, get_smoke
 from repro.compat import use_mesh
 from repro.control.theory import WorkerProfile
 from repro.data.synthetic import lm_tokens
+from repro.fleet import FleetConfig, JsonlSink, LeaseConfig, scheduler_names
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.ps import UpdateRules, add_rule_args, add_shard_args, rules_from_args
@@ -78,6 +79,8 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
                  search_mode: str = "epoch",
                  drift_threshold: float = 0.25,
                  reward_model: str = "log_slope",
+                 fleet: FleetConfig | None = None,
+                 metrics=None,
                  ) -> tuple[MeshBackend, ClusterEngine, ADSP]:
     """Build the (backend, engine, policy) triple for an arch on a mesh."""
     from repro.launch.mesh import worker_axes_for
@@ -99,6 +102,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
         task, mesh, worker_axes=worker_axes, tau=tau,
         local_lr=local_lr, global_lr=global_lr, profiles=profiles,
         rules=update_rules, codec=codec, n_shards=n_shards,
+        fleet=fleet, metrics=metrics,
     )
     # drift mode stays armed even with no epoch cadence configured: the
     # detector, not the epoch clock, decides when to search
@@ -109,7 +113,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
         search_mode=search_mode, drift_threshold=drift_threshold,
         drift_cooldown=4 * gamma_rounds, reward_model=reward_model,
     )
-    engine = ClusterEngine(policy, backend)
+    engine = ClusterEngine(policy, backend, metrics=metrics)
     return backend, engine, policy
 
 
@@ -137,6 +141,17 @@ def main(argv=None):
     p.add_argument("--reward-model", default="log_slope",
                    choices=reward_model_names(),
                    help="probe-window reward model (repro.control registry)")
+    p.add_argument("--lease-ttl", type=float, default=0.0,
+                   help="fleet lease TTL in round time (0 = no fleet layer)")
+    p.add_argument("--heartbeat-period", type=float, default=0.0,
+                   help="heartbeat period in round time (default ttl/3)")
+    p.add_argument("--scheduler", default="",
+                   choices=[""] + scheduler_names(),
+                   help="capability-aware device scheduler (repro.fleet); "
+                        "empty leaves batch fractions to the policy")
+    p.add_argument("--metrics", default="",
+                   help="write the structured fleet metrics stream (JSONL) "
+                        "to this path; summarize with tools/fleet_report.py")
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
@@ -149,13 +164,22 @@ def main(argv=None):
     mesh = jax.make_mesh((n, 1), ("data", "model"))
     rules = rules_from_args(args)
     codec = codec_from_args(args)
+    fleet = None
+    if args.lease_ttl > 0 or args.scheduler:
+        ttl = args.lease_ttl if args.lease_ttl > 0 else 3.0 * args.gamma_rounds
+        period = args.heartbeat_period if args.heartbeat_period > 0 else ttl / 3.0
+        fleet = FleetConfig(
+            lease=LeaseConfig(ttl=ttl, heartbeat_period=period),
+            scheduler=args.scheduler or None,
+        )
+    metrics = JsonlSink(args.metrics) if args.metrics else None
     backend, engine, policy = make_trainer(
         cfg, mesh, tau=args.tau, seq=args.seq, batch=args.batch,
         local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
         gamma_rounds=args.gamma_rounds, search_every=args.search_every,
         update_rules=rules, codec=codec, n_shards=args.ps_shards,
         search_mode=args.search_mode, drift_threshold=args.drift_threshold,
-        reward_model=args.reward_model,
+        reward_model=args.reward_model, fleet=fleet, metrics=metrics,
     )
     lr_rule, cr_rule = backend.rules
     print(f"# arch={cfg.name} params={cfg.total_params()/1e6:.1f}M "
@@ -183,6 +207,9 @@ def main(argv=None):
         save_train_state(args.checkpoint, backend.state, step=args.steps,
                          extra={"arch": cfg.name})
         print(f"# saved {args.checkpoint}")
+    if metrics is not None:
+        metrics.close()
+        print(f"# metrics stream -> {args.metrics}")
 
 
 if __name__ == "__main__":

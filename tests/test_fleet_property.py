@@ -1,0 +1,87 @@
+"""Property tests for the fleet metrics registry: every record kind must
+round-trip losslessly through ``to_dict`` → JSON → ``from_dict`` (the
+persistence contract ``MetricsLog.to_jsonl``/``load_jsonl`` rely on),
+and the schedulers must produce a valid assignment for any capability
+table. Skipped (not failed) in bare containers without hypothesis."""
+
+import json
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.fleet import (
+    AssignRecord,
+    CapabilityRecord,
+    ChurnRecord,
+    CommitRecord,
+    DriftRecord,
+    EvalRecord,
+    LeaseRecord,
+    SearchRecord,
+    from_dict,
+    get_scheduler,
+    scheduler_names,
+    to_dict,
+)
+
+ts = st.floats(min_value=0.0, max_value=1e12, allow_nan=False)
+wid = st.integers(min_value=0, max_value=10**9)
+nbytes = st.floats(min_value=0.0, max_value=1e15, allow_nan=False)
+loss = st.floats(allow_nan=False, allow_infinity=False)
+frac = st.floats(min_value=0.0, max_value=1.0, allow_nan=False)
+
+records = st.one_of(
+    st.builds(CommitRecord, t=ts, worker=wid, latency=ts, push_bytes=nbytes,
+              pull_bytes=nbytes, stale_shards=st.integers(0, 4096),
+              n_shards=st.integers(1, 4096)),
+    st.builds(EvalRecord, t=ts, loss=loss),
+    st.builds(SearchRecord, t=ts, chosen=st.integers(1, 10**6),
+              windows=st.integers(0, 100), restarts=st.integers(0, 100),
+              aborted=st.booleans()),
+    st.builds(DriftRecord, t=ts, cause=st.text(max_size=40)),
+    st.builds(LeaseRecord, t=ts, worker=wid,
+              event=st.sampled_from(["granted", "stalled", "expired",
+                                     "rejoined"])),
+    st.builds(ChurnRecord, t=ts, worker=wid,
+              event=st.sampled_from(["join", "leave"]),
+              discovered=st.booleans()),
+    st.builds(CapabilityRecord, t=ts, worker=wid,
+              v=st.floats(min_value=0.0, max_value=1e9, allow_nan=False)),
+    st.builds(AssignRecord, t=ts, worker=wid, fraction=frac,
+              data_share=frac),
+)
+
+
+@given(rec=records)
+@settings(max_examples=200, deadline=None)
+def test_any_record_roundtrips_through_json(rec):
+    wire = json.dumps(to_dict(rec))
+    back = from_dict(json.loads(wire))
+    assert back == rec
+    assert back.kind == rec.kind
+    assert type(back) is type(rec)
+
+
+@given(stream=st.lists(records, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_any_stream_roundtrips_through_jsonl_lines(stream):
+    """Line-oriented framing (what JsonlSink/MetricsLog.to_jsonl write):
+    order and content survive, record by record."""
+    lines = [json.dumps(to_dict(r)) for r in stream]
+    assert [from_dict(json.loads(line)) for line in lines] == stream
+
+
+@given(table=st.dictionaries(
+    wid, st.floats(min_value=0.0, max_value=1e9, allow_nan=False),
+    min_size=1, max_size=64),
+    name=st.sampled_from(scheduler_names()))
+@settings(max_examples=100, deadline=None)
+def test_any_capability_table_yields_a_valid_assignment(table, name):
+    asg = get_scheduler(name).assign(table)
+    assert set(asg.fractions) == set(table)
+    assert all(math.isfinite(f) and f >= 0.0 for f in asg.fractions.values())
+    assert sum(asg.fractions.values()) == pytest.approx(1.0)
+    assert sum(asg.data_shares.values()) == pytest.approx(1.0)

@@ -1,0 +1,117 @@
+"""Summarize a fleet metrics stream (JSONL) into a per-run report.
+
+Usage::
+
+    PYTHONPATH=src python tools/fleet_report.py run_metrics.jsonl
+
+The stream is whatever a run's sink captured (``--metrics`` on
+``repro.launch.train``, or ``MetricsLog.to_jsonl`` from a simulator run):
+typed records from ``repro.fleet.metrics``. The report shows the fleet
+story of the run — per-worker commit traffic and latency, shard
+staleness, lease/churn life cycles, searches and drift triggers — without
+re-running anything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import defaultdict
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+    return xs[i]
+
+
+def summarize(records) -> dict:
+    """Aggregate a record stream into plain dicts (testable core)."""
+    per_worker: dict[int, dict] = defaultdict(
+        lambda: {"commits": 0, "latencies": [], "push_bytes": 0.0,
+                 "pull_bytes": 0.0, "stale_shards": 0, "n_shards": 0})
+    out = {
+        "t_end": 0.0, "evals": 0, "final_loss": None,
+        "searches": 0, "drift_triggers": 0,
+        "lease": defaultdict(int), "churn": defaultdict(int),
+        "discovered": 0, "assigns": 0, "capability_reports": 0,
+        "per_worker": per_worker,
+    }
+    for r in records:
+        out["t_end"] = max(out["t_end"], r.t)
+        k = r.kind
+        if k == "commit":
+            w = per_worker[r.worker]
+            w["commits"] += 1
+            w["latencies"].append(r.latency)
+            w["push_bytes"] += r.push_bytes
+            w["pull_bytes"] += r.pull_bytes
+            w["stale_shards"] += r.stale_shards
+            w["n_shards"] = max(w["n_shards"], r.n_shards)
+        elif k == "eval":
+            out["evals"] += 1
+            out["final_loss"] = r.loss
+        elif k == "search":
+            out["searches"] += 1
+        elif k == "drift":
+            out["drift_triggers"] += 1
+        elif k == "lease":
+            out["lease"][r.event] += 1
+        elif k == "churn":
+            out["churn"][r.event] += 1
+            out["discovered"] += int(r.discovered)
+        elif k == "assign":
+            out["assigns"] += 1
+        elif k == "capability":
+            out["capability_reports"] += 1
+    return out
+
+
+def format_report(s: dict) -> str:
+    lines = []
+    lines.append(f"fleet report — {s['t_end']:.1f} virtual seconds, "
+                 f"{len(s['per_worker'])} committing workers")
+    if s["final_loss"] is not None:
+        lines.append(f"  evals: {s['evals']}  final loss {s['final_loss']:.4f}")
+    lines.append(f"  searches: {s['searches']}  drift triggers: "
+                 f"{s['drift_triggers']}")
+    if s["lease"]:
+        ev = ", ".join(f"{k}={v}" for k, v in sorted(s["lease"].items()))
+        lines.append(f"  lease: {ev}")
+    if s["churn"]:
+        ev = ", ".join(f"{k}={v}" for k, v in sorted(s["churn"].items()))
+        lines.append(f"  churn: {ev} (discovered={s['discovered']})")
+    if s["assigns"]:
+        lines.append(f"  scheduler assignments: {s['assigns']} "
+                     f"(capability reports: {s['capability_reports']})")
+    if s["per_worker"]:
+        lines.append("  worker  commits  mean_lat  p95_lat    MB_up  MB_down"
+                     "  stale_ratio")
+        for wid in sorted(s["per_worker"]):
+            w = s["per_worker"][wid]
+            lats = w["latencies"]
+            mean = sum(lats) / len(lats) if lats else 0.0
+            stale = (w["stale_shards"] / (w["commits"] * w["n_shards"])
+                     if w["commits"] and w["n_shards"] else 0.0)
+            lines.append(
+                f"  {wid:6d}  {w['commits']:7d}  {mean:8.2f}  "
+                f"{_percentile(lats, 0.95):7.2f}  {w['push_bytes']/1e6:7.2f}"
+                f"  {w['pull_bytes']/1e6:7.2f}  {stale:11.3f}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("stream", help="metrics JSONL file")
+    args = p.parse_args(argv)
+    try:
+        from repro.fleet import load_jsonl
+    except ImportError:
+        sys.exit("run with PYTHONPATH=src (needs repro.fleet)")
+    print(format_report(summarize(load_jsonl(args.stream))))
+
+
+if __name__ == "__main__":
+    main()
