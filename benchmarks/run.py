@@ -30,6 +30,7 @@ MODULES = [
     "bench_shards",
     "bench_control",
     "bench_fleet",
+    "bench_serve",
     "roofline_table",
 ]
 

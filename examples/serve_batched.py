@@ -1,6 +1,8 @@
-"""Batched serving example: prefill + greedy decode with per-family
-caches (KV ring buffers for windowed attention, O(1) recurrent state for
-SSM/hybrid archs). Uses the reduced configs so every family runs on CPU.
+"""Batched serving example: per-family caches (KV ring buffers for
+windowed attention, O(1) recurrent state for SSM/hybrid archs) in both
+launcher modes — the fixed-batch one-shot demo, then the continuous-
+batching engine on an open-loop Poisson trace. Uses the reduced configs
+so every family runs on CPU.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -10,9 +12,14 @@ from repro.launch import serve
 
 def main():
     for arch in ["rwkv6-3b", "recurrentgemma-9b", "granite-3-8b"]:
-        print(f"\n=== {arch} (reduced config) ===")
+        print(f"\n=== {arch} (reduced config, one-shot) ===")
         serve.main(["--arch", arch, "--smoke", "--batch", "4",
                     "--prompt-len", "32", "--new-tokens", "12"])
+
+    print("\n=== rwkv6-3b (continuous batching, poisson trace) ===")
+    serve.main(["--arch", "rwkv6-3b", "--smoke", "--trace", "poisson",
+                "--requests", "16", "--rate", "20", "--slots", "4",
+                "--scheduler", "deadline", "--slo-ms", "800"])
 
 
 if __name__ == "__main__":

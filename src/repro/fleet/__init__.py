@@ -29,7 +29,9 @@ from .metrics import (
     MetricRecord,
     MetricsLog,
     MetricsSink,
+    PullRecord,
     SearchRecord,
+    ServeRecord,
     from_dict,
     load_jsonl,
     record_kinds,
@@ -59,6 +61,7 @@ __all__ = [
     # metrics
     "MetricRecord", "CommitRecord", "EvalRecord", "SearchRecord",
     "DriftRecord", "LeaseRecord", "ChurnRecord", "CapabilityRecord",
-    "AssignRecord", "MetricsSink", "MetricsLog", "JsonlSink",
+    "AssignRecord", "ServeRecord", "PullRecord",
+    "MetricsSink", "MetricsLog", "JsonlSink",
     "record_kinds", "to_dict", "from_dict", "load_jsonl",
 ]

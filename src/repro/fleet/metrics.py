@@ -28,7 +28,7 @@ from typing import Iterable, Protocol, runtime_checkable
 __all__ = [
     "MetricRecord", "CommitRecord", "EvalRecord", "SearchRecord",
     "DriftRecord", "LeaseRecord", "ChurnRecord", "CapabilityRecord",
-    "AssignRecord",
+    "AssignRecord", "ServeRecord", "PullRecord",
     "MetricsSink", "MetricsLog", "JsonlSink",
     "record_kinds", "to_dict", "from_dict", "load_jsonl",
 ]
@@ -139,6 +139,37 @@ class AssignRecord(MetricRecord):
     worker: int
     fraction: float
     data_share: float
+
+
+@_register("serve")
+@dataclasses.dataclass(frozen=True)
+class ServeRecord(MetricRecord):
+    """One inference request completed (``repro.serve`` engine), stamped
+    at completion. Latencies decompose the request's life:
+    queue (arrival → slot admission) + prefill + decode = total.
+    ``version`` is the replica's model version at completion (total shard
+    commits reflected; 0 when not tracking training)."""
+
+    req: int
+    queue: float
+    prefill: float
+    decode: float
+    total: float
+    tokens: int
+    slo: float
+    slo_ok: bool
+    version: int
+
+
+@_register("pull")
+@dataclasses.dataclass(frozen=True)
+class PullRecord(MetricRecord):
+    """A serving replica pulled version-stale shards from the training PS
+    between decode steps (``repro.serve.sync``)."""
+
+    stale_shards: int
+    n_shards: int
+    nbytes: float
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,9 @@ __all__ = [
     "lm_prefill",
     "lm_decode_step",
     "init_decode_caches",
+    "cache_slot_insert",
+    "cache_slot_extract",
+    "cache_slot_clear",
 ]
 
 ATTN_KINDS = ("global", "local", "dense", "moe")
@@ -348,6 +351,38 @@ def init_decode_caches(cfg: ModelConfig, batch: int, cache_len: int):
     return caches
 
 
+# ---------------------------------------------------------------------------
+# cache slot surgery (continuous-batching serving, repro.serve)
+#
+# Every stacked cache leaf carries the slot/batch dim at axis 1:
+# attention k/v (reps, B, C, Hkv, hd), pos (reps, B), recurrent h
+# (reps, B, w), rwkv wkv (reps, B, H, N, N), ... — so a serving slot pool
+# can splice one request's state in or out with a single tree map. The
+# source tree must have been built over the same cfg and cache capacity
+# (lm_prefill with reserve chosen so prompt_len + reserve == pool cap).
+# ---------------------------------------------------------------------------
+
+def cache_slot_insert(caches, slot: int, src_caches, src_slot: int = 0):
+    """Pool caches with ``slot`` replaced by ``src_caches[src_slot]``.
+
+    Overwrites every leaf of the slot (attention K/V + pos, recurrent /
+    rwkv states), so whatever a previous occupant left behind is gone —
+    eviction needs no separate clear before the next insert."""
+    return jax.tree.map(
+        lambda dst, s: dst.at[:, slot].set(s[:, src_slot]), caches, src_caches
+    )
+
+
+def cache_slot_extract(caches, slot: int):
+    """One slot's state as a batch-1 cache tree (decode-ready)."""
+    return jax.tree.map(lambda x: x[:, slot : slot + 1], caches)
+
+
+def cache_slot_clear(caches, slot: int):
+    """Zero one slot (free-slot hygiene; inserts overwrite regardless)."""
+    return jax.tree.map(lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])), caches)
+
+
 def lm_decode_step(cfg: ModelConfig, params, batch, caches, *, rules=None):
     """One decode step. batch: {"tokens": (B, 1)}; caches from
     init_decode_caches / lm_prefill. Returns (logits (B, 1, V), caches)."""
@@ -356,8 +391,10 @@ def lm_decode_step(cfg: ModelConfig, params, batch, caches, *, rules=None):
     tokens = batch["tokens"]
     x = params["embed"].astype(dt)[tokens]  # (B,1,d)
     if cfg.pos_variant == "learned":
-        pos0 = _first_pos(caches)
-        x = x + jax.lax.dynamic_index_in_dim(params["pos_embed"], pos0, keepdims=False).astype(dt)[None, None]
+        # per-row positions: slots in a continuous-batching pool sit at
+        # different sequence offsets, so each row gathers its own embedding
+        pos_b = _slot_positions(caches, tokens.shape[0])
+        x = x + params["pos_embed"].astype(dt)[pos_b][:, None]
 
     new_caches = []
     for gi, (pattern, reps) in enumerate(cfg.layer_groups):
@@ -384,12 +421,14 @@ def lm_decode_step(cfg: ModelConfig, params, batch, caches, *, rules=None):
     return logits, new_caches
 
 
-def _first_pos(caches):
+def _slot_positions(caches, batch: int):
+    """Per-row token counts (B,) from the first attention cache's ``pos``;
+    zeros for position-free (pure recurrent) stacks."""
     leaf = caches[0]
     for key in leaf:
         if "pos" in leaf[key]:
-            return leaf[key]["pos"][0, 0]
-    return jnp.zeros((), jnp.int32)
+            return leaf[key]["pos"][0]
+    return jnp.zeros((batch,), jnp.int32)
 
 
 def _block_decode(cfg, kind, p, x, cache, rules):

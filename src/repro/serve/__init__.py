@@ -1,0 +1,57 @@
+"""SLO-aware serving subsystem (DESIGN.md §14).
+
+The fourth registry-idiom subsystem (after ``repro.ps``,
+``repro.transport``, ``repro.fleet``): serve the models the system
+trains, from the same parameter-server state it trains them in.
+
+  * ``trace`` — open-loop request arrivals (poisson, bursty) with
+    per-request SLO deadlines, seeded and deterministic;
+  * ``cache`` — per-family decode-slot pools: O(capacity) ring-buffer
+    K/V for attention kinds, O(1) recurrent state for rwkv6/rglru;
+  * ``engine`` — continuous batching over a bounded slot pool
+    (per-step eviction + immediate backfill, prefill/decode
+    interleaving) under ``fcfs`` or ``deadline``/EDF admission, with a
+    deterministic virtual-clock cost model;
+  * ``sync`` — version-stale shard pulls from a live training PS
+    (``repro.ps.AdspState`` + ``ShardPlan``) between decode steps.
+
+Per-request records flow through ``repro.fleet.metrics``
+(``ServeRecord``/``PullRecord``) into the same JSONL stream
+``tools/fleet_report.py`` summarizes.
+"""
+
+from .cache import CachePool, family_of
+from .engine import (
+    CostModel,
+    ServeConfig,
+    ServeEngine,
+    ServeReport,
+    get_scheduler,
+    register_scheduler,
+    scheduler_names,
+    serve_trace,
+    solo_decode,
+)
+from .sync import ReplicaSync, ShardedTrainer, pull_stale, shard_versions_of
+from .trace import (
+    Request,
+    TraceConfig,
+    get_trace,
+    make_trace,
+    register_trace,
+    trace_names,
+)
+
+__all__ = [
+    # trace
+    "Request", "TraceConfig", "make_trace", "get_trace",
+    "register_trace", "trace_names",
+    # cache
+    "CachePool", "family_of",
+    # engine
+    "ServeEngine", "ServeConfig", "ServeReport", "CostModel",
+    "serve_trace", "solo_decode",
+    "register_scheduler", "get_scheduler", "scheduler_names",
+    # sync
+    "ReplicaSync", "ShardedTrainer", "pull_stale", "shard_versions_of",
+]

@@ -1,0 +1,132 @@
+"""Per-family decode-cache slot pools (DESIGN.md §14).
+
+A ``CachePool`` owns the stacked decode caches for a fixed number of
+serving slots and the host-side occupancy bookkeeping. The state layout
+is the model's own (``models.lm.init_decode_caches``) — every leaf
+carries the slot dim at axis 1 — so slot insert/evict are the tree-map
+hooks ``models.lm.cache_slot_insert``/``cache_slot_clear`` and the decode
+step stays one compiled call over the whole pool.
+
+What differs per model family is the *cost* of a slot, not the
+mechanics:
+
+  * attention kinds (global/local/dense/moe) cache K/V per token —
+    O(capacity) bytes per slot, ring-buffered when the window is finite
+    (capacity = window), dense otherwise;
+  * rwkv6 / rglru carry O(1) recurrent state (wkv matrices, LRU
+    hidden + conv tail) — slot reuse is a constant-size state swap
+    regardless of how long the previous occupant ran, never a
+    re-prefill.
+
+``slot_nbytes()`` reports that split so reports/benchmarks can show the
+per-family serving memory story.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.lm import ATTN_KINDS
+
+__all__ = ["CachePool", "family_of"]
+
+# leaves that scale with cache capacity (per-token attention state)
+_KV_LEAVES = ("k", "v", "cross_k", "cross_v")
+
+
+def family_of(cfg: ModelConfig) -> str:
+    """Cache family: 'attention' | 'rwkv6' | 'rglru' | 'hybrid'."""
+    kinds = set()
+    for pat, _ in cfg.layer_groups:
+        kinds.update(pat)
+    has_attn = bool(kinds & set(ATTN_KINDS))
+    has_rec = "recurrent" in kinds
+    has_rwkv = "rwkv" in kinds
+    if sum((has_attn, has_rec, has_rwkv)) > 1:
+        return "hybrid"
+    if has_rwkv:
+        return "rwkv6"
+    if has_rec:
+        return "rglru"
+    return "attention"
+
+
+class CachePool:
+    """Fixed-size pool of decode slots for one model.
+
+    ``capacity`` is the attention cache length (prompt + generated
+    tokens a slot must hold); recurrent families ignore it beyond
+    allocation. Occupancy is host-side: ``slot_of``/``request_of`` map
+    request-id ↔ slot, ``free`` is the LIFO free list (deterministic
+    slot choice ⇒ reproducible runs).
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, capacity: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.family = family_of(cfg)
+        self.caches = lm.init_decode_caches(cfg, n_slots, capacity)
+        self.free: list[int] = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
+        self.request_of: dict[int, int] = {}  # slot -> rid
+        self.slot_of: dict[int, int] = {}  # rid -> slot
+        self.inserts = 0
+        self.evictions = 0
+
+    # ----------------------------------------------------------- occupancy
+    @property
+    def n_active(self) -> int:
+        return len(self.request_of)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def active_slots(self) -> list[int]:
+        return sorted(self.request_of)
+
+    # ------------------------------------------------------- insert / evict
+    def insert(self, rid: int, src_caches) -> int:
+        """Claim a free slot for ``rid`` and splice in its prefilled
+        state (batch-1 tree from ``lm_prefill`` at matching capacity).
+        Returns the slot index."""
+        if not self.free:
+            raise RuntimeError("no free slot; evict before inserting")
+        if rid in self.slot_of:
+            raise ValueError(f"request {rid} already holds slot {self.slot_of[rid]}")
+        slot = self.free.pop()
+        self.caches = lm.cache_slot_insert(self.caches, slot, src_caches)
+        self.request_of[slot] = rid
+        self.slot_of[rid] = slot
+        self.inserts += 1
+        return slot
+
+    def evict(self, rid: int) -> int:
+        """Release ``rid``'s slot. The state is left in place — the next
+        insert overwrites every leaf, so no clear pass is needed."""
+        slot = self.slot_of.pop(rid)
+        del self.request_of[slot]
+        self.free.append(slot)
+        self.evictions += 1
+        return slot
+
+    # ------------------------------------------------------------- metrics
+    def slot_nbytes(self) -> dict[str, int]:
+        """Bytes of cache state per slot, split into capacity-scaling
+        attention K/V ('kv') and constant-size recurrent state
+        ('recurrent')."""
+        kv = rec = 0
+        for group in self.caches:
+            for block in group.values():
+                for name, leaf in block.items():
+                    per_slot = int(np.prod(leaf.shape) // leaf.shape[1]
+                                   * np.dtype(leaf.dtype).itemsize)
+                    if name in _KV_LEAVES:
+                        kv += per_slot
+                    else:
+                        rec += per_slot
+        return {"kv": kv, "recurrent": rec}

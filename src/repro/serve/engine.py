@@ -1,0 +1,425 @@
+"""Continuous-batching serving engine (DESIGN.md §14).
+
+The engine turns the one-shot prefill+decode demo into a request-level
+server: an open-loop trace (``serve.trace``) feeds an admission queue, a
+bounded pool of decode slots (``serve.cache``) runs **one compiled
+decode step over the whole pool per tick**, and slots are evicted the
+step their request finishes (EOS or max-tokens) and immediately
+backfilled from the queue — prefill interleaves with decode, so a free
+slot never waits for the rest of the batch. The contrast baseline,
+static rebatching (``mode="static"``), admits a full batch only when the
+pool is empty and holds every slot until the whole batch drains — same
+hardware, same cost model, same per-request token streams.
+
+Two clocks, deliberately separate:
+
+  * tokens come from the *real* model (``lm_prefill``/``lm_decode_step``
+    on the actual params) — a request served from a pool slot is
+    bit-identical to the same request decoded alone (enforced per model
+    family by tests/test_serve_parity.py);
+  * *time* is virtual, from a deterministic ``CostModel`` (prefill cost
+    affine in prompt length, decode cost affine in pool width), so
+    latency distributions, SLO attainment, and scheduler comparisons are
+    reproducible on any host and "equal hardware" between policies means
+    exactly equal step costs.
+
+Admission order is a registered scheduler: ``fcfs`` (arrival order) or
+``deadline`` (earliest deadline first — EDF spends slack where it
+exists). Between decode steps the engine can poll a ``ReplicaSync``
+(``serve.sync``) so the served model tracks a live training PS via
+version-stale shard pulls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import lm_tokens
+from repro.fleet.metrics import PullRecord, ServeRecord
+from repro.models import lm
+
+from .cache import CachePool
+from .sync import ReplicaSync
+from .trace import Request
+
+__all__ = [
+    "CostModel", "ServeConfig", "ServeReport", "ServeEngine", "serve_trace",
+    "solo_decode",
+    "register_scheduler", "get_scheduler", "scheduler_names",
+]
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# virtual step costs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Virtual seconds per engine operation. Affine models: prefill in
+    prompt tokens, decode in pool width (every slot is computed whether
+    occupied or not — that is precisely static batching's waste)."""
+
+    prefill_base: float = 2e-3
+    prefill_per_token: float = 2.5e-4
+    decode_base: float = 4e-3
+    decode_per_slot: float = 1e-3
+
+    def prefill(self, prompt_len: int) -> float:
+        return self.prefill_base + self.prefill_per_token * prompt_len
+
+    def decode(self, n_slots: int) -> float:
+        return self.decode_base + self.decode_per_slot * n_slots
+
+
+# ---------------------------------------------------------------------------
+# admission schedulers (registry idiom, as repro.ps / repro.transport)
+# ---------------------------------------------------------------------------
+
+_SCHEDULERS: dict[str, Callable[[], "AdmissionScheduler"]] = {}
+
+
+def register_scheduler(name: str):
+    def deco(cls):
+        _SCHEDULERS[name] = cls
+        return cls
+    return deco
+
+
+def get_scheduler(name: str) -> "AdmissionScheduler":
+    try:
+        return _SCHEDULERS[name]()
+    except KeyError:
+        raise KeyError(f"unknown scheduler {name!r}; known: {scheduler_names()}")
+
+
+def scheduler_names() -> list[str]:
+    return sorted(_SCHEDULERS)
+
+
+class AdmissionScheduler:
+    """Picks which queued request gets the next free slot."""
+
+    def pick(self, queue: list[Request], t: float) -> int:
+        raise NotImplementedError
+
+
+@register_scheduler("fcfs")
+class FCFSScheduler(AdmissionScheduler):
+    def pick(self, queue: list[Request], t: float) -> int:
+        return min(range(len(queue)),
+                   key=lambda i: (queue[i].arrival, queue[i].rid))
+
+
+@register_scheduler("deadline")
+class DeadlineScheduler(AdmissionScheduler):
+    """Earliest deadline first (ties to arrival, then rid)."""
+
+    def pick(self, queue: list[Request], t: float) -> int:
+        return min(range(len(queue)),
+                   key=lambda i: (queue[i].deadline, queue[i].arrival, queue[i].rid))
+
+
+# ---------------------------------------------------------------------------
+# engine config / report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """slots: decode-slot pool width. mode: 'continuous' (per-step
+    evict + backfill) or 'static' (rebatch only when the pool drains).
+    sync_every: decode steps between PS polls (0 = never). capacity:
+    attention cache length per slot; 0 derives the minimum from the
+    trace (max prompt + max new tokens)."""
+
+    slots: int = 4
+    scheduler: str = "fcfs"
+    mode: str = "continuous"
+    eos_id: int | None = None
+    sync_every: int = 0
+    capacity: int = 0
+    seed: int = 0
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if self.mode not in ("continuous", "static"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Everything a run produced: the per-request records (also streamed
+    to the metrics sink as they happen) plus aggregates."""
+
+    records: list[ServeRecord]
+    t_end: float
+    decode_steps: int
+    tokens_by_rid: dict[int, list[int]]
+    inserts: int
+    evictions: int
+    sync_polls: int = 0
+    sync_pulls: int = 0
+    pull_bytes: int = 0
+    full_pull_bytes: int = 0  # dense re-pull at the same pull points
+
+    # ------------------------------------------------------------ derived
+    def _vals(self, field: str) -> list[float]:
+        return [getattr(r, field) for r in self.records]
+
+    @staticmethod
+    def _pct(xs: list[float], q: float) -> float:
+        if not xs:
+            return 0.0
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
+
+    def percentile(self, field: str, q: float) -> float:
+        return self._pct(self._vals(field), q)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.tokens for r in self.records)
+
+    @property
+    def slo_attainment(self) -> float:
+        if not self.records:
+            return 0.0
+        return sum(r.slo_ok for r in self.records) / len(self.records)
+
+    @property
+    def goodput(self) -> float:
+        """SLO-attained requests per virtual second."""
+        if self.t_end <= 0:
+            return 0.0
+        return sum(r.slo_ok for r in self.records) / self.t_end
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / self.t_end if self.t_end > 0 else 0.0
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    t_admit: float
+    prefill_s: float
+    gen: int
+    tokens: list[int]
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """One serving replica: model + slot pool + admission queue.
+
+    ``sync`` (a ``ReplicaSync``) makes the replica track a live training
+    PS; ``tick`` is called as ``tick(engine, t)`` once per decode step
+    *before* the sync poll — benchmarks use it to advance a co-running
+    trainer to the serving clock and to probe serving-side loss.
+    """
+
+    def __init__(self, cfg, params: Pytree, serve_cfg: ServeConfig,
+                 trace: list[Request], *, metrics=None,
+                 sync: ReplicaSync | None = None,
+                 tick: Callable[["ServeEngine", float], None] | None = None):
+        if cfg.frontend or cfg.encoder is not None:
+            raise ValueError(
+                "the serve engine drives token-only decoders; "
+                f"{cfg.name} needs a modality frontend at prefill"
+            )
+        if serve_cfg.sync_every and sync is None:
+            raise ValueError("sync_every > 0 needs a ReplicaSync")
+        self.cfg = cfg
+        self.params = params
+        self.serve_cfg = serve_cfg
+        self.trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        self.metrics = metrics
+        self.sync = sync
+        self.tick = tick
+        need = max((r.prompt_len + r.max_new for r in self.trace), default=2)
+        cap = serve_cfg.capacity or need
+        if cap < need:
+            raise ValueError(f"capacity {cap} < trace requirement {need}")
+        self.pool = CachePool(cfg, serve_cfg.slots, cap)
+        self.scheduler = get_scheduler(serve_cfg.scheduler)
+        self._decode = jax.jit(
+            lambda p, toks, c: lm.lm_decode_step(cfg, p, {"tokens": toks}, c)
+        )
+        self._prefill_fns: dict[int, Callable] = {}
+        self._last_tok = np.zeros((serve_cfg.slots,), np.int32)
+        self._slots: dict[int, _Active] = {}
+
+    # ------------------------------------------------------------ helpers
+    def prompt_tokens(self, req: Request) -> np.ndarray:
+        """Deterministic (1, prompt_len) prompt for a request: a pure
+        function of (engine seed, rid) — test harnesses rebuild it to
+        replay a request solo."""
+        toks = lm_tokens(self.serve_cfg.seed, req.rid, 1,
+                         req.prompt_len, self.cfg.vocab_size)
+        return toks[:, : req.prompt_len]
+
+    def _prefill(self, req: Request):
+        reserve = self.pool.capacity - req.prompt_len
+        fn = self._prefill_fns.get(req.prompt_len)
+        if fn is None:
+            fn = jax.jit(
+                lambda p, b, _r=reserve: lm.lm_prefill(self.cfg, p, b, reserve=_r)
+            )
+            self._prefill_fns[req.prompt_len] = fn
+        batch = {"tokens": jnp.asarray(self.prompt_tokens(req), jnp.int32)}
+        logits, caches = fn(self.params, batch)
+        first = int(np.argmax(np.asarray(logits[0])))
+        return first, caches
+
+    def _version(self) -> int:
+        return self.sync.version if self.sync is not None else 0
+
+    def _complete(self, st: _Active, t: float, *, prefill_only: bool = False):
+        r = st.req
+        t_first = st.t_admit + st.prefill_s
+        rec = ServeRecord(
+            t=t, req=r.rid,
+            queue=st.t_admit - r.arrival,
+            prefill=st.prefill_s,
+            decode=0.0 if prefill_only else t - t_first,
+            total=t - r.arrival,
+            tokens=st.gen, slo=r.slo,
+            slo_ok=bool(t <= r.deadline + 1e-12),
+            version=self._version(),
+        )
+        self._done.append(rec)
+        self._tokens_by_rid[r.rid] = st.tokens
+        if self.metrics is not None:
+            self.metrics.record(rec)
+
+    # -------------------------------------------------------------- run
+    def run(self) -> ServeReport:
+        cfg = self.serve_cfg
+        cost = cfg.cost
+        self._done: list[ServeRecord] = []
+        self._tokens_by_rid: dict[int, list[int]] = {}
+        queue: list[Request] = []
+        t, i, n = 0.0, 0, len(self.trace)
+        decode_steps = 0
+        filling = False  # static mode: batch-formation phase
+
+        while i < n or queue or self._slots:
+            # open-loop admission: everything that has arrived by now
+            while i < n and self.trace[i].arrival <= t + 1e-12:
+                queue.append(self.trace[i])
+                i += 1
+
+            if cfg.mode == "static" and not self._slots and queue:
+                filling = True
+            can_admit = (self.pool.n_free > 0 and
+                         (cfg.mode == "continuous" or filling))
+
+            if queue and can_admit:
+                req = queue.pop(self.scheduler.pick(queue, t))
+                t_admit = t
+                first, caches = self._prefill(req)
+                pf = cost.prefill(req.prompt_len)
+                t += pf
+                st = _Active(req=req, t_admit=t_admit, prefill_s=pf,
+                             gen=1, tokens=[first])
+                done_now = (req.max_new <= 1 or
+                            (cfg.eos_id is not None and first == cfg.eos_id))
+                if done_now:
+                    self._complete(st, t, prefill_only=True)
+                else:
+                    slot = self.pool.insert(req.rid, caches)
+                    self._last_tok[slot] = first
+                    self._slots[slot] = st
+                continue  # re-admit arrivals that landed during prefill
+            filling = False
+
+            if not self._slots:
+                if i < n:  # idle: jump to the next arrival
+                    t = max(t, self.trace[i].arrival)
+                    continue
+                break  # queue empty, nothing active, trace exhausted
+
+            # one decode step over the whole pool
+            toks = jnp.asarray(self._last_tok[:, None])
+            logits, self.pool.caches = self._decode(
+                self.params, toks, self.pool.caches
+            )
+            t += cost.decode(cfg.slots)
+            decode_steps += 1
+
+            if self.tick is not None:
+                self.tick(self, t)
+            if (self.sync is not None and cfg.sync_every
+                    and decode_steps % cfg.sync_every == 0):
+                self.params, n_stale, nbytes, secs = self.sync.poll(self.params)
+                t += secs
+                if n_stale and self.metrics is not None:
+                    self.metrics.record(PullRecord(
+                        t=t, stale_shards=n_stale,
+                        n_shards=self.sync.plan.n_shards, nbytes=float(nbytes),
+                    ))
+
+            next_tok = np.argmax(np.asarray(logits[:, 0]), axis=-1)
+            for slot in sorted(self._slots):
+                st = self._slots[slot]
+                tok = int(next_tok[slot])
+                st.tokens.append(tok)
+                st.gen += 1
+                self._last_tok[slot] = tok
+                if (st.gen >= st.req.max_new or
+                        (cfg.eos_id is not None and tok == cfg.eos_id)):
+                    self._complete(st, t)
+                    self.pool.evict(st.req.rid)
+                    del self._slots[slot]
+
+        report = ServeReport(
+            records=self._done, t_end=t, decode_steps=decode_steps,
+            tokens_by_rid=self._tokens_by_rid,
+            inserts=self.pool.inserts, evictions=self.pool.evictions,
+        )
+        if self.sync is not None:
+            report.sync_polls = self.sync.polls
+            report.sync_pulls = self.sync.pulls
+            report.pull_bytes = self.sync.bytes_pulled
+            report.full_pull_bytes = self.sync.full_bytes_equiv
+        return report
+
+
+def serve_trace(cfg, params: Pytree, serve_cfg: ServeConfig,
+                trace: list[Request], **kw) -> ServeReport:
+    """Convenience: build an engine and run the trace to completion."""
+    return ServeEngine(cfg, params, serve_cfg, trace, **kw).run()
+
+
+def solo_decode(cfg, params: Pytree, prompt: np.ndarray, max_new: int,
+                capacity: int, *, eos_id: int | None = None) -> list[int]:
+    """Reference decode of one request alone (batch 1) at the same cache
+    capacity a pool would give it — the bit-identity oracle for
+    tests/test_serve_parity.py and the degenerate one-shot path."""
+    plen = prompt.shape[1]
+    logits, caches = lm.lm_prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt, jnp.int32)},
+        reserve=capacity - plen,
+    )
+    tok = int(np.argmax(np.asarray(logits[0])))
+    out = [tok]
+    while len(out) < max_new and not (eos_id is not None and tok == eos_id):
+        lg, caches = lm.lm_decode_step(
+            cfg, params, {"tokens": jnp.asarray([[tok]], jnp.int32)}, caches
+        )
+        tok = int(np.argmax(np.asarray(lg[0, 0])))
+        out.append(tok)
+    return out

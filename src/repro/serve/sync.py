@@ -1,0 +1,229 @@
+"""Serving ↔ training synchronization (DESIGN.md §14).
+
+ADSP's premise is a global model that improves *continuously* as
+heterogeneous workers commit. A serving replica therefore has a choice:
+freeze a checkpoint (stale forever), re-pull the dense model on a timer
+(bytes scale with model size × poll rate), or track the PS the way PR 4
+taught training workers to — compare per-shard version counters and pull
+**only the stale shards**. This module implements the third option
+against a live ``repro.ps.AdspState``:
+
+  * ``shard_versions_of`` normalizes the two PS shapes: a sharded state
+    exposes ``shard_versions`` (int32[K]); the monolithic K=1 state
+    carries ``()`` and its global ``step`` acts as the single version.
+  * ``pull_stale`` is the pure pull: slice the PS params for every shard
+    whose version advanced past the replica's, merge them into the
+    serving params (``ShardPlan.slice``/``merge``, bit-exact — transport
+    reorganization, never numerics), and account the dense bytes moved.
+  * ``ReplicaSync`` wraps that into the engine-facing poller with byte /
+    pull counters and an optional link bandwidth so pull time can show
+    up in the serving clock.
+  * ``ShardedTrainer`` is a minimal co-running training simulator for
+    demos and benchmarks: AdamW on the LM loss, commits applied to the
+    PS *per shard* on a staggered schedule (PR 4's pipelined applies),
+    so at most instants only part of the model is newer — exactly the
+    regime where stale-shard pulls beat dense re-pulls.
+
+The engine polls between decode steps, never mid-step: a decode step
+always runs against one consistent params snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ps.sharding import ShardPlan
+
+__all__ = ["shard_versions_of", "pull_stale", "ReplicaSync", "ShardedTrainer"]
+
+Pytree = Any
+
+
+def shard_versions_of(state, n_shards: int) -> np.ndarray:
+    """PS-side version vector (int64[n_shards]) of an ``AdspState``-like
+    object (anything with ``.params``/``.shard_versions``/``.step``)."""
+    sv = getattr(state, "shard_versions", ())
+    if sv is None or (isinstance(sv, tuple) and sv == ()):
+        if n_shards != 1:
+            raise ValueError(
+                f"PS state is monolithic but the replica expects {n_shards} shards"
+            )
+        return np.asarray([int(state.step)], np.int64)
+    sv = np.asarray(sv, np.int64)
+    if sv.shape != (n_shards,):
+        raise ValueError(f"shard_versions has shape {sv.shape}, expected ({n_shards},)")
+    return sv
+
+
+def pull_stale(params: Pytree, state, plan: ShardPlan,
+               versions: np.ndarray) -> tuple[Pytree, list[int], int]:
+    """Refresh ``params`` from ``state`` for every version-stale shard.
+
+    Returns (new params, stale shard ids, dense bytes pulled).
+    ``versions`` is updated in place to the PS versions of the pulled
+    shards (untouched shards keep their counter)."""
+    ps_versions = shard_versions_of(state, plan.n_shards)
+    stale = [s for s in range(plan.n_shards) if ps_versions[s] > versions[s]]
+    if not stale:
+        return params, [], 0
+    nbytes = plan.shard_nbytes()
+    pulled = 0
+    for s in stale:
+        params = plan.merge(params, s, plan.slice(state.params, s))
+        versions[s] = ps_versions[s]
+        pulled += nbytes[s]
+    return params, stale, pulled
+
+
+class ReplicaSync:
+    """Engine-side poller: versioned partial pulls from a live PS.
+
+    ``source`` returns the current PS state (in-process: the trainer's
+    ``AdspState``; a real deployment would RPC the version vector first —
+    the byte accounting here already excludes the metadata probe).
+    ``bandwidth`` (bytes/s) converts pulled bytes into virtual seconds on
+    the serving clock; ``inf`` (default) makes pulls free in time but
+    still counted in bytes."""
+
+    def __init__(self, params: Pytree, source: Callable[[], Any], *,
+                 n_shards: int = 1, bandwidth: float = math.inf):
+        self.plan = ShardPlan.build(params, n_shards)
+        self.source = source
+        self.bandwidth = bandwidth
+        self.versions = np.zeros(self.plan.n_shards, np.int64)
+        self.total_nbytes = sum(self.plan.shard_nbytes())
+        self.polls = 0
+        self.pulls = 0
+        self.bytes_pulled = 0
+        self.full_bytes_equiv = 0  # dense re-pull at the same poll points
+
+    @property
+    def version(self) -> int:
+        """Monotone scalar 'model version served': total shard commits
+        reflected by the replica."""
+        return int(self.versions.sum())
+
+    def poll(self, params: Pytree) -> tuple[Pytree, int, int, float]:
+        """One sync point. Returns (params, n_stale, bytes, seconds)."""
+        self.polls += 1
+        params, stale, nbytes = pull_stale(
+            params, self.source(), self.plan, self.versions
+        )
+        if stale:
+            self.pulls += 1
+            self.bytes_pulled += nbytes
+            # a version-oblivious replica would re-ship the dense model
+            # whenever anything changed — the honest baseline
+            self.full_bytes_equiv += self.total_nbytes
+        seconds = nbytes / self.bandwidth if math.isfinite(self.bandwidth) else 0.0
+        return params, len(stale), nbytes, seconds
+
+
+@dataclasses.dataclass
+class ShardedTrainer:
+    """Minimal co-running LM trainer with pipelined per-shard PS applies.
+
+    Every ``commit_every`` virtual seconds the trainer takes
+    ``steps_per_commit`` AdamW steps on deterministic ``lm_tokens``
+    batches, then applies the resulting params to its ``AdspState``
+    shard-by-shard, staggered across the commit interval, bumping that
+    shard's version counter as PR 4's pipelined push path does. Drive it
+    with ``advance(t)`` from the serving engine's tick hook; the engine's
+    ``ReplicaSync`` sees a PS whose shards go stale at different times.
+    """
+
+    cfg: Any
+    params: Pytree
+    n_shards: int = 4
+    commit_every: float = 0.5
+    steps_per_commit: int = 1
+    lr: float = 1e-2
+    batch: int = 8
+    seq: int = 32
+    seed: int = 0
+
+    def __post_init__(self):
+        from repro.data.synthetic import lm_tokens
+        from repro.models import lm
+        from repro.optim.adamw import adamw
+        from repro.ps.state import AdspState
+
+        self.state = AdspState.create(self.params, n_shards=self.n_shards)
+        self.plan = ShardPlan.build(self.params, self.n_shards)
+        init, update = adamw(lr=self.lr, weight_decay=0.0)
+        self._opt_state = init(self.params)
+        self._grad = jax.jit(
+            lambda p, b: jax.grad(lambda q: lm.lm_loss(self.cfg, q, b))(p)
+        )
+        self._update = jax.jit(update)
+        self._loss = jax.jit(lambda p, b: lm.lm_loss(self.cfg, p, b))
+        self._lm_tokens = lm_tokens
+        self._train_params = self.params  # trainer-side latest full model
+        self._pending: list[tuple[float, int]] = []  # (t_apply, shard)
+        self._pending_params: Pytree | None = None
+        self._next_commit = self.commit_every
+        self._step_idx = 0
+        self.commits = 0
+        self.shard_applies = 0
+
+    # ------------------------------------------------------------ training
+    def _train_batch(self):
+        import jax.numpy as jnp
+
+        toks = self._lm_tokens(self.seed, 1000 + self._step_idx, self.batch,
+                               self.seq, self.cfg.vocab_size)[:, :-1]
+        self._step_idx += 1
+        return {"tokens": jnp.asarray(toks, jnp.int32)}
+
+    def _commit(self):
+        for _ in range(self.steps_per_commit):
+            grads = self._grad(self._train_params, self._train_batch())
+            self._train_params, self._opt_state = self._update(
+                grads, self._opt_state, self._train_params
+            )
+        self.commits += 1
+        self._pending_params = self._train_params
+        # stagger the K shard applies across the commit interval so the
+        # PS shards go stale one at a time (pipelined applies, PR 4)
+        dt = self.commit_every / (self.plan.n_shards + 1)
+        t0 = self._next_commit
+        self._pending = [(t0 + (j + 1) * dt, j) for j in range(self.plan.n_shards)]
+        self._next_commit = t0 + self.commit_every
+
+    def _apply_shard(self, shard: int):
+        self.state.params = self.plan.merge(
+            self.state.params, shard, self.plan.slice(self._pending_params, shard)
+        )
+        sv = self.state.shard_versions
+        if isinstance(sv, tuple) and sv == ():
+            self.state.step = self.state.step + 1
+        else:
+            self.state.shard_versions = sv.at[shard].add(1)
+        self.shard_applies += 1
+
+    def advance(self, t: float) -> None:
+        """Fire every commit / shard-apply due at or before virtual ``t``."""
+        while True:
+            next_apply = self._pending[0][0] if self._pending else math.inf
+            nxt = min(self._next_commit, next_apply)
+            if nxt > t:
+                return
+            if next_apply <= self._next_commit:
+                _, shard = self._pending.pop(0)
+                self._apply_shard(shard)
+            else:
+                self._commit()
+
+    # ------------------------------------------------------------- evals
+    def eval_loss(self, params: Pytree) -> float:
+        """LM loss of (serving) ``params`` on a fixed held-out batch."""
+        import jax.numpy as jnp
+
+        toks = self._lm_tokens(self.seed, 999_999, self.batch, self.seq,
+                               self.cfg.vocab_size)[:, :-1]
+        return float(self._loss(params, {"tokens": jnp.asarray(toks, jnp.int32)}))

@@ -1,0 +1,152 @@
+"""Open-loop request workload generation (DESIGN.md §14).
+
+A serving trace is the *input* to the engine: a deterministic, seeded
+list of requests with arrival times fixed in advance — open-loop, so the
+load does not slow down when the server falls behind (the regime where
+batching policy actually matters; closed-loop clients self-throttle and
+hide queueing collapse). Modeled on the Clockwork request simulation
+(SNIPPETS.md snippet 3): every request carries its own SLO deadline and
+the engine reports per-request sat/unsat.
+
+Generators follow the repo's registry idiom (``repro.ps`` rules,
+``repro.transport`` codecs): registered by name, pure functions of
+``TraceConfig`` (every field seeded through ``np.random.default_rng``),
+so the same config always yields the same trace on any host.
+
+  * ``poisson`` — memoryless arrivals at ``rate`` req/s.
+  * ``bursty``  — a modulated Poisson process: each ``burst_period``
+    opens with a ``burst_duty`` fraction at ``burst_factor``× the base
+    rate (thinning construction), the remainder at the compensating low
+    rate — same mean load, spiky queues.
+
+Prompt *content* is not part of the trace: the engine derives each
+request's tokens deterministically from (trace seed, request id), so a
+trace file stays a few hundred bytes no matter the prompt lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "Request", "TraceConfig",
+    "register_trace", "get_trace", "trace_names", "make_trace",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request of an open-loop trace.
+
+    slo is in *seconds*; the deadline is ``arrival + slo``. ``max_new``
+    counts every generated token including the prefill argmax."""
+
+    rid: int
+    arrival: float
+    prompt_len: int
+    max_new: int
+    slo: float
+
+    @property
+    def deadline(self) -> float:
+        return self.arrival + self.slo
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Knobs shared by all trace generators (burst_* used by ``bursty``).
+
+    ``slo_scale`` draws each request's SLO as ``slo_ms/1000 × factor``
+    with the factor sampled uniformly from the tuple — heterogeneous
+    deadlines are what separates EDF from FCFS."""
+
+    n_requests: int = 32
+    rate: float = 8.0  # mean arrivals per (virtual) second
+    prompt_lens: tuple[int, ...] = (8, 16)
+    max_new: tuple[int, int] = (4, 12)  # inclusive range
+    slo_ms: float = 1500.0
+    slo_scale: tuple[float, ...] = (1.0,)
+    seed: int = 0
+    # bursty modulation
+    burst_factor: float = 4.0
+    burst_duty: float = 0.25
+    burst_period: float = 4.0
+
+    def __post_init__(self):
+        if self.n_requests < 1:
+            raise ValueError("n_requests must be >= 1")
+        if self.rate <= 0:
+            raise ValueError("rate must be > 0")
+        if self.max_new[0] < 1 or self.max_new[1] < self.max_new[0]:
+            raise ValueError(f"bad max_new range {self.max_new}")
+        if not 0.0 < self.burst_duty < 1.0:
+            raise ValueError("burst_duty must be in (0, 1)")
+
+
+_TRACES: dict[str, Callable[[TraceConfig], list[Request]]] = {}
+
+
+def register_trace(name: str):
+    def deco(fn):
+        _TRACES[name] = fn
+        return fn
+    return deco
+
+
+def get_trace(name: str) -> Callable[[TraceConfig], list[Request]]:
+    try:
+        return _TRACES[name]
+    except KeyError:
+        raise KeyError(f"unknown trace {name!r}; known: {trace_names()}")
+
+
+def trace_names() -> list[str]:
+    return sorted(_TRACES)
+
+
+def make_trace(name: str, cfg: TraceConfig) -> list[Request]:
+    return get_trace(name)(cfg)
+
+
+def _fill(cfg: TraceConfig, arrivals: np.ndarray) -> list[Request]:
+    """Attach per-request shape/SLO draws to a sorted arrival sequence."""
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xD5]))
+    lens = rng.choice(np.asarray(cfg.prompt_lens), size=len(arrivals))
+    lo, hi = cfg.max_new
+    news = rng.integers(lo, hi + 1, size=len(arrivals))
+    scales = rng.choice(np.asarray(cfg.slo_scale, np.float64), size=len(arrivals))
+    return [
+        Request(rid=i, arrival=float(t), prompt_len=int(lens[i]),
+                max_new=int(news[i]), slo=float(cfg.slo_ms / 1e3 * scales[i]))
+        for i, t in enumerate(arrivals)
+    ]
+
+
+@register_trace("poisson")
+def poisson_trace(cfg: TraceConfig) -> list[Request]:
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xA1]))
+    gaps = rng.exponential(1.0 / cfg.rate, size=cfg.n_requests)
+    return _fill(cfg, np.cumsum(gaps))
+
+
+@register_trace("bursty")
+def bursty_trace(cfg: TraceConfig) -> list[Request]:
+    """Thinning: draw candidates at the peak rate, keep each with
+    probability rate(t)/peak. rate(t) alternates hi (duty window) / lo
+    with the same long-run mean as ``cfg.rate``."""
+    hi = cfg.rate * cfg.burst_factor
+    lo = max(cfg.rate * (1.0 - cfg.burst_duty * cfg.burst_factor)
+             / (1.0 - cfg.burst_duty), 0.0)
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xB2]))
+    arrivals: list[float] = []
+    t = 0.0
+    while len(arrivals) < cfg.n_requests:
+        t += float(rng.exponential(1.0 / hi))
+        phase = (t % cfg.burst_period) / cfg.burst_period
+        r = hi if phase < cfg.burst_duty else lo
+        if rng.uniform() < r / hi:
+            arrivals.append(t)
+    return _fill(cfg, np.asarray(arrivals))

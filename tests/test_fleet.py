@@ -45,7 +45,9 @@ from repro.fleet import (
     LeaseRecord,
     LeaseTracker,
     MetricsLog,
+    PullRecord,
     SearchRecord,
+    ServeRecord,
     from_dict,
     get_scheduler,
     load_jsonl,
@@ -368,6 +370,9 @@ SAMPLE_RECORDS = [
     ChurnRecord(t=6.0, worker=1, event="leave", discovered=True),
     CapabilityRecord(t=7.0, worker=2, v=3.5),
     AssignRecord(t=8.0, worker=2, fraction=0.4, data_share=0.4),
+    ServeRecord(t=9.0, req=5, queue=0.01, prefill=0.004, decode=0.05,
+                total=0.064, tokens=9, slo=0.8, slo_ok=True, version=3),
+    PullRecord(t=10.0, stale_shards=2, n_shards=4, nbytes=2048.0),
 ]
 
 
@@ -421,8 +426,10 @@ def _fleet_report_module():
 def test_fleet_report_summarize_and_format():
     fr = _fleet_report_module()
     s = fr.summarize(SAMPLE_RECORDS)
-    assert s["t_end"] == 8.0
+    assert s["t_end"] == 10.0
     assert s["searches"] == 1 and s["drift_triggers"] == 1
+    assert s["serve"]["requests"] == 1 and s["serve"]["slo_ok"] == 1
+    assert s["pulls"]["polls"] == 1 and s["pulls"]["nbytes"] == 2048.0
     assert s["lease"]["expired"] == 1
     assert s["churn"]["leave"] == 1 and s["discovered"] == 1
     assert s["assigns"] == 1 and s["capability_reports"] == 1
@@ -431,6 +438,7 @@ def test_fleet_report_summarize_and_format():
     out = fr.format_report(s)
     assert "fleet report" in out and "stale_ratio" in out
     assert "drift triggers: 1" in out
+    assert "serving: 1 requests" in out and "SLO attainment 100.0%" in out
 
 
 def test_fleet_report_on_a_real_stream(tmp_path):

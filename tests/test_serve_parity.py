@@ -1,0 +1,74 @@
+"""Pooled-slot decode must be bit-identical to solo decode (DESIGN.md
+§14), per model family.
+
+A request served from a continuous-batching slot pool shares its decode
+step with whatever else occupies the pool, lands in whichever slot the
+free list hands it (including slots previously used and evicted — the
+pool never clears state between occupants), and sees per-row positional
+handling. None of that may change its tokens: every request's stream
+must equal the reference single-request decode at the same cache
+capacity, argmax for argmax.
+
+Pinned per family because the cache mechanics differ: ring-buffer K/V
+(attention), wkv matrix state (rwkv6), LRU hidden + conv tail (rglru).
+The trace uses more requests than slots so slot eviction + backfill
+reuse is on the tested path, and mixed prompt lengths so rows sit at
+different sequence offsets (the learned-pos per-row gather regression).
+"""
+
+import jax
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import lm
+from repro.serve import (
+    ServeConfig,
+    ServeEngine,
+    TraceConfig,
+    make_trace,
+    solo_decode,
+)
+
+FAMILIES = ["granite-3-8b", "rwkv6-3b", "recurrentgemma-9b"]
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_pool_decode_matches_solo(arch):
+    cfg = get_smoke(arch)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    # 7 requests through 2 slots → at least 5 insertions into
+    # previously-used slots; mixed prompt lengths → mixed row offsets
+    trace = make_trace("poisson", TraceConfig(
+        n_requests=7, rate=50.0, prompt_lens=(4, 8), max_new=(2, 6),
+        slo_ms=2000.0, seed=11))
+    engine = ServeEngine(cfg, params, ServeConfig(slots=2), trace)
+    rep = engine.run()
+    assert len(rep.records) == 7
+    assert rep.inserts > engine.pool.n_slots  # slot reuse exercised
+    cap = engine.pool.capacity
+    for r in trace:
+        solo = solo_decode(cfg, params, engine.prompt_tokens(r),
+                           r.max_new, cap)
+        assert rep.tokens_by_rid[r.rid] == solo, (
+            f"{arch} rid={r.rid}: pooled {rep.tokens_by_rid[r.rid]} "
+            f"!= solo {solo}")
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_pool_parity_survives_eos_eviction(arch):
+    """Early EOS evictions reshuffle which requests share steps; token
+    streams must still match solo decode with the same EOS rule."""
+    cfg = get_smoke(arch)
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg)
+    trace = make_trace("poisson", TraceConfig(
+        n_requests=5, rate=50.0, prompt_lens=(4, 8), max_new=(6, 6),
+        slo_ms=2000.0, seed=12))
+    free = ServeEngine(cfg, params, ServeConfig(slots=2), trace).run()
+    eos = free.tokens_by_rid[trace[0].rid][1]  # occurs mid-stream
+    engine = ServeEngine(cfg, params, ServeConfig(slots=2, eos_id=eos), trace)
+    rep = engine.run()
+    cap = engine.pool.capacity
+    for r in trace:
+        solo = solo_decode(cfg, params, engine.prompt_tokens(r),
+                           r.max_new, cap, eos_id=eos)
+        assert rep.tokens_by_rid[r.rid] == solo

@@ -38,6 +38,9 @@ def summarize(records) -> dict:
         "lease": defaultdict(int), "churn": defaultdict(int),
         "discovered": 0, "assigns": 0, "capability_reports": 0,
         "per_worker": per_worker,
+        "serve": {"requests": 0, "tokens": 0, "slo_ok": 0,
+                  "queue": [], "total": [], "t_first": None, "t_last": 0.0},
+        "pulls": {"polls": 0, "nbytes": 0.0, "stale_shards": 0, "n_shards": 0},
     }
     for r in records:
         out["t_end"] = max(out["t_end"], r.t)
@@ -66,6 +69,24 @@ def summarize(records) -> dict:
             out["assigns"] += 1
         elif k == "capability":
             out["capability_reports"] += 1
+        elif k == "serve":
+            sv = out["serve"]
+            sv["requests"] += 1
+            sv["tokens"] += r.tokens
+            sv["slo_ok"] += int(r.slo_ok)
+            sv["queue"].append(r.queue)
+            sv["total"].append(r.total)
+            # request wall span: first arrival to last completion
+            arrival = r.t - r.total
+            sv["t_first"] = (arrival if sv["t_first"] is None
+                             else min(sv["t_first"], arrival))
+            sv["t_last"] = max(sv["t_last"], r.t)
+        elif k == "pull":
+            pl = out["pulls"]
+            pl["polls"] += 1
+            pl["nbytes"] += r.nbytes
+            pl["stale_shards"] += r.stale_shards
+            pl["n_shards"] = max(pl["n_shards"], r.n_shards)
     return out
 
 
@@ -86,6 +107,26 @@ def format_report(s: dict) -> str:
     if s["assigns"]:
         lines.append(f"  scheduler assignments: {s['assigns']} "
                      f"(capability reports: {s['capability_reports']})")
+    sv = s["serve"]
+    if sv["requests"]:
+        span = max(sv["t_last"] - (sv["t_first"] or 0.0), 1e-9)
+        lines.append(
+            f"  serving: {sv['requests']} requests, {sv['tokens']} tokens "
+            f"({sv['tokens'] / span:.1f} tok/s)")
+        lines.append(
+            f"    latency  queue p50 {_percentile(sv['queue'], 0.5)*1e3:.1f} ms"
+            f"  p99 {_percentile(sv['queue'], 0.99)*1e3:.1f} ms"
+            f"  | total p50 {_percentile(sv['total'], 0.5)*1e3:.1f} ms"
+            f"  p99 {_percentile(sv['total'], 0.99)*1e3:.1f} ms")
+        lines.append(
+            f"    SLO attainment {100.0 * sv['slo_ok'] / sv['requests']:.1f}%"
+            f"  ({sv['slo_ok']}/{sv['requests']})")
+        pl = s["pulls"]
+        if pl["polls"]:
+            lines.append(
+                f"    PS pulls: {pl['polls']} "
+                f"({pl['stale_shards']} stale shards of {pl['n_shards']}-way, "
+                f"{pl['nbytes']/1e6:.2f} MB)")
     if s["per_worker"]:
         lines.append("  worker  commits  mean_lat  p95_lat    MB_up  MB_down"
                      "  stale_ratio")
