@@ -34,6 +34,7 @@ discovered (``expired_ok=1``).
 from __future__ import annotations
 
 import math
+import os
 import time
 
 import numpy as np
@@ -126,6 +127,25 @@ def main(full: bool = False) -> list[str]:
         discovered=len(disc), ratio_vs_oracle=ratio,
         within_10pct=int(res_l.converged and ratio <= 1.10),
     ))
+
+    # race-validate the lease run's event trace (repro.analysis.dynamic):
+    # clock monotonicity, WorkerLeft dedupe, stale-gen deliveries, shard
+    # versions — the ordering contracts the lease layer must keep while
+    # it discovers the death. REPRO_FLEET_TRACE=<path> exports the JSONL
+    # so CI can re-validate the persisted form standalone.
+    from repro.analysis.dynamic import validate_records
+
+    violations = validate_records(log.records)
+    for v in violations:
+        print(f"# bench_fleet/race: {v.render()}")
+    rows.append(row(
+        "bench_fleet/race", 0.0, res_l.elapsed,
+        records=len(log), violations=len(violations),
+        race_ok=int(not violations),
+    ))
+    trace = os.environ.get("REPRO_FLEET_TRACE")
+    if trace:
+        log.to_jsonl(trace)
 
     _, res_n, wall = _run([churn.stall(STALL_T, STALLED)])
     slowdown = res_n.convergence_time / res_o.convergence_time

@@ -37,7 +37,7 @@ GATE_KEYS = {
     "converged", "both_converged", "within_10pct", "expired_ok",
     "under_10s", "before_epoch_end", "drift_no_later", "roundtrip_ok",
     "stalled", "continuous_beats_static_p99",
-    "version_tracking_loss_improves", "partial_lt_full",
+    "version_tracking_loss_improves", "partial_lt_full", "race_ok",
 }
 LOWER_BETTER = ("t_conv", "ratio", "waiting", "probes")
 HIGHER_BETTER = ("speedup",)

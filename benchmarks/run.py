@@ -97,7 +97,8 @@ def main(argv=None) -> None:
             print(f"{name}/HARNESS_ERROR,0,error={type(e).__name__}")
             records.append({"module": name, "name": f"{name}/HARNESS_ERROR",
                             "us_per_call": None,
-                            "derived": {"error": type(e).__name__}})
+                            "derived": {"error": type(e).__name__,
+                                        "error_message": str(e)}})
             failures += 1
     payload = json.dumps({
         "generated_unix": time.time(),

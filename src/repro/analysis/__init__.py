@@ -1,0 +1,50 @@
+"""repro.analysis: repo-specific static analysis (reprolint) plus the
+event-trace race validator (DESIGN.md §15).
+
+Static: ``python -m repro.analysis [--strict] [--json PATH] [paths...]``
+runs the registered rule catalogue over ``src``/``benchmarks``/``tools``
+and gates CI; suppressions live in ``analysis_baseline.json`` (with a
+justification each) or inline as ``# reprolint: ignore[rule]``.
+
+Dynamic: ``python -m repro.analysis.dynamic trace.jsonl`` replays a
+metrics JSONL and asserts the ordering contracts (clock monotonicity,
+WorkerLeft dedupe, no stale-generation deliveries, per-shard version
+monotonicity).
+"""
+
+from .core import (
+    Finding,
+    Project,
+    Rule,
+    SourceFile,
+    all_rules,
+    get_rule,
+    register_rule,
+    rule_names,
+    run_rules,
+)
+from .baseline import Baseline, BaselineEntry, DEFAULT_BASELINE
+from .cli import analyze, main
+
+# importing the rule modules populates the registry
+from . import hygiene, parity, protocol_rules, purity  # noqa: F401
+
+_DYNAMIC = ("Violation", "validate_records", "validate_jsonl")
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.analysis.dynamic` must not find the module
+    # pre-imported by its own package (runpy double-import warning)
+    if name in _DYNAMIC:
+        from . import dynamic
+
+        return getattr(dynamic, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Finding", "Project", "Rule", "SourceFile",
+    "register_rule", "rule_names", "get_rule", "all_rules", "run_rules",
+    "Baseline", "BaselineEntry", "DEFAULT_BASELINE",
+    "analyze", "main",
+    "Violation", "validate_records", "validate_jsonl",
+]

@@ -1,0 +1,89 @@
+"""Committed suppression baseline for reprolint (DESIGN.md §15).
+
+The baseline is how the ``--strict`` CI gate stays green while a rule
+lands before every violation is fixed: each entry suppresses exactly one
+finding (matched by the finding's line-independent ``key``) and must
+carry a human ``justification``. The workflow:
+
+  1. a new rule fires on existing code → either fix the code in the same
+     PR (preferred) or run ``--update-baseline`` and edit in a
+     justification per entry;
+  2. the gate fails when a *new* finding appears (not in the baseline)
+     — and, under ``--strict``, when a baseline entry no longer matches
+     anything (stale suppressions must be deleted, or they hide the
+     next real regression at that key).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from .core import Finding
+
+__all__ = ["BaselineEntry", "Baseline", "DEFAULT_BASELINE"]
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    message: str
+    justification: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BaselineEntry":
+        return cls(**d)
+
+    @classmethod
+    def from_finding(cls, f: Finding, justification: str = "") -> "BaselineEntry":
+        return cls(rule=f.rule, path=f.path, message=f.message,
+                   justification=justification)
+
+
+class Baseline:
+    """The committed suppression set; lossless load/save round trip."""
+
+    def __init__(self, entries: list[BaselineEntry] | None = None):
+        self.entries = list(entries or [])
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        path = pathlib.Path(path)
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text())
+        if not isinstance(data, dict) or "entries" not in data:
+            raise ValueError(
+                f"{path}: expected {{'version': 1, 'entries': [...]}}")
+        return cls([BaselineEntry.from_dict(e) for e in data["entries"]])
+
+    def save(self, path) -> None:
+        payload = {
+            "version": 1,
+            "entries": [e.to_dict() for e in sorted(
+                self.entries, key=lambda e: (e.path, e.rule, e.message))],
+        }
+        pathlib.Path(path).write_text(json.dumps(payload, indent=1) + "\n")
+
+    def apply(self, findings: list[Finding]) -> tuple[
+            list[Finding], list[Finding], list[BaselineEntry]]:
+        """Partition into (kept, suppressed, stale-entries). Each entry
+        suppresses every finding at its key (a key is line-independent,
+        so one justified entry covers the violation wherever it moves)."""
+        keys = {e.key for e in self.entries}
+        kept = [f for f in findings if f.key not in keys]
+        suppressed = [f for f in findings if f.key in keys]
+        live = {f.key for f in findings}
+        stale = [e for e in self.entries if e.key not in live]
+        return kept, suppressed, stale

@@ -1,0 +1,116 @@
+"""reprolint CLI: ``python -m repro.analysis [--strict] [--json] [paths]``.
+
+Default scan set is ``src``, ``benchmarks``, ``tools`` under the repo
+root (found via pyproject.toml/.git from the first path or cwd). Exit
+status: 0 when every finding is suppressed (baseline or inline), 1 when
+unsuppressed findings remain — and, under ``--strict``, when the
+baseline carries stale entries (suppressions that no longer match).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from .baseline import DEFAULT_BASELINE, Baseline, BaselineEntry
+from .core import Project, all_rules, find_repo_root, get_rule, rule_names, run_rules
+
+__all__ = ["main", "analyze"]
+
+DEFAULT_PATHS = ("src", "benchmarks", "tools")
+
+
+def analyze(paths=None, root=None, rules=None):
+    """Library entry point: returns (project, findings) with no baseline
+    applied (callers decide suppression policy)."""
+    first = pathlib.Path(paths[0]) if paths else None
+    root = pathlib.Path(root) if root is not None else find_repo_root(first)
+    scan = [pathlib.Path(p) for p in paths] if paths else [
+        root / p for p in DEFAULT_PATHS if (root / p).exists()
+    ]
+    project = Project(root, scan)
+    return project, run_rules(project, rules)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis (reprolint)")
+    p.add_argument("paths", nargs="*",
+                   help=f"files/dirs to scan (default: {'/'.join(DEFAULT_PATHS)} "
+                        "under the repo root)")
+    p.add_argument("--strict", action="store_true",
+                   help="also fail on stale baseline entries")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write findings as JSON ('-' for stdout)")
+    p.add_argument("--baseline", metavar="PATH", default=None,
+                   help=f"suppression file (default: <root>/{DEFAULT_BASELINE})")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline to suppress all current findings")
+    p.add_argument("--rules", nargs="*", metavar="RULE", default=None,
+                   help="run only these rules")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.name:24s} {r.severity:8s} {r.description}")
+        return 0
+
+    rules = [get_rule(n) for n in args.rules] if args.rules is not None else None
+    project, findings = analyze(args.paths or None, rules=rules)
+
+    baseline_path = (pathlib.Path(args.baseline) if args.baseline
+                     else project.root / DEFAULT_BASELINE)
+    if args.update_baseline:
+        bl = Baseline.load(baseline_path)
+        just = {e.key: e.justification for e in bl.entries}
+        bl.entries = [
+            BaselineEntry.from_finding(f, just.get(f.key, "TODO: justify"))
+            for f in findings
+        ]
+        bl.save(baseline_path)
+        print(f"wrote {baseline_path} ({len(bl.entries)} entries)")
+        return 0
+
+    baseline = Baseline.load(baseline_path)
+    kept, suppressed, stale = baseline.apply(findings)
+
+    if args.json:
+        payload = json.dumps({
+            "root": str(project.root),
+            "rules": args.rules if args.rules is not None else rule_names(),
+            "findings": [f.to_dict() for f in kept],
+            "suppressed": [f.to_dict() for f in suppressed],
+            "stale_baseline": [e.to_dict() for e in stale],
+        }, indent=1)
+        if args.json == "-":
+            print(payload)
+        else:
+            pathlib.Path(args.json).write_text(payload)
+
+    for f in kept:
+        print(f.render())
+    errors = sum(1 for f in kept if f.severity == "error")
+    warnings = len(kept) - errors
+    tail = (f"{errors} error(s), {warnings} warning(s)"
+            f" ({len(suppressed)} baseline-suppressed)")
+    status = 0
+    if kept:
+        status = 1
+    if stale:
+        for e in stale:
+            print(f"stale baseline entry: [{e.rule}] {e.path}: {e.message}",
+                  file=sys.stderr)
+        tail += f"; {len(stale)} stale baseline entr(y/ies)"
+        if args.strict:
+            status = 1
+    print(("FAIL: " if status else "OK: ") + tail)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,282 @@
+"""reprolint core: typed findings, the project model, and the rule
+registry (DESIGN.md §15).
+
+ADSP's correctness rests on invariants the Python type system cannot
+see: the simulator must be a pure function of the virtual clock and its
+seeds, every protocol record must have a dispatch arm, every fused
+Pallas backend must have a bit-for-bit reference twin, hot paths must
+never host-sync. PRs 1–7 enforced these one regression test at a time;
+this package checks them mechanically.
+
+The shapes mirror the repo's registry idiom (``repro.ps`` rules,
+``repro.transport`` codecs, ``repro.fleet`` metrics):
+
+  * ``Finding`` — a typed frozen record with lossless
+    ``to_dict``/``from_dict`` round-trip (the ``--json`` output and the
+    baseline file are built from these);
+  * ``Rule``    — the checker contract: a named, severity-tagged object
+    whose ``check(project)`` yields findings. Rules register under their
+    string name via ``register_rule`` so the CLI, the tests, and the
+    baseline all refer to one catalogue.
+
+A ``Project`` is the parsed view of the repo: the scan set (what the
+CLI was pointed at) for per-file rules, plus an on-demand loader so
+cross-file rules (handler exhaustiveness, registry parity) can resolve
+their anchor files from the repo root even when the scan set is narrow.
+
+Inline suppression: a source line carrying ``# reprolint: ignore`` (all
+rules) or ``# reprolint: ignore[rule-a,rule-b]`` is exempt. Whole-repo
+suppression with a justification lives in ``analysis_baseline.json``
+(see ``repro.analysis.baseline``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Iterable, Iterator
+
+__all__ = [
+    "Finding",
+    "SourceFile",
+    "Project",
+    "Rule",
+    "register_rule",
+    "rule_names",
+    "get_rule",
+    "all_rules",
+    "run_rules",
+    "dotted_name",
+    "find_repo_root",
+]
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a repo-relative file and line.
+
+    ``key`` deliberately excludes the line number: baseline entries must
+    survive unrelated edits above the offending code.
+    """
+
+    rule: str
+    severity: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(**d)
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}/{self.severity}] {self.message}"
+
+
+class SourceFile:
+    """One parsed Python file. ``tree`` is lazy and returns None on a
+    syntax error (recorded as ``parse_error`` so rules need not guard)."""
+
+    def __init__(self, root: pathlib.Path, path: pathlib.Path):
+        self.path = path
+        self.rel = path.resolve().relative_to(root.resolve()).as_posix()
+        self._text: str | None = None
+        self._tree: ast.AST | None = None
+        self._parsed = False
+        self.parse_error: SyntaxError | None = None
+
+    @property
+    def text(self) -> str:
+        if self._text is None:
+            self._text = self.path.read_text()
+        return self._text
+
+    @property
+    def lines(self) -> list[str]:
+        return self.text.splitlines()
+
+    @property
+    def tree(self) -> ast.AST | None:
+        if not self._parsed:
+            self._parsed = True
+            try:
+                self._tree = ast.parse(self.text, filename=self.rel)
+            except SyntaxError as e:
+                self.parse_error = e
+        return self._tree
+
+    def line_text(self, lineno: int) -> str:
+        lines = self.lines
+        return lines[lineno - 1] if 1 <= lineno <= len(lines) else ""
+
+
+def find_repo_root(start: pathlib.Path | None = None) -> pathlib.Path:
+    """Nearest ancestor carrying pyproject.toml or .git (else ``start``)."""
+    p = (start or pathlib.Path.cwd()).resolve()
+    if p.is_file():
+        p = p.parent
+    for cand in (p, *p.parents):
+        if (cand / "pyproject.toml").exists() or (cand / ".git").exists():
+            return cand
+    return p
+
+
+class Project:
+    """The analysis context: a scan set of parsed files plus on-demand
+    access to any file under the repo root (cross-file rules resolve
+    their anchors — protocol.py, tests/ — independent of the scan set)."""
+
+    def __init__(self, root: pathlib.Path, paths: Iterable[pathlib.Path] | None = None):
+        self.root = pathlib.Path(root).resolve()
+        self._cache: dict[str, SourceFile] = {}
+        scan = [pathlib.Path(p) for p in paths] if paths else [self.root / "src"]
+        files: dict[str, SourceFile] = {}
+        for p in scan:
+            p = p if p.is_absolute() else self.root / p
+            for f in sorted(p.rglob("*.py")) if p.is_dir() else [p]:
+                if "__pycache__" in f.parts or not f.exists():
+                    continue
+                sf = self._load(f)
+                files[sf.rel] = sf
+        self.files: list[SourceFile] = [files[k] for k in sorted(files)]
+
+    def _load(self, path: pathlib.Path) -> SourceFile:
+        sf = SourceFile(self.root, path)
+        return self._cache.setdefault(sf.rel, sf)
+
+    def file(self, rel: str) -> SourceFile | None:
+        """Load ``rel`` (repo-relative) whether or not it was scanned."""
+        if rel in self._cache:
+            return self._cache[rel]
+        path = self.root / rel
+        return self._load(path) if path.exists() else None
+
+    def files_under(self, *prefixes: str) -> list[SourceFile]:
+        """Scanned files whose repo-relative path starts with a prefix
+        (or equals it exactly, for single-file targets)."""
+        return [
+            sf for sf in self.files
+            if any(sf.rel == p or sf.rel.startswith(p) for p in prefixes)
+        ]
+
+    def glob(self, pattern: str) -> list[SourceFile]:
+        """Load files matching ``pattern`` from the repo root, scanned
+        or not (used by cross-file rules to reach tests/)."""
+        return [
+            self._load(f)
+            for f in sorted(self.root.glob(pattern))
+            if f.is_file() and "__pycache__" not in f.parts
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Rule contract + registry
+# ---------------------------------------------------------------------------
+
+
+class Rule:
+    """One named checker. Subclasses set ``name``/``severity`` and
+    implement ``check``; ``finding`` builds correctly-anchored records."""
+
+    name = "base"
+    severity = "error"
+    description = ""
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, sf: SourceFile, node, message: str) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        return Finding(rule=self.name, severity=self.severity,
+                       path=sf.rel, line=int(line), message=message)
+
+
+_RULES: dict[str, type] = {}
+
+
+def register_rule(cls: type) -> type:
+    if not issubclass(cls, Rule) or cls.name == "base":
+        raise TypeError(f"not a registerable rule: {cls!r}")
+    if cls.severity not in SEVERITIES:
+        raise ValueError(f"rule {cls.name!r}: severity must be one of {SEVERITIES}")
+    _RULES[cls.name] = cls
+    return cls
+
+
+def rule_names() -> list[str]:
+    return sorted(_RULES)
+
+
+def get_rule(name: str) -> Rule:
+    try:
+        return _RULES[name]()
+    except KeyError:
+        raise KeyError(f"unknown rule {name!r}; registered: {rule_names()}") from None
+
+
+def all_rules() -> list[Rule]:
+    return [_RULES[n]() for n in rule_names()]
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+_IGNORE_RE = re.compile(r"#\s*reprolint:\s*ignore(?:\[([^\]]*)\])?")
+
+
+def _inline_ignored(project: Project, f: Finding) -> bool:
+    sf = project.file(f.path)
+    if sf is None or f.line <= 0:
+        return False
+    m = _IGNORE_RE.search(sf.line_text(f.line))
+    if m is None:
+        return False
+    names = m.group(1)
+    if names is None:
+        return True
+    return f.rule in {n.strip() for n in names.split(",") if n.strip()}
+
+
+def run_rules(project: Project, rules: Iterable[Rule] | None = None) -> list[Finding]:
+    """Run rules over the project; returns findings sorted by location,
+    with syntax errors surfaced as ``parse_error`` findings and inline
+    ``# reprolint: ignore`` suppressions already applied."""
+    out: list[Finding] = []
+    for sf in project.files:
+        if sf.tree is None and sf.parse_error is not None:
+            out.append(Finding(rule="parse_error", severity="error", path=sf.rel,
+                               line=int(sf.parse_error.lineno or 0),
+                               message=f"syntax error: {sf.parse_error.msg}"))
+    for rule in (rules if rules is not None else all_rules()):
+        out.extend(rule.check(project))
+    out = [f for f in out if not _inline_ignored(project, f)]
+    return sorted(out, key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the rules
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

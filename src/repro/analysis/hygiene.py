@@ -1,0 +1,200 @@
+"""Hygiene rules: silent failure handling, aliased defaults, and
+kernel-body control flow on traced values (DESIGN.md §15).
+
+* ``broad-except`` — a bare ``except:`` / ``except Exception:`` that
+  neither re-raises nor records the caught exception swallows the error
+  class entirely; ~30 CHANGES.md bugfixes started life as a swallowed
+  exception.
+* ``mutable-default`` — a mutable literal as a function default or
+  dataclass field default aliases one object across calls/instances;
+  dataclasses raise for list/dict/set but not for arbitrary mutables,
+  and plain functions never raise.
+* ``tracer-branch`` — Python ``if``/``while`` on a value loaded from a
+  kernel ref runs fine in interpret mode (concrete values) and fails —
+  or silently specializes — when compiled for TPU. Taint is tracked
+  from ``*_ref`` parameters / ``pl.load`` through assignments.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import Finding, Project, Rule, SourceFile, dotted_name, register_rule
+
+__all__ = ["BroadExcept", "MutableDefault", "TracerBranch"]
+
+_BROAD = {"Exception", "BaseException"}
+KERNEL_SCOPE = "src/repro/kernels/"
+
+
+@register_rule
+class BroadExcept(Rule):
+    name = "broad-except"
+    severity = "warning"
+    description = (
+        "bare except / except Exception without re-raise or a recorded "
+        "error type swallows failures silently"
+    )
+
+    def _is_broad(self, handler: ast.ExceptHandler) -> bool:
+        if handler.type is None:
+            return True
+        types = (handler.type.elts if isinstance(handler.type, ast.Tuple)
+                 else [handler.type])
+        for t in types:
+            name = dotted_name(t)
+            if name and name.rsplit(".", 1)[-1] in _BROAD:
+                return True
+        return False
+
+    def _handled(self, handler: ast.ExceptHandler) -> bool:
+        """Re-raises, or binds the exception and actually uses it."""
+        for node in ast.walk(ast.Module(body=handler.body, type_ignores=[])):
+            if isinstance(node, ast.Raise):
+                return True
+            if (handler.name is not None and isinstance(node, ast.Name)
+                    and node.id == handler.name
+                    and isinstance(node.ctx, ast.Load)):
+                return True
+        return False
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for sf in project.files:
+            if sf.tree is None:
+                continue
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ExceptHandler):
+                    if self._is_broad(node) and not self._handled(node):
+                        what = ("bare except:" if node.type is None
+                                else "except Exception")
+                        yield self.finding(sf, node, (
+                            f"{what} swallows the error without re-raising "
+                            "or recording the exception type; catch the "
+                            "specific exceptions or log/record the error"
+                        ))
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        return name in {"list", "dict", "set", "bytearray",
+                        "collections.defaultdict", "defaultdict"}
+    return False
+
+
+def _is_dataclass(cls: ast.ClassDef) -> bool:
+    for deco in cls.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        name = dotted_name(target)
+        if name and name.rsplit(".", 1)[-1] == "dataclass":
+            return True
+    return False
+
+
+@register_rule
+class MutableDefault(Rule):
+    name = "mutable-default"
+    severity = "error"
+    description = (
+        "mutable literals as function defaults or dataclass field "
+        "defaults alias one object across calls/instances"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for sf in project.files:
+            if sf.tree is None:
+                continue
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                    args = node.args
+                    for d in (*args.defaults, *args.kw_defaults):
+                        if d is not None and _is_mutable_literal(d):
+                            yield self.finding(sf, d, (
+                                "mutable default argument is shared across "
+                                "calls; default to None (or use a factory)"
+                            ))
+                elif isinstance(node, ast.ClassDef) and _is_dataclass(node):
+                    for stmt in node.body:
+                        if (isinstance(stmt, ast.AnnAssign)
+                                and stmt.value is not None
+                                and _is_mutable_literal(stmt.value)):
+                            yield self.finding(sf, stmt, (
+                                "mutable dataclass field default; use "
+                                "dataclasses.field(default_factory=...)"
+                            ))
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_pl_load(node: ast.AST) -> bool:
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        return name is not None and name.rsplit(".", 1)[-1] == "load"
+    return False
+
+
+@register_rule
+class TracerBranch(Rule):
+    name = "tracer-branch"
+    severity = "error"
+    description = (
+        "Python if/while on a value loaded from a kernel ref only works "
+        "in interpret mode; use jnp.where / pl.when / lax.cond"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for sf in project.files_under(KERNEL_SCOPE):
+            if sf.tree is None:
+                continue
+            for fn in ast.walk(sf.tree):
+                if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                tainted = {
+                    a.arg
+                    for a in (*fn.args.posonlyargs, *fn.args.args,
+                              *fn.args.kwonlyargs)
+                    if a.arg.endswith("_ref")
+                }
+                if not tainted:
+                    continue
+                yield from self._scan_body(sf, fn.body, tainted)
+
+    def _scan_body(self, sf: SourceFile, body: list[ast.stmt],
+                   tainted: set[str]) -> Iterator[Finding]:
+        for stmt in body:
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = stmt.value
+                if value is not None and (
+                    _names_in(value) & tainted
+                    or any(_is_pl_load(n) for n in ast.walk(value))
+                ):
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                tainted.add(n.id)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                hit = sorted(_names_in(stmt.test) & tainted)
+                if hit:
+                    kw = "while" if isinstance(stmt, ast.While) else "if"
+                    yield self.finding(sf, stmt, (
+                        f"Python `{kw}` on ref-loaded value(s) "
+                        f"{', '.join(hit)} — concrete only in interpret "
+                        "mode; compiled kernels need jnp.where / pl.when / "
+                        "lax.cond"
+                    ))
+                yield from self._scan_body(sf, stmt.body, tainted)
+                yield from self._scan_body(sf, stmt.orelse, tainted)
+            elif isinstance(stmt, (ast.For, ast.With)):
+                yield from self._scan_body(sf, stmt.body, tainted)
+            elif isinstance(stmt, ast.FunctionDef):
+                # nested helper (fori_loop body): refs visible via closure
+                yield from self._scan_body(sf, stmt.body, set(tainted))

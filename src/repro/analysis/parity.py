@@ -1,0 +1,152 @@
+"""Registry-parity rule: every fused/Pallas backend must have a
+bit-for-bit reference twin, and a test that names it (DESIGN.md §15).
+
+The repo's performance claim structure is: the *reference* backend is
+the correctness contract (pure JAX, bit-compared against the seed), and
+the *fused* backend is the speed path, parity-tested against reference.
+A fused registration without a reference twin has no contract to be
+tested against; a pair no test names by its registry string is parity
+coverage that can silently rot.
+
+Sources of truth (all resolved statically, no imports):
+
+  * ``@register_local_rule(name, backend)`` / ``@register_commit_rule``
+    (``repro.ps``) and ``@register_codec`` (``repro.transport``)
+    decorator sites anywhere under ``src/``;
+  * the public kernel wrappers in ``kernels/ops.py`` (``__all__``),
+    whose reference twins live in ``kernels/ref.py`` or — for the codec
+    passes — in the reference codecs of ``transport/codecs.py``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+from .core import Finding, Project, Rule, SourceFile, dotted_name, register_rule
+
+__all__ = ["RegistryParity", "registered_backends"]
+
+_REGISTRARS = {
+    "register_local_rule": "ps.local",
+    "register_commit_rule": "ps.commit",
+    "register_codec": "transport.codec",
+}
+_FUSED = ("fused", "pallas")
+
+KERNEL_OPS = "src/repro/kernels/ops.py"
+KERNEL_REF = "src/repro/kernels/ref.py"
+CODEC_REF = "src/repro/transport/codecs.py"
+_OPS_HELPERS = {"default_interpret"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Registration:
+    registry: str
+    rule_name: str
+    backend: str
+    path: str
+    line: int
+
+
+def registered_backends(project: Project) -> list[Registration]:
+    """Every (registry, name, backend) decorator site under src/."""
+    out: list[Registration] = []
+    for sf in project.files_under("src/"):
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func)
+            if fn is None:
+                continue
+            registrar = _REGISTRARS.get(fn.rsplit(".", 1)[-1])
+            if registrar is None:
+                continue
+            consts = [a.value for a in node.args
+                      if isinstance(a, ast.Constant) and isinstance(a.value, str)]
+            if not consts:
+                continue
+            name = consts[0]
+            backend = consts[1] if len(consts) > 1 else "reference"
+            out.append(Registration(registrar, name, backend, sf.rel, node.lineno))
+    return out
+
+
+def _test_text(project: Project) -> str:
+    return "\n".join(sf.text for sf in project.glob("tests/**/*.py"))
+
+
+def _ops_public_names(sf: SourceFile) -> list[tuple[str, int]]:
+    """(name, line) for each ``__all__`` entry of kernels/ops.py."""
+    if sf.tree is None:
+        return []
+    for node in ast.walk(sf.tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            return [
+                (e.value, e.lineno) for e in node.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            ]
+    return []
+
+
+@register_rule
+class RegistryParity(Rule):
+    name = "registry-parity"
+    severity = "error"
+    description = (
+        "every fused/pallas registration needs a reference twin, and "
+        "every fused-capable name needs a test referencing it by name"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        regs = registered_backends(project)
+        have = {(r.registry, r.rule_name, r.backend) for r in regs}
+        tests = _test_text(project)
+
+        for r in regs:
+            if r.backend not in _FUSED:
+                continue
+            sf = project.file(r.path)
+            if (r.registry, r.rule_name, "reference") not in have:
+                yield self.finding(sf, r.line, (
+                    f"{r.registry} registration ({r.rule_name!r}, "
+                    f"{r.backend!r}) has no ({r.rule_name!r}, 'reference') "
+                    "twin — the fused kernel has no correctness contract "
+                    "to be parity-tested against"
+                ))
+            if f'"{r.rule_name}"' not in tests and f"'{r.rule_name}'" not in tests:
+                yield self.finding(sf, r.line, (
+                    f"no test under tests/ references the fused-capable "
+                    f"{r.registry} name {r.rule_name!r} as a string — the "
+                    "reference/fused pair has no named parity coverage"
+                ))
+
+        # kernels: public Pallas wrappers need a pure-JAX twin + a test
+        ops = project.file(KERNEL_OPS)
+        if ops is None:
+            return
+        ref = project.file(KERNEL_REF)
+        codecs = project.file(CODEC_REF)
+        twin_text = (ref.text if ref is not None else "") + (
+            codecs.text if codecs is not None else "")
+        for name, line in _ops_public_names(ops):
+            if name in _OPS_HELPERS:
+                continue
+            stem = name[:-len("_tree")] if name.endswith("_tree") else name
+            if stem not in twin_text:
+                yield self.finding(ops, line, (
+                    f"kernel op {name!r} has no reference twin (searched "
+                    f"{KERNEL_REF} and the reference codecs in {CODEC_REF})"
+                ))
+            if name not in tests:
+                yield self.finding(ops, line, (
+                    f"no test under tests/ references kernel op {name!r} "
+                    "by name — the Pallas/reference pair has no parity "
+                    "coverage"
+                ))

@@ -1,0 +1,159 @@
+"""Protocol contract rules: the typed event/command vocabulary and the
+metrics stream must stay total and immutable (DESIGN.md §15).
+
+* ``handler-exhaustiveness`` — every ``Event``/``Command`` subclass in
+  ``cluster/protocol.py`` must be matched by an ``isinstance`` dispatch
+  arm somewhere in the dispatch triad (protocol's ``handle``, engine's
+  ``execute``/``dispatch``, the simulator's event loop). The protocol
+  base classes raise ``TypeError`` on unknown records, but only at
+  runtime on the path actually hit — a new event type that silently
+  falls through a ``handle`` chain is exactly the bug class PR 6's gen
+  counters existed to catch.
+* ``frozen-protocol`` — every protocol record (Event/Command) and every
+  metrics record must be a ``frozen=True`` dataclass; metric records
+  must also be registered (``@_register("kind")``) or they silently lose
+  the JSONL round-trip the fleet stream is built on.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import Finding, Project, Rule, SourceFile, dotted_name, register_rule
+
+__all__ = ["HandlerExhaustiveness", "FrozenProtocol"]
+
+PROTOCOL_FILE = "src/repro/cluster/protocol.py"
+DISPATCH_FILES = (
+    "src/repro/cluster/protocol.py",
+    "src/repro/cluster/engine.py",
+    "src/repro/edgesim/simulator.py",
+)
+METRICS_FILE = "src/repro/fleet/metrics.py"
+
+
+def _base_names(cls: ast.ClassDef) -> set[str]:
+    out = set()
+    for b in cls.bases:
+        name = dotted_name(b)
+        if name:
+            out.add(name.rsplit(".", 1)[-1])
+    return out
+
+
+def protocol_subclasses(sf: SourceFile, bases: tuple[str, ...]) -> list[ast.ClassDef]:
+    """Direct subclasses of the given base names, in definition order."""
+    if sf.tree is None:
+        return []
+    return [
+        n for n in ast.walk(sf.tree)
+        if isinstance(n, ast.ClassDef) and _base_names(n) & set(bases)
+    ]
+
+
+def _isinstance_targets(sf: SourceFile) -> set[str]:
+    """Every class name used as an isinstance() second argument (or a
+    match-case class pattern) in the file."""
+    out: set[str] = set()
+    if sf.tree is None:
+        return out
+    for node in ast.walk(sf.tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "isinstance" and len(node.args) == 2):
+            spec = node.args[1]
+            elts = spec.elts if isinstance(spec, ast.Tuple) else [spec]
+            for e in elts:
+                name = dotted_name(e)
+                if name:
+                    out.add(name.rsplit(".", 1)[-1])
+        elif isinstance(node, ast.MatchClass):
+            name = dotted_name(node.cls)
+            if name:
+                out.add(name.rsplit(".", 1)[-1])
+    return out
+
+
+def _is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    for deco in cls.decorator_list:
+        if isinstance(deco, ast.Call):
+            name = dotted_name(deco.func)
+            if name and name.rsplit(".", 1)[-1] == "dataclass":
+                for kw in deco.keywords:
+                    if (kw.arg == "frozen" and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True):
+                        return True
+    return False
+
+
+def _is_registered_metric(cls: ast.ClassDef) -> bool:
+    for deco in cls.decorator_list:
+        if isinstance(deco, ast.Call):
+            name = dotted_name(deco.func)
+            if name and name.rsplit(".", 1)[-1] == "_register":
+                return True
+    return False
+
+
+@register_rule
+class HandlerExhaustiveness(Rule):
+    name = "handler-exhaustiveness"
+    severity = "error"
+    description = (
+        "every Event/Command subclass in cluster/protocol.py needs an "
+        "isinstance dispatch arm in protocol.handle / engine / simulator"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        proto = project.file(PROTOCOL_FILE)
+        if proto is None or proto.tree is None:
+            return
+        dispatched: set[str] = set()
+        for rel in DISPATCH_FILES:
+            sf = project.file(rel)
+            if sf is not None:
+                dispatched |= _isinstance_targets(sf)
+        for kind in ("Event", "Command"):
+            for cls in protocol_subclasses(proto, (kind,)):
+                if cls.name not in dispatched:
+                    yield self.finding(proto, cls, (
+                        f"{kind} subclass {cls.name} has no isinstance "
+                        f"dispatch arm in any of {', '.join(DISPATCH_FILES)} "
+                        "— it would silently fall through to the TypeError "
+                        "tail (or worse, be dropped)"
+                    ))
+
+
+@register_rule
+class FrozenProtocol(Rule):
+    name = "frozen-protocol"
+    severity = "error"
+    description = (
+        "protocol events/commands and metric records must be frozen "
+        "dataclasses; metric records must be registered for round-trip"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        proto = project.file(PROTOCOL_FILE)
+        if proto is not None:
+            for cls in protocol_subclasses(proto, ("Event", "Command")):
+                if not _is_frozen_dataclass(cls):
+                    yield self.finding(proto, cls, (
+                        f"protocol record {cls.name} must be a "
+                        "@dataclasses.dataclass(frozen=True) — events and "
+                        "commands are immutable by contract"
+                    ))
+        metrics = project.file(METRICS_FILE)
+        if metrics is not None:
+            for cls in protocol_subclasses(metrics, ("MetricRecord",)):
+                if not _is_frozen_dataclass(cls):
+                    yield self.finding(metrics, cls, (
+                        f"metric record {cls.name} must be a "
+                        "@dataclasses.dataclass(frozen=True)"
+                    ))
+                if not _is_registered_metric(cls):
+                    yield self.finding(metrics, cls, (
+                        f"metric record {cls.name} is not registered "
+                        "(@_register(kind)) — it would not survive the "
+                        "to_dict/from_dict JSONL round trip"
+                    ))

@@ -1,0 +1,145 @@
+"""Determinism rules: the virtual-clock subsystems must be pure
+functions of the clock and their seeds, and hot paths must never sync
+the host (DESIGN.md §15).
+
+* ``wall-clock-in-sim`` — ``time.time``/``datetime.now``/unseeded RNG
+  anywhere under ``edgesim/``, ``cluster/``, ``fleet/`` or the virtual
+  serving core breaks bit-identical replay (the convergence claims in
+  BENCH_*.json are only as trustworthy as the determinism of the harness
+  that produced them). ``launch/`` and ``benchmarks/`` time the *host*
+  on purpose and are not scanned.
+* ``host-sync-in-hot-path`` — ``.item()`` / ``jax.device_get`` /
+  ``block_until_ready`` / ``np.asarray`` on a traced value inside the
+  train step, the kernels, or the model forward paths forces a device
+  round trip per call (and breaks under jit on values that are tracers).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import Finding, Project, Rule, dotted_name, register_rule
+
+__all__ = ["WallClockInSim", "HostSyncInHotPath"]
+
+# Directories whose code runs on the virtual clock. launch/ and
+# benchmarks/ are deliberately absent: host timing is their job.
+SIM_SCOPES = (
+    "src/repro/edgesim/",
+    "src/repro/cluster/",
+    "src/repro/fleet/",
+    "src/repro/serve/engine.py",
+    "src/repro/serve/cache.py",
+    "src/repro/serve/sync.py",
+)
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+# module-level RNG entry points draw from unseeded global state
+_GLOBAL_RNG_PREFIXES = ("np.random.", "numpy.random.", "random.")
+_GLOBAL_RNG_SEEDED = {
+    "np.random.default_rng", "numpy.random.default_rng",
+    "np.random.SeedSequence", "numpy.random.SeedSequence",
+    "np.random.Generator", "numpy.random.Generator",
+    "random.Random",
+}
+
+HOT_PATHS = (
+    "src/repro/ps/train_step.py",
+    "src/repro/kernels/",
+    "src/repro/models/",
+)
+
+_HOST_SYNC_DOTTED = {"jax.device_get"}
+_HOST_COPY_DOTTED = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+
+
+@register_rule
+class WallClockInSim(Rule):
+    name = "wall-clock-in-sim"
+    severity = "error"
+    description = (
+        "virtual-clock code (edgesim/cluster/fleet/serve core) must not "
+        "read the wall clock or draw from unseeded RNG state"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for sf in project.files_under(*SIM_SCOPES):
+            if sf.tree is None:
+                continue
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                if name in _WALL_CLOCK:
+                    yield self.finding(sf, node, (
+                        f"{name}() reads the wall clock inside virtual-clock "
+                        "code; use the simulator's `now` (or plumb a clock in)"
+                    ))
+                elif name in _GLOBAL_RNG_SEEDED:
+                    if not node.args and not node.keywords:
+                        yield self.finding(sf, node, (
+                            f"{name}() with no seed is nondeterministic; pass "
+                            "an explicit seed/SeedSequence"
+                        ))
+                elif name.startswith(_GLOBAL_RNG_PREFIXES):
+                    yield self.finding(sf, node, (
+                        f"{name}() draws from the unseeded global RNG; use a "
+                        "seeded np.random.default_rng(seed) generator"
+                    ))
+
+
+@register_rule
+class HostSyncInHotPath(Rule):
+    name = "host-sync-in-hot-path"
+    severity = "error"
+    description = (
+        "train step / kernels / model forward paths must not host-sync "
+        "(.item(), jax.device_get, block_until_ready, np.asarray on arrays)"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for sf in project.files_under(*HOT_PATHS):
+            if sf.tree is None:
+                continue
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if isinstance(node.func, ast.Attribute):
+                    attr = node.func.attr
+                    if attr == "item" and not node.args and not node.keywords:
+                        yield self.finding(sf, node, (
+                            ".item() synchronizes device→host per call; "
+                            "compute the scalar in Python (math.*) or keep "
+                            "it on device"
+                        ))
+                        continue
+                    if attr == "block_until_ready":
+                        yield self.finding(sf, node, (
+                            ".block_until_ready() stalls the dispatch "
+                            "pipeline; hot paths must stay async"
+                        ))
+                        continue
+                name = dotted_name(node.func)
+                if name in _HOST_SYNC_DOTTED or (
+                    name is not None and name.endswith(".device_get")
+                ):
+                    yield self.finding(sf, node, (
+                        f"{name}() copies device→host; hot paths must not "
+                        "materialize arrays on host"
+                    ))
+                elif name in _HOST_COPY_DOTTED:
+                    yield self.finding(sf, node, (
+                        f"{name}() forces a host copy (and fails on traced "
+                        "values under jit); use jnp.asarray or restructure"
+                    ))

@@ -737,6 +737,8 @@ class Simulator:
                 pull_bytes=w.pending_pull_nbytes,
                 stale_shards=w.pending_pull_stale,
                 n_shards=self.n_shards,
+                versions=(tuple(self._ps_version) if self.n_shards > 1
+                          else (self.total_commits,)),
             ))
             w.commit_started = -1.0
         if self.n_shards > 1:

@@ -72,6 +72,15 @@ class CommitRecord(MetricRecord):
     pull_bytes: float
     stale_shards: int  # shards the pull actually fetched
     n_shards: int
+    # per-shard PS commit counters the pull reflected, in shard order
+    # (len n_shards; empty for producers that don't track versions).
+    # Element-wise monotone in stream order — the race validator
+    # (repro.analysis.dynamic) checks exactly that.
+    versions: tuple = ()
+
+    def __post_init__(self):
+        if not isinstance(self.versions, tuple):
+            object.__setattr__(self, "versions", tuple(self.versions))
 
 
 @_register("eval")
@@ -179,6 +188,7 @@ class PullRecord(MetricRecord):
 
 def to_dict(rec: MetricRecord) -> dict:
     d = dataclasses.asdict(rec)
+    d = {k: list(v) if isinstance(v, tuple) else v for k, v in d.items()}
     d["kind"] = rec.kind
     return d
 

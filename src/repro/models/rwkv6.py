@@ -18,9 +18,10 @@ chunked form for TPU. Decode carries (state, last_x) and is O(1)/token.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .layers import annotate, dense_init
 
@@ -132,7 +133,7 @@ def rwkv_time_apply(cfg, p, x, rules, impl: str = "scan"):
     prev = _token_shift(x)
     r, k, v, w, g = _streams(p, x, prev, dt)
     r, k, v, w = (_heads(t, n) for t in (r, k, v, w))
-    k = k * (1.0 / np.sqrt(n)).astype(jnp.float32).item()
+    k = k * (1.0 / math.sqrt(n))
     if impl == "pallas":
         from repro.kernels import ops as kops
 
@@ -165,7 +166,7 @@ def rwkv_time_decode(cfg, p, x, state, rules):
     prev = state["last_x_time"].astype(dt)[:, None]
     r, k, v, w, g = _streams(p, x, prev, dt)
     r, k, v, w = (_heads(t, n) for t in (r, k, v, w))
-    k = k * (1.0 / np.sqrt(n)).astype(jnp.float32).item()
+    k = k * (1.0 / math.sqrt(n))
     st = state["wkv"]
     rt, kt, vt, wt = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
     kv = kt[..., :, None] * vt[..., None, :]

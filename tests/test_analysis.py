@@ -1,0 +1,538 @@
+"""repro.analysis (DESIGN.md §15): the reprolint rule catalogue, the
+baseline/inline suppression machinery, the CLI, and the event-trace race
+validator.
+
+Every rule is pinned by a fails-without-fix fixture: a tmp project
+carrying the *pre-fix* form of a bug this repo actually had (the rwkv6
+``.item()`` host syncs, the layers.py broad except, the PR 6 double
+WorkerLeft race) must fire the rule, and the allowlisted/handled twin
+must not. The merged tree itself must be clean under ``--strict`` — that
+is the CI gate this package exists for.
+"""
+
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    BaselineEntry,
+    Finding,
+    Project,
+    get_rule,
+    rule_names,
+    run_rules,
+    validate_jsonl,
+    validate_records,
+)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import find_repo_root
+from repro.cluster import ChurnSchedule, churn, make_policy
+from repro.edgesim import SimConfig, Simulator
+from repro.edgesim.profiles import ratio_profiles
+from repro.edgesim.tasks import svm_task
+from repro.fleet import (
+    ChurnRecord,
+    CommitRecord,
+    FleetConfig,
+    LeaseConfig,
+    LeaseRecord,
+    MetricsLog,
+)
+
+REPO = find_repo_root(pathlib.Path(__file__).resolve())
+
+
+def make_project(tmp_path, files):
+    """A throwaway repo: marker file + the given {rel: source} files."""
+    (tmp_path / "pyproject.toml").write_text("[project]\nname = 'x'\n")
+    paths = []
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+        paths.append(p)
+    return Project(tmp_path, paths)
+
+
+def hits(project, rule_name):
+    return [f for f in run_rules(project, [get_rule(rule_name)])
+            if f.rule == rule_name]
+
+
+# ---------------------------------------------------------------------------
+# rule catalogue
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalogue_complete():
+    assert set(rule_names()) >= {
+        "wall-clock-in-sim", "host-sync-in-hot-path",
+        "handler-exhaustiveness", "registry-parity", "frozen-protocol",
+        "broad-except", "mutable-default", "tracer-branch",
+    }
+    with pytest.raises(KeyError):
+        get_rule("nonexistent-rule")
+
+
+def test_wall_clock_in_sim(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/edgesim/bad.py": """\
+            import time
+            import numpy as np
+
+            def step():
+                t0 = time.time()
+                rng = np.random.default_rng()
+                x = np.random.normal()
+                return t0, rng, x
+            """,
+        # launch/ times the host on purpose: allowlisted by scope
+        "src/repro/launch/timer.py": """\
+            import time
+
+            def wall():
+                return time.time()
+            """,
+        # a *seeded* generator in sim scope is the sanctioned form
+        "src/repro/edgesim/good.py": """\
+            import numpy as np
+
+            def make(seed):
+                return np.random.default_rng(seed)
+            """,
+    })
+    found = hits(project, "wall-clock-in-sim")
+    assert len(found) == 3
+    assert all(f.path == "src/repro/edgesim/bad.py" for f in found)
+    msgs = " ".join(f.message for f in found)
+    assert "time.time" in msgs and "default_rng" in msgs and "global RNG" in msgs
+
+
+def test_host_sync_in_hot_path(tmp_path):
+    project = make_project(tmp_path, {
+        # the exact pre-fix rwkv6 pattern this PR removed
+        "src/repro/models/bad.py": """\
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+
+            def fwd(k, n, x):
+                k = k * (1.0 / np.sqrt(n)).astype(jnp.float32).item()
+                host = jax.device_get(x)
+                x.block_until_ready()
+                return k, np.asarray(host)
+            """,
+        # benchmarks/launch may sync the host freely
+        "src/repro/launch/report.py": """\
+            def wall(x):
+                return x.item()
+            """,
+    })
+    found = hits(project, "host-sync-in-hot-path")
+    assert len(found) == 4
+    assert all(f.path == "src/repro/models/bad.py" for f in found)
+    assert any(".item()" in f.message for f in found)
+
+
+def test_handler_exhaustiveness(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/cluster/protocol.py": """\
+            import dataclasses
+
+            class Event: pass
+            class Command: pass
+
+            @dataclasses.dataclass(frozen=True)
+            class StepDone(Event):
+                t: float
+
+            @dataclasses.dataclass(frozen=True)
+            class Orphan(Event):
+                t: float
+            """,
+        "src/repro/cluster/engine.py": """\
+            from .protocol import StepDone
+
+            def dispatch(ev):
+                if isinstance(ev, StepDone):
+                    return "step"
+                raise TypeError(ev)
+            """,
+    })
+    found = hits(project, "handler-exhaustiveness")
+    assert [f.message.split()[2] for f in found] == ["Orphan"]
+
+
+def test_frozen_protocol(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/cluster/protocol.py": """\
+            import dataclasses
+
+            class Event: pass
+
+            class Mutable(Event):
+                pass
+            """,
+        "src/repro/fleet/metrics.py": """\
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class MetricRecord:
+                t: float
+
+            @dataclasses.dataclass
+            class Unregistered(MetricRecord):
+                x: int
+            """,
+    })
+    found = hits(project, "frozen-protocol")
+    # Mutable: not frozen; Unregistered: not frozen AND not registered
+    assert len(found) == 3
+    assert {f.path for f in found} == {
+        "src/repro/cluster/protocol.py", "src/repro/fleet/metrics.py"}
+
+
+def test_registry_parity(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/ps/rules.py": """\
+            from .registry import register_local_rule
+
+            @register_local_rule("grad_accum", "fused")
+            def fused_impl():
+                pass
+
+            @register_local_rule("momentum_delta", "fused")
+            def ok_fused():
+                pass
+
+            @register_local_rule("momentum_delta", "reference")
+            def ok_ref():
+                pass
+            """,
+        "tests/test_ps.py": """\
+            NAMES = ["momentum_delta"]
+            """,
+    })
+    found = hits(project, "registry-parity")
+    # grad_accum: no reference twin AND no test names it
+    assert len(found) == 2
+    assert all("grad_accum" in f.message for f in found)
+    assert any("no correctness contract" in f.message.replace("\n", " ")
+               or "reference" in f.message for f in found)
+
+
+def test_registry_parity_kernel_ops(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/kernels/ops.py": """\
+            __all__ = ["mystery_op"]
+
+            def mystery_op(x):
+                return x
+            """,
+        "src/repro/kernels/ref.py": """\
+            def other(x):
+                return x
+            """,
+    })
+    found = hits(project, "registry-parity")
+    assert len(found) == 2  # no reference twin, no test reference
+    assert all("mystery_op" in f.message for f in found)
+
+
+def test_broad_except(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/util.py": """\
+            def swallow():
+                try:
+                    work()
+                except Exception:
+                    return None
+
+            def bare():
+                try:
+                    work()
+                except:
+                    pass
+
+            def reraises():
+                try:
+                    work()
+                except Exception:
+                    raise
+
+            def records(log):
+                try:
+                    work()
+                except Exception as e:
+                    log(type(e).__name__)
+
+            def narrow():
+                try:
+                    work()
+                except ValueError:
+                    return None
+            """,
+    })
+    found = hits(project, "broad-except")
+    assert len(found) == 2
+    assert {f.line for f in found} == {4, 10}
+
+
+def test_mutable_default(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/cfg.py": """\
+            import dataclasses
+
+            def f(xs=[]):
+                return xs
+
+            def g(m={}, *, s=set()):
+                return m, s
+
+            def ok(xs=None, n=3, name="x"):
+                return xs
+
+            @dataclasses.dataclass
+            class Cfg:
+                tags: dict = {}
+                n: int = 0
+            """,
+    })
+    found = hits(project, "mutable-default")
+    assert len(found) == 4
+    assert any("default_factory" in f.message for f in found)
+
+
+def test_tracer_branch(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/kernels/bad.py": """\
+            def kernel(x_ref, o_ref, *, causal=True):
+                v = x_ref[0]
+                scaled = v * 2.0
+                if scaled > 0:
+                    o_ref[0] = scaled
+                while v:
+                    v = v - 1
+                if causal:
+                    o_ref[0] = 0.0
+            """,
+        # same code outside kernels/ is not in scope
+        "src/repro/models/host.py": """\
+            def f(x_ref):
+                v = x_ref[0]
+                if v > 0:
+                    return v
+            """,
+    })
+    found = hits(project, "tracer-branch")
+    assert len(found) == 2  # `if scaled` and `while v`; `if causal:` is fine
+    assert all(f.path == "src/repro/kernels/bad.py" for f in found)
+    assert {f.line for f in found} == {4, 6}
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/broken.py": "def f(:\n",
+    })
+    found = run_rules(project)
+    assert [f.rule for f in found] == ["parse_error"]
+    assert found[0].severity == "error"
+
+
+# ---------------------------------------------------------------------------
+# suppression: inline + baseline
+# ---------------------------------------------------------------------------
+
+
+def test_inline_ignore(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/edgesim/t.py": """\
+            import time
+
+            a = time.time()  # reprolint: ignore[wall-clock-in-sim]
+            b = time.time()  # reprolint: ignore
+            c = time.time()  # reprolint: ignore[other-rule]
+            d = time.time()
+            """,
+    })
+    found = hits(project, "wall-clock-in-sim")
+    assert {f.line for f in found} == {5, 6}  # c (wrong rule) and d
+
+
+def test_baseline_round_trip_and_staleness(tmp_path):
+    f1 = Finding(rule="r", severity="error", path="a.py", line=3, message="m1")
+    f2 = Finding(rule="r", severity="error", path="a.py", line=9, message="m2")
+    bl = Baseline([BaselineEntry.from_finding(f1, "known, tracked in #7")])
+    path = tmp_path / "baseline.json"
+    bl.save(path)
+    loaded = Baseline.load(path)
+    assert loaded.entries == bl.entries
+    assert loaded.entries[0].justification == "known, tracked in #7"
+
+    kept, suppressed, stale = loaded.apply([f1, f2])
+    assert kept == [f2] and suppressed == [f1] and stale == []
+    # the suppression keys off (rule, path, message) — not the line
+    moved = Finding(rule="r", severity="error", path="a.py", line=99, message="m1")
+    kept, suppressed, _ = loaded.apply([moved, f2])
+    assert suppressed == [moved]
+    # nothing matching m1 anymore → the entry is stale
+    _, _, stale = loaded.apply([f2])
+    assert [e.message for e in stale] == ["m1"]
+
+    assert Baseline.load(tmp_path / "missing.json").entries == []
+    (tmp_path / "bad.json").write_text("[]")
+    with pytest.raises(ValueError):
+        Baseline.load(tmp_path / "bad.json")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_json_strict_and_baseline_flow(tmp_path, capsys):
+    make_project(tmp_path, {
+        "src/repro/edgesim/t.py": """\
+            import time
+
+            now = time.time()
+            """,
+    })
+    src = str(tmp_path / "src")
+
+    # findings present → exit 1, JSON carries them
+    out_json = tmp_path / "report.json"
+    assert cli_main([src, "--json", str(out_json)]) == 1
+    report = json.loads(out_json.read_text())
+    assert [f["rule"] for f in report["findings"]] == ["wall-clock-in-sim"]
+    assert report["suppressed"] == [] and report["stale_baseline"] == []
+    capsys.readouterr()
+
+    # --update-baseline suppresses them; the gate goes green
+    assert cli_main([src, "--update-baseline"]) == 0
+    assert cli_main([src, "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "OK:" in out and "1 baseline-suppressed" in out
+
+    # fixing the code strands the entry: plain run warns, --strict fails
+    (tmp_path / "src/repro/edgesim/t.py").write_text("now = 0.0\n")
+    assert cli_main([src]) == 0
+    assert cli_main([src, "--strict"]) == 1
+
+
+def test_repo_is_clean_under_strict():
+    """The merged tree passes its own gate: zero unsuppressed findings
+    and zero stale baseline entries over src/benchmarks/tools."""
+    paths = [str(REPO / p) for p in ("src", "benchmarks", "tools")]
+    assert cli_main([*paths, "--strict"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# dynamic: event-trace race validator
+# ---------------------------------------------------------------------------
+
+
+def _commit(t, worker=0, versions=(), n_shards=1):
+    return CommitRecord(t=t, worker=worker, latency=0.1, push_bytes=8.0,
+                        pull_bytes=8.0, stale_shards=1,
+                        n_shards=n_shards or len(versions), versions=versions)
+
+
+def test_validator_clean_synthetic_trace():
+    records = [
+        ChurnRecord(t=0.0, worker=0, event="join", discovered=False),
+        _commit(1.0, worker=0, versions=(1,)),
+        _commit(2.0, worker=0, versions=(2,)),
+        ChurnRecord(t=3.0, worker=0, event="leave", discovered=True),
+        ChurnRecord(t=5.0, worker=0, event="join", discovered=True),
+        _commit(6.0, worker=0, versions=(3,)),
+    ]
+    assert validate_records(records) == []
+
+
+def test_validator_catches_each_injected_race():
+    clock = [_commit(2.0), _commit(1.0)]
+    assert [v.check for v in validate_records(clock)] == ["clock"]
+
+    double_leave = [
+        ChurnRecord(t=1.0, worker=3, event="leave", discovered=True),
+        ChurnRecord(t=1.0, worker=3, event="leave", discovered=False),
+    ]
+    vs = validate_records(double_leave)
+    assert [v.check for v in vs] == ["dedupe"] and vs[0].worker == 3
+
+    stale_gen = [
+        ChurnRecord(t=1.0, worker=2, event="leave", discovered=True),
+        _commit(2.0, worker=2),
+    ]
+    assert [v.check for v in validate_records(stale_gen)] == ["stale-gen"]
+
+    regress = [
+        _commit(1.0, versions=(3, 4), n_shards=2),
+        _commit(2.0, versions=(2, 5), n_shards=2),
+    ]
+    vs = validate_records(regress)
+    assert [v.check for v in vs] == ["shard-version"]
+    assert "shard 0" in vs[0].message
+
+    short = [_commit(1.0, versions=(3,), n_shards=2)]
+    assert [v.check for v in validate_records(short)] == ["shard-version"]
+
+
+def test_validator_lease_rejoin_is_not_a_race():
+    """The lease layer legitimately reports on dead workers (expired /
+    rejoined); only commit/capability/assign in the dead window count."""
+    records = [
+        ChurnRecord(t=1.0, worker=0, event="leave", discovered=True),
+        LeaseRecord(t=2.0, worker=0, event="expired"),
+        LeaseRecord(t=4.0, worker=0, event="rejoined"),
+        ChurnRecord(t=4.0, worker=0, event="join", discovered=True),
+        _commit(5.0, worker=0),
+    ]
+    assert validate_records(records) == []
+
+
+def test_validator_jsonl_round_trip(tmp_path):
+    log = MetricsLog.from_records([
+        _commit(1.0, versions=(1, 1), n_shards=2),
+        _commit(2.0, versions=(1, 2), n_shards=2),
+        _commit(3.0, versions=(0, 2), n_shards=2),  # shard 0 regressed
+    ])
+    path = tmp_path / "trace.jsonl"
+    log.to_jsonl(path)
+    vs = validate_jsonl(path)
+    assert [v.check for v in vs] == ["shard-version"] and vs[0].index == 2
+
+
+def test_validator_green_on_real_lease_run(tmp_path):
+    """End to end: the PR 6 race scenario (scripted leave racing a lease
+    expiry) through the real simulator produces a trace the validator
+    accepts — and an injected duplicate WorkerLeft in that same trace is
+    caught."""
+    profiles = ratio_profiles((1.0, 1.0, 1.0), base_v=1.0, o=0.2)
+    cfg = SimConfig(gamma=20.0, epoch_seconds=200.0, base_batch=32,
+                    max_seconds=300.0, local_lr=0.05)
+    log = MetricsLog()
+    sim = Simulator(svm_task(3), profiles, make_policy("bsp"), cfg,
+                    churn=ChurnSchedule([churn.stall(30.0, 1),
+                                         churn.leave(34.0, 1)]),
+                    fleet=FleetConfig(
+                        lease=LeaseConfig(ttl=6.0, heartbeat_period=2.0)),
+                    metrics=log)
+    sim.train()
+    assert len(log) > 0
+    assert [r for r in log.of("churn") if r.event == "leave"]
+    assert validate_records(log.records) == []
+
+    path = tmp_path / "trace.jsonl"
+    log.to_jsonl(path)
+    assert validate_jsonl(path) == []
+
+    leave = next(r for r in log.records
+                 if r.kind == "churn" and r.event == "leave")
+    injected = list(log.records)
+    injected.insert(injected.index(leave) + 1, leave)
+    assert "dedupe" in {v.check for v in validate_records(injected)}

@@ -116,6 +116,31 @@ def test_error_feedback_recovers_lost_mass(update_tree):
         assert_allclose(np.asarray(a), 8 * np.asarray(u), atol=0.02, rtol=0.01)
 
 
+def test_codec_kernel_ops_match_plain_math(update_tree):
+    """The per-array kernel ops behind the fused codecs — quantize_int8,
+    dequantize_int8, encode_bf16 — against their plain-jnp definitions."""
+    from repro.kernels import ops
+
+    x = jax.tree.leaves(update_tree)[0]
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    q, res = ops.quantize_int8(x, scale)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    expect_q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    assert_array_equal(np.asarray(q), np.asarray(expect_q))
+    dec = ops.dequantize_int8(q, scale)
+    assert_allclose(np.asarray(dec), np.asarray(q, np.float32) * scale,
+                    atol=1e-6, rtol=1e-6)
+    # residual carries exactly what the round trip lost
+    assert_allclose(np.asarray(dec) + np.asarray(res), np.asarray(x),
+                    atol=1e-6, rtol=1e-6)
+
+    qb, rb = ops.encode_bf16(x)
+    assert qb.dtype == jnp.bfloat16 and qb.shape == x.shape
+    assert_array_equal(np.asarray(qb), np.asarray(x.astype(jnp.bfloat16)))
+    assert_allclose(np.asarray(qb, np.float32) + np.asarray(rb),
+                    np.asarray(x), atol=1e-6, rtol=1e-6)
+
+
 @pytest.mark.parametrize("name", ["int8", "bf16"])
 def test_fused_matches_reference_encode_decode(update_tree, name):
     ref = get_codec(name, backend="reference")

@@ -1,0 +1,95 @@
+"""Summarize a reprolint run: findings grouped by rule and severity.
+
+Usage::
+
+    PYTHONPATH=src python tools/analysis_report.py            # run in-process
+    PYTHONPATH=src python tools/analysis_report.py report.json  # from --json
+
+With no argument the analyzer runs in-process over the default scan set
+(src/benchmarks/tools) and applies the committed baseline; with an
+argument it consumes the JSON written by ``python -m repro.analysis
+--json report.json`` (so CI can report on the exact gate run). Either
+way the report shows per-rule counts, the affected files, and what the
+baseline is currently suppressing — the view you want when deciding
+whether to fix or justify.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from collections import Counter
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis import Baseline, DEFAULT_BASELINE, all_rules, analyze  # noqa: E402
+
+
+def _load(path: str | None) -> dict:
+    if path is not None:
+        return json.loads(pathlib.Path(path).read_text())
+    project, findings = analyze()
+    baseline = Baseline.load(project.root / DEFAULT_BASELINE)
+    kept, suppressed, stale = baseline.apply(findings)
+    return {
+        "root": str(project.root),
+        "findings": [f.to_dict() for f in kept],
+        "suppressed": [f.to_dict() for f in suppressed],
+        "stale_baseline": [e.to_dict() for e in stale],
+    }
+
+
+def report(data: dict) -> list[str]:
+    lines: list[str] = []
+    findings = data.get("findings", [])
+    suppressed = data.get("suppressed", [])
+    stale = data.get("stale_baseline", [])
+    severity = {r.name: r.severity for r in all_rules()}
+
+    lines.append("== reprolint report ==")
+    lines.append(f"findings: {len(findings)} live, {len(suppressed)} "
+                 f"baseline-suppressed, {len(stale)} stale baseline entr(y/ies)")
+
+    by_rule = Counter(f["rule"] for f in findings)
+    if by_rule:
+        lines.append("")
+        lines.append("-- by rule --")
+        for rule, n in by_rule.most_common():
+            lines.append(f"{rule:24s} {severity.get(rule, '?'):8s} {n}")
+        lines.append("")
+        lines.append("-- by file --")
+        per_file = Counter(f["path"] for f in findings)
+        for path, n in per_file.most_common():
+            rules = sorted({f["rule"] for f in findings if f["path"] == path})
+            lines.append(f"{path}: {n} ({', '.join(rules)})")
+    else:
+        lines.append("no live findings")
+
+    if suppressed:
+        lines.append("")
+        lines.append("-- baseline-suppressed --")
+        for f in suppressed:
+            lines.append(f"{f['path']}:{f['line']}: [{f['rule']}] {f['message']}")
+    if stale:
+        lines.append("")
+        lines.append("-- stale baseline entries (delete these) --")
+        for e in stale:
+            lines.append(f"[{e['rule']}] {e['path']}: {e['message']}")
+    return lines
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("report", nargs="?", default=None,
+                   help="JSON from `python -m repro.analysis --json` "
+                        "(default: run the analyzer in-process)")
+    args = p.parse_args(argv)
+    for line in report(_load(args.report)):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
