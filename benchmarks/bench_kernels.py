@@ -4,24 +4,13 @@ table carries those)."""
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
 
-from .common import row
-
-
-def _time(fn, *args, iters=3):
-    fn(*args)  # compile/warm
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+from .common import row, time_fn as _time
 
 
 def main(full: bool = False) -> list[str]:
@@ -62,7 +51,55 @@ def main(full: bool = False) -> list[str]:
     t = _time(lambda *x: ops.ps_apply_tree(*x, 0.1, 0.9)[0], tree, d0, g)
     rows.append(row("kernels/fused_ps_apply", t, 1.0, elems=1 << 16))
     rows.extend(_bench_train_step_backends())
+    rows.extend(_bench_fused_commit_round())
     return rows
+
+
+def _bench_fused_commit_round() -> list[str]:
+    """The PS pull side of one commit round, chain vs fused (§16): the
+    chain is two host dispatches (codec decode, then commit apply); the
+    combined ``momentum_delta@int8`` rule is one. ``fused_commit_speedup``
+    is a within-run host-time ratio — both sides run in the same process
+    seconds apart, so machine speed cancels and CI can gate on it."""
+    from repro.ps import CommitConfig, get_commit_rule
+    from repro.transport import get_codec
+
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    w = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    u = jax.tree.map(lambda x: x * 0.05 + 0.01, w)
+    cfg = CommitConfig(tau=1, global_lr=0.7, worker_axes=())
+    codec = get_codec("int8", backend="reference")
+    enc, _ = jax.jit(codec.encode)(u, jax.tree.map(jnp.zeros_like, u))
+    jax.block_until_ready(enc)
+    chain_rule = get_commit_rule("momentum_delta", cfg, backend="fused")
+    fused_rule = get_commit_rule("momentum_delta@int8", cfg, backend="fused")
+    cstate = chain_rule.init(w)
+    decode = jax.jit(lambda e: codec.decode(e, w))
+    apply_chain = jax.jit(lambda p, c, uu: chain_rule.apply(p, c, uu, 0.9))
+    apply_fused = jax.jit(lambda p, c, e: fused_rule.apply(p, c, e, 0.9))
+
+    dispatches = {"ref": 0, "fused": 0}
+
+    def ref_round():
+        dispatches["ref"] += 2
+        return apply_chain(w, cstate, decode(enc))
+
+    def fused_round():
+        dispatches["fused"] += 1
+        return apply_fused(w, cstate, enc)
+
+    t_ref = _time(ref_round, iters=5)
+    n_ref = dispatches["ref"] / (5 + 1)  # warmup + timed calls
+    t_fused = _time(fused_round, iters=5)
+    n_fused = dispatches["fused"] / (5 + 1)
+    return [row(
+        "kernels/fused_commit_round", t_fused, 1.0,
+        fused_commit_speedup=t_ref / t_fused,
+        dispatch_speedup=n_ref / n_fused,
+        dispatches_ref=n_ref, dispatches_fused=n_fused,
+        elems=n,
+    )]
 
 
 def _bench_train_step_backends() -> list[str]:

@@ -30,6 +30,24 @@ TARGET_LOSS = 0.6
 MAX_SECONDS = 4000.0
 
 
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Time ``fn(*args)``: ``warmup`` untimed calls absorb compilation and
+    cache population, then ``iters`` timed calls each bracketed by
+    ``jax.block_until_ready`` so JAX's async dispatch can't push device
+    work past the clock. Returns mean seconds per call."""
+    import jax
+
+    out = None
+    for _ in range(max(warmup, 1)):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
 def default_policy(name: str, **kw):
     if name == "adsp":
         kw.setdefault("gamma", GAMMA)

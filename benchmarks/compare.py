@@ -14,6 +14,10 @@ Rows are matched by name. Two classes of checks:
     direction: keys containing ``t_conv``/``ratio``/``waiting`` must not
     rise by more than ``--threshold`` (default 20 %); keys containing
     ``speedup`` must not fall by more than it.
+  * **Threshold gates** — keys in ``THRESHOLD_GATES`` must clear an
+    absolute floor in the *current* snapshot (e.g. the §16 fused commit
+    must stay ≥1.15× the chain). These are within-run ratios, so machine
+    speed cancels out of them.
 
 ``us_per_call`` (and other host-time quantities) are machine-dependent —
 they are reported as info lines but never fail the comparison, so a CI
@@ -38,6 +42,15 @@ GATE_KEYS = {
     "under_10s", "before_epoch_end", "drift_no_later", "roundtrip_ok",
     "stalled", "continuous_beats_static_p99",
     "version_tracking_loss_improves", "partial_lt_full", "race_ok",
+    "overlap_matches",
+}
+# derived keys gated against an absolute floor in the CURRENT snapshot
+# (not baseline-relative). fused_commit_speedup is a within-run host-time
+# ratio — both sides of the division ran in the same process, so machine
+# speed cancels and the floor can't be tripped by a slow CI runner.
+THRESHOLD_GATES = {
+    "fused_commit_speedup": 1.15,
+    "dispatch_speedup": 1.15,
 }
 LOWER_BETTER = ("t_conv", "ratio", "waiting", "probes")
 HIGHER_BETTER = ("speedup",)
@@ -76,6 +89,14 @@ def compare(baseline: pathlib.Path, current: pathlib.Path,
                 if bv >= 1.0 > cv:
                     regressions.append(
                         f"{name}: gate {key} dropped {bv:g} -> {cv:g}")
+                continue
+            if key in THRESHOLD_GATES:
+                floor = THRESHOLD_GATES[key]
+                if cv < floor:
+                    regressions.append(
+                        f"{name}: {key} {cv:g} below required {floor:g}")
+                elif cv != bv:
+                    info.append(f"{name}: {key} {bv:g} -> {cv:g}")
                 continue
             if any(s in key for s in LOWER_BETTER):
                 if math.isfinite(bv) and cv > bv * (1.0 + threshold):

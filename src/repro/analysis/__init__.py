@@ -27,7 +27,7 @@ from .baseline import Baseline, BaselineEntry, DEFAULT_BASELINE
 from .cli import analyze, main
 
 # importing the rule modules populates the registry
-from . import hygiene, parity, protocol_rules, purity  # noqa: F401
+from . import commit_fusion, hygiene, parity, protocol_rules, purity  # noqa: F401
 
 _DYNAMIC = ("Violation", "validate_records", "validate_jsonl")
 

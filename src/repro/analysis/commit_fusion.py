@@ -1,0 +1,84 @@
+"""separate-dispatch-in-commit-path: the commit hot loop should not
+decode a codec payload and then apply the commit rule as two separate
+calls — the combined decode+apply rules (``repro.ps.fused_codec``,
+DESIGN.md §16) exist exactly so the PS never materializes the dense
+update between the two passes.
+
+Scope is deliberately narrow: the train-step builders
+(``ps/train_step.py``, ``launch/steps.py``) — the two files that
+assemble the commit path. A function that mentions ``fused`` anywhere in
+its body is taken to be fusion-aware (it either routes through the
+combined rule or deliberately falls back) and is not flagged; the rule
+is a *warning* because the chain is still the correctness contract and
+legitimate in non-fusable configurations.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import Finding, Project, Rule, SourceFile, dotted_name, register_rule
+
+__all__ = ["SeparateDispatchInCommitPath"]
+
+_SCOPE_BASENAMES = ("train_step.py", "steps.py")
+
+
+def _calls_matching(fn: ast.AST, stem: str) -> list[ast.Call]:
+    """Call nodes under ``fn`` whose callee's last segment contains
+    ``stem``. Nested defs are included — each also gets its own scope
+    pass, and the enclosing function's ``fused`` text check covers both."""
+    out: list[ast.Call] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name is not None and stem in name.rsplit(".", 1)[-1]:
+                out.append(node)
+    return out
+
+
+def _function_scopes(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _segment_text(sf: SourceFile, node: ast.AST) -> str:
+    lines = sf.text.splitlines()
+    end = getattr(node, "end_lineno", node.lineno)
+    return "\n".join(lines[node.lineno - 1:end])
+
+
+@register_rule
+class SeparateDispatchInCommitPath(Rule):
+    name = "separate-dispatch-in-commit-path"
+    severity = "warning"
+    description = (
+        "codec decode followed by commit apply as two calls in the "
+        "commit path where a combined decode+apply rule is available"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for sf in project.files_under("src/"):
+            if sf.tree is None:
+                continue
+            if not any(sf.rel.endswith(b) for b in _SCOPE_BASENAMES):
+                continue
+            for fn in _function_scopes(sf.tree):
+                text = _segment_text(sf, fn)
+                if "fused" in text:
+                    continue  # fusion-aware: routes or falls back on purpose
+                decodes = _calls_matching(fn, "decode")
+                applies = _calls_matching(fn, "apply")
+                if not decodes or not applies:
+                    continue
+                first_dec = min(decodes, key=lambda c: c.lineno)
+                if any(a.lineno >= first_dec.lineno for a in applies):
+                    yield self.finding(sf, first_dec.lineno, (
+                        f"function {fn.name!r} decodes the codec payload "
+                        "and applies the commit rule as two dispatches; "
+                        "the combined decode+apply rules in "
+                        "repro.ps.fused_codec (§16) do both in one pass — "
+                        "route through them or mark the fallback fused-aware"
+                    ))

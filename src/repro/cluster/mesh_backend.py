@@ -37,7 +37,14 @@ from jax.sharding import PartitionSpec as P
 from repro.control import theory
 from repro.control.theory import WorkerProfile
 from repro.fleet import CommitRecord, EvalRecord, FleetConfig, FleetMonitor
-from repro.ps import CommitConfig, UpdateRules, make_train_step
+from repro.ps import (
+    AdspState,
+    CommitConfig,
+    ShardPlan,
+    UpdateRules,
+    make_local_update,
+    make_train_step,
+)
 from repro.transport import Codec, dense_nbytes, get_codec
 
 from .engine import ClusterEngine
@@ -92,6 +99,8 @@ class MeshBackend:
         explicit_momentum: float = 0.0,
         codec: str | Codec | None = None,
         n_shards: int = 1,
+        fused_commit: bool = False,
+        overlap_shards: bool = False,
         fleet: FleetConfig | None = None,
         metrics=None,
     ):
@@ -130,15 +139,37 @@ class MeshBackend:
             batch_spec=batch_spec,
             explicit_momentum=explicit_momentum,
             codec=codec,
+            fused_commit=fused_commit,
         )
         self.rules = step.rules
         self.codec = step.codec
-        self.step_fn = jax.jit(step)
-        self.state = step.init(task.init_params)
+        self.fused_commit = step.fused_commit
+        # the round's state is dead the moment the new one lands: donate
+        # it so params/commit/transport buffers are updated in place.
+        # Donated buffers are consumed — init from a private copy of the
+        # params so the caller's init_params tree stays valid.
+        self.step_fn = jax.jit(step, donate_argnums=step.donate_argnums)
+        self.state = step.init(jax.tree.map(jnp.array, task.init_params))
         # effective shard count: the plan clamps to the leaf count, and
         # the state's version vector is the ground truth for what ran
         versions = jax.tree.leaves(self.state.shard_versions)
         self.n_shards = int(versions[0].shape[0]) if versions else 1
+        # Overlapped per-shard commit (DESIGN.md §16): split the round
+        # into one push phase (local scan + encode) and K per-shard
+        # decode+apply dispatches issued back-to-back with NO host sync
+        # between them — shard k+1's transfer is in flight while shard
+        # k's apply runs, exactly the simulator's FIFO pull pipeline.
+        # Bit-identical to the monolithic step (the per-shard applies
+        # are the same leaf-wise ops make_sharded_apply runs in one jit);
+        # only valid where the fused commit is (single worker — with one
+        # worker the axes-path shard_map degenerates to the plain jit
+        # the push phase uses, so the split round stays exact).
+        self.overlap_shards = bool(
+            overlap_shards and step.fused_commit and self.n_shards > 1
+            and n_workers == 1
+        )
+        if self.overlap_shards:
+            self._init_overlap(step, ccfg, explicit_momentum)
         # Wire accounting: bytes each commit round moves worker→PS (every
         # worker ships one encoded update per round). Measured from the
         # codec's static payload size; the identity/no-codec round ships
@@ -153,6 +184,77 @@ class MeshBackend:
         if self.fleet is not None:
             for w in self.workers:
                 self.fleet.join(w.index, 0.0, w.profile)
+
+    # ------------------------------------------------------- overlapped commit
+    def _init_overlap(self, step, ccfg, explicit_momentum: float) -> None:
+        from repro.ps import get_commit_rule
+        from repro.ps.fused_codec import fused_commit_name
+
+        local_rule, commit_rule = step.rules
+        codec = step.codec
+        fused_rule = get_commit_rule(
+            fused_commit_name(commit_rule.name, codec.name), ccfg,
+            backend=commit_rule.backend,
+        )
+
+        run = make_local_update(self.task.loss_fn, ccfg, local_rule)
+
+        def push(params, lstate, tstate, microbatches, tau_i):
+            ls0 = jax.tree.map(lambda x: x[0], lstate)
+            u, ls1, loss = run(params, ls0, microbatches, tau_i)
+            ts0 = jax.tree.map(lambda x: x[0], tstate)
+            enc, ts1 = codec.encode(u, ts0)
+            return (enc, jax.tree.map(lambda x: x[None], ls1),
+                    jax.tree.map(lambda x: x[None], ts1), loss)
+
+        def pull(p_k, c_k, e_k):
+            return fused_rule.apply(p_k, c_k, e_k, explicit_momentum)
+
+        # local/transport slots die with the round: donate them; params
+        # feed the per-shard pulls so they are donated there instead
+        # (each leaf belongs to exactly one shard). One compiled pull
+        # variant per shard shape; K stays small.
+        self._push_fn = jax.jit(push, donate_argnums=(1, 2))
+        self._pull_fn = jax.jit(pull, donate_argnums=(0, 1))
+        self._plan = ShardPlan.build(self.state.params, self.n_shards)
+        self._is_payload = fused_rule.is_payload
+
+    def _commit_overlapped(self, mbs, tau_arr):
+        """One commit round as push + K per-shard pulls, dispatched with
+        no host sync in between: shard k+1's payload transfer is issued
+        while shard k's fused decode+apply runs (the device queue
+        pipelines them), mirroring the edgesim's FIFO pull pipeline.
+        ``run_round`` syncs once at the round boundary via the loss."""
+        st = self.state
+        tau_i = jnp.asarray(int(tau_arr[0]), jnp.int32)
+        enc, lstate, tstate, loss = self._push_fn(
+            st.params, st.local_state, st.transport_state, mbs, tau_i)
+        p_leaves, treedef = jax.tree.flatten(st.params)
+        c_leaves = jax.tree.leaves(st.commit_state)
+        e_leaves, _ = jax.tree_util.tree_flatten(enc, is_leaf=self._is_payload)
+        new_p = list(p_leaves)
+        new_c = list(c_leaves)
+        for k in range(self._plan.n_shards):
+            idx = self._plan.shard_leaf_indices(k)
+            np_k, nc_k = self._pull_fn(
+                [p_leaves[i] for i in idx],
+                [c_leaves[i] for i in idx] if c_leaves else (),
+                [e_leaves[i] for i in idx],
+            )
+            for i, leaf in zip(idx, np_k):
+                new_p[i] = leaf
+            if c_leaves:
+                for i, leaf in zip(idx, nc_k):
+                    new_c[i] = leaf
+        params = jax.tree.unflatten(treedef, new_p)
+        cstate = (jax.tree.unflatten(treedef, new_c) if c_leaves
+                  else st.commit_state)
+        versions = st.shard_versions
+        if jax.tree.leaves(versions):
+            versions = versions + 1
+        self.state = AdspState(params, cstate, lstate, st.step + 1,
+                               tstate, versions)
+        return loss
 
     # ------------------------------------------------------------ backend API
     def bind(self, engine: ClusterEngine) -> None:
@@ -210,7 +312,11 @@ class MeshBackend:
         self._ensure_started()
         tau_arr = self.tau_per_worker()
         mbs = self.task.make_microbatches(self._round, self.tau, len(self.workers))
-        self.state, loss = self.step_fn(self.state, mbs, jnp.asarray(tau_arr, jnp.int32))
+        if self.overlap_shards:
+            loss = self._commit_overlapped(mbs, tau_arr)
+        else:
+            self.state, loss = self.step_fn(
+                self.state, mbs, jnp.asarray(tau_arr, jnp.int32))
         self._round += 1
         self.now = self._round * self.round_seconds
         self.bytes_to_ps += self.bytes_per_round

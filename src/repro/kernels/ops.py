@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from . import codec as _cd
 from . import flash_attention as _fa
+from . import fused_codec_commit as _fcc
 from . import fused_commit as _fc
 from . import rglru_scan as _rg
 from . import rwkv6_scan as _rw
@@ -30,6 +31,12 @@ __all__ = [
     "quantize_int8",
     "dequantize_int8",
     "encode_bf16",
+    "quantize_int8_ef",
+    "encode_bf16_ef",
+    "int8_decode_apply",
+    "bf16_decode_apply",
+    "int8_decode_accum",
+    "bf16_decode_accum",
     "default_interpret",
 ]
 
@@ -83,19 +90,52 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
     """(B, S, Hq, D) GQA flash attention; pads S to a block multiple.
 
     Padding queries attend only to padding keys (causal mask handles the
-    real→pad direction; pad-query outputs are sliced off)."""
+    real→pad direction; pad-query outputs are sliced off).
+
+    Differentiable: the Pallas call carries no autodiff rule, so the
+    backward recomputes through the reference attention (custom_vjp) —
+    the train path can use the kernel forward today; a fused backward
+    kernel is future work."""
+    return _fa_vjp(q, k, v, causal, window, block_q, block_k,
+                   _interp(interpret))
+
+
+def _fa_primal(q, k, v, causal, window, block_q, block_k, interpret):
     s = q.shape[1]
     bq = min(block_q, max(s, 16))
     bk = min(block_k, max(s, 16))
     mult = max(bq, bk)
-    qp, pad = _pad_to(q, 1, mult)
+    qp, _ = _pad_to(q, 1, mult)
     kp, _ = _pad_to(k, 1, mult)
     vp, _ = _pad_to(v, 1, mult)
     out = _fa.flash_attention(
         qp, kp, vp, causal=causal, window=window,
-        block_q=bq, block_k=bk, interpret=_interp(interpret),
+        block_q=bq, block_k=bk, interpret=interpret,
     )
     return out[:, :s]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa_vjp(q, k, v, causal, window, block_q, block_k, interpret):
+    return _fa_primal(q, k, v, causal, window, block_q, block_k, interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    return (_fa_primal(q, k, v, causal, window, block_q, block_k, interpret),
+            (q, k, v))
+
+
+def _fa_bwd(causal, window, block_q, block_k, interpret, res, g):
+    from . import ref as _ref  # lazy: ref is the autodiff twin, not a dep
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention(
+            q_, k_, v_, causal=causal, window=window), q, k, v)
+    return vjp(g)
+
+
+_fa_vjp.defvjp(_fa_fwd, _fa_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -142,20 +182,27 @@ def rwkv6_scan(r, k, v, w, bonus, *, block_s=256, interpret=None):
 
 def _as_tiles(x, blk=None):
     """Flatten to block-aligned 2-D (dtype-dependent sublane count, or an
-    explicit ``blk``); returns (tiled, orig_size)."""
+    explicit ``blk``); returns (tiled, orig_size). A leaf that is already
+    a tile-aligned 2-D buffer passes through untouched — no pad, no
+    reshape, no copy (tests pin this by object identity)."""
     if blk is None:
         blk = _fc.block_for(x.dtype)
-    flat = x.reshape(-1)
-    n = flat.shape[0]
+    n = x.size
     cols = blk[1]
     rows = -(-n // cols)
-    rows_pad = (-rows) % blk[0]
-    total = (rows + rows_pad) * cols
-    flat = jnp.pad(flat, (0, total - n))
-    return flat.reshape(rows + rows_pad, cols), n
+    rows += (-rows) % blk[0]
+    if x.ndim == 2 and x.shape == (rows, cols):
+        return x, n
+    flat = x.reshape(-1)
+    total = rows * cols
+    if total != n:  # pad only ragged tails — aligned sizes skip the copy
+        flat = jnp.pad(flat, (0, total - n))
+    return flat.reshape(rows, cols), n
 
 
 def _from_tiles(t, n, shape, dtype):
+    if t.shape == tuple(shape) and t.dtype == jnp.dtype(dtype):
+        return t  # tile-aligned round trip: hand the buffer back as-is
     return t.reshape(-1)[:n].reshape(shape).astype(dtype)
 
 
@@ -233,3 +280,104 @@ def encode_bf16(x, *, interpret=None):
         _from_tiles(q, n, x.shape, jnp.bfloat16),
         _from_tiles(r, n, x.shape, jnp.float32),
     )
+
+
+# ---------------------------------------------------------------------------
+# fused codec+commit passes (DESIGN.md §16): push-side encode with the
+# error-feedback add folded in; pull-side decode fused with the PS apply
+# ---------------------------------------------------------------------------
+
+def _hp2(momentum, global_lr):
+    return jnp.stack([
+        jnp.asarray(momentum, jnp.float32),
+        jnp.asarray(global_lr, jnp.float32),
+    ]).reshape(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8_ef(u, r, scale, *, interpret=None):
+    """Error-feedback int8 encode of one array in a single pass:
+    e = u + r is formed in-register (never written to HBM), quantized
+    with the given positive scalar ``scale``, and the next residual
+    e − q·scale comes out of the same pass."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(u.astype(jnp.float32), _cd.QBLOCK)
+    rt, _ = _as_tiles(r, _cd.QBLOCK)
+    s = jnp.full((1, 1), scale, jnp.float32)
+    q, res = _fcc.quantize_int8_ef(t, rt, s, interpret=interp)
+    return (
+        _from_tiles(q, n, u.shape, jnp.int8),
+        _from_tiles(res, n, u.shape, jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode_bf16_ef(u, r, *, interpret=None):
+    """Error-feedback bf16 encode: e = u + r cast and residualized in one
+    pass, without materializing e."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(u.astype(jnp.float32), _cd.QBLOCK)
+    rt, _ = _as_tiles(r, _cd.QBLOCK)
+    q, res = _fcc.encode_bf16_ef(t, rt, interpret=interp)
+    return (
+        _from_tiles(q, n, u.shape, jnp.bfloat16),
+        _from_tiles(res, n, u.shape, jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_decode_apply(w, prev_delta, q, scale, global_lr, momentum, *,
+                      interpret=None):
+    """Fused PS pull for an int8 payload: dequantize + Eqn. 1 apply in
+    one pass. Returns (new_w, new_delta); arithmetic mirrors the
+    reference decode → momentum_delta chain cast for cast."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(w, _cd.QBLOCK)
+    dt, _ = _as_tiles(prev_delta, _cd.QBLOCK)
+    qt, _ = _as_tiles(q, _cd.QBLOCK)
+    s = jnp.full((1, 1), scale, jnp.float32)
+    nw, nd = _fcc.int8_decode_apply(t, dt, qt, s, _hp2(momentum, global_lr),
+                                    interpret=interp)
+    return (
+        _from_tiles(nw, n, w.shape, w.dtype),
+        _from_tiles(nd, n, prev_delta.shape, prev_delta.dtype),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bf16_decode_apply(w, prev_delta, q, global_lr, momentum, *, interpret=None):
+    """Fused PS pull for a bf16 payload: widening cast + Eqn. 1 apply."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(w, _cd.QBLOCK)
+    dt, _ = _as_tiles(prev_delta, _cd.QBLOCK)
+    qt, _ = _as_tiles(q, _cd.QBLOCK)
+    nw, nd = _fcc.bf16_decode_apply(t, dt, qt, _hp2(momentum, global_lr),
+                                    interpret=interp)
+    return (
+        _from_tiles(nw, n, w.shape, w.dtype),
+        _from_tiles(nd, n, prev_delta.shape, prev_delta.dtype),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_decode_accum(w, q, scale, global_lr, *, interpret=None):
+    """Fused stateless pull (plain average) for an int8 payload:
+    W ← W − η·(q·s) in one pass."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(w, _cd.QBLOCK)
+    qt, _ = _as_tiles(q, _cd.QBLOCK)
+    s = jnp.full((1, 1), scale, jnp.float32)
+    lr = jnp.full((1, 1), global_lr, jnp.float32)
+    nw = _fcc.int8_decode_accum(t, qt, s, lr, interpret=interp)
+    return _from_tiles(nw, n, w.shape, w.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bf16_decode_accum(w, q, global_lr, *, interpret=None):
+    """Fused stateless pull (plain average) for a bf16 payload."""
+    interp = _interp(interpret)
+    t, n = _as_tiles(w, _cd.QBLOCK)
+    qt, _ = _as_tiles(q, _cd.QBLOCK)
+    lr = jnp.full((1, 1), global_lr, jnp.float32)
+    nw = _fcc.bf16_decode_accum(t, qt, lr, interpret=interp)
+    return _from_tiles(nw, n, w.shape, w.dtype)

@@ -14,6 +14,12 @@ import numpy as np
 __all__ = [
     "fused_accumulate",
     "fused_ps_apply",
+    "quantize_int8_ef",
+    "encode_bf16_ef",
+    "int8_decode_apply",
+    "bf16_decode_apply",
+    "int8_decode_accum",
+    "bf16_decode_accum",
     "flash_attention",
     "rglru_scan",
     "rwkv6_scan",
@@ -40,6 +46,53 @@ def fused_ps_apply(
     implicit-momentum correction): δ ← μ·δ_prev − η·U ; W ← W + δ."""
     delta = momentum * prev_delta - global_lr * u
     return w + delta, delta
+
+
+# ---------------------------------------------------------------------------
+# Fused codec+commit passes (DESIGN.md §16) — the decode/apply chain each
+# single-pass kernel in fused_codec_commit.py must reproduce bit for bit
+# ---------------------------------------------------------------------------
+
+def quantize_int8_ef(u, r, scale):
+    """Error-feedback int8 encode: e = u + r, symmetric quantize, next
+    residual — the reference chain of add → quantize in one expression."""
+    e = u.astype(jnp.float32) + r
+    q = jnp.clip(jnp.round(e / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, e - q.astype(jnp.float32) * scale
+
+
+def encode_bf16_ef(u, r):
+    """Error-feedback bf16 encode: e = u + r cast and residualized."""
+    e = u.astype(jnp.float32) + r
+    q = e.astype(jnp.bfloat16)
+    return q, e - q.astype(jnp.float32)
+
+
+def int8_decode_apply(w, prev_delta, q, scale, global_lr, momentum):
+    """Dequantize + Eqn. 1 PS apply: exactly decode(q)·cast-like-params
+    followed by ``fused_ps_apply`` — the unfused chain the kernel fuses."""
+    u = (q.astype(jnp.float32) * scale).astype(w.dtype)
+    delta = (momentum * prev_delta - global_lr * u).astype(prev_delta.dtype)
+    return w + delta, delta
+
+
+def bf16_decode_apply(w, prev_delta, q, global_lr, momentum):
+    """Widening bf16 decode + Eqn. 1 PS apply (unfused chain)."""
+    u = q.astype(jnp.float32).astype(w.dtype)
+    delta = (momentum * prev_delta - global_lr * u).astype(prev_delta.dtype)
+    return w + delta, delta
+
+
+def int8_decode_accum(w, q, scale, global_lr):
+    """Dequantize + stateless plain-average pull (unfused chain)."""
+    u = (q.astype(jnp.float32) * scale).astype(w.dtype)
+    return (w - global_lr * u).astype(w.dtype)
+
+
+def bf16_decode_accum(w, q, global_lr):
+    """bf16 decode + stateless plain-average pull (unfused chain)."""
+    u = q.astype(jnp.float32).astype(w.dtype)
+    return (w - global_lr * u).astype(w.dtype)
 
 
 # ---------------------------------------------------------------------------

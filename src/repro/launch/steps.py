@@ -77,6 +77,7 @@ def build_train_step(
     local_hp: dict | None = None,
     codec: str | None = None,
     n_shards: int = 1,
+    fused_commit: bool = False,
 ) -> StepBundle:
     spec = S.SHAPES[shape]
     granularity = granularity or cfg.adsp_granularity
@@ -115,6 +116,7 @@ def build_train_step(
         explicit_momentum=explicit_momentum,
         remat=False,  # remat lives inside lm_loss (per layer group)
         codec=codec,
+        fused_commit=fused_commit,
     )
 
     # --- abstract args + shardings ---------------------------------------
@@ -154,7 +156,7 @@ def build_train_step(
                     local_rule=step.rules[0].name, commit_rule=step.rules[1].name,
                     rule_backend=step.rules[1].backend,
                     codec=step.codec.name if step.codec is not None else None,
-                    n_shards=step.n_shards),
+                    n_shards=step.n_shards, fused_commit=step.fused_commit),
     )
 
 
@@ -217,8 +219,10 @@ def build(cfg: ModelConfig, mesh, shape: str, **kw) -> StepBundle:
     if kind == "prefill":
         kw.pop("tau", None)
         kw.pop("n_shards", None)
+        kw.pop("fused_commit", None)
         return build_prefill_step(cfg, mesh, shape, **kw)
     kw.pop("tau", None)
     kw.pop("n_shards", None)
     kw.pop("attn_impl", None)
+    kw.pop("fused_commit", None)
     return build_serve_step(cfg, mesh, shape, **kw)

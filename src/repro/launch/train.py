@@ -42,6 +42,7 @@ from repro.control.theory import WorkerProfile
 from repro.data.synthetic import lm_tokens
 from repro.fleet import FleetConfig, JsonlSink, LeaseConfig, scheduler_names
 from repro.models import lm
+from repro.models.attention import resolve_attn_impl
 from repro.models.config import ModelConfig
 from repro.ps import UpdateRules, add_rule_args, add_shard_args, rules_from_args
 from repro.transport import add_codec_args, codec_from_args
@@ -50,11 +51,18 @@ __all__ = ["build_mesh_task", "make_trainer", "main"]
 
 
 def build_mesh_task(cfg: ModelConfig, rules, *, seq: int, batch: int,
-                    seed: int = 0) -> MeshTask:
-    """Bind an LM architecture + data stream into a MeshTask."""
+                    seed: int = 0, attn_impl: str | None = None) -> MeshTask:
+    """Bind an LM architecture + data stream into a MeshTask.
+
+    ``attn_impl`` follows ``models.attention.resolve_attn_impl``: 'ref'
+    (pure-JAX blockwise scan) / 'flash' (Pallas kernel); None picks per
+    family — flash is the granite-family default on TPU.
+    """
+    impl = resolve_attn_impl(attn_impl, cfg.name)
 
     def loss_fn(params, mb):
-        return lm.lm_loss(cfg, params, mb, rules=rules, remat=False)
+        return lm.lm_loss(cfg, params, mb, rules=rules, attn_impl=impl,
+                          remat=False)
 
     def make_microbatches(round_idx: int, tau: int, _n_workers: int):
         toks = lm_tokens(seed, round_idx * 7919, tau * batch, seq,
@@ -76,6 +84,9 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
                  update_rules: UpdateRules | None = None,
                  codec=None,
                  n_shards: int = 1,
+                 fused_commit: bool = False,
+                 overlap_shards: bool = False,
+                 attn_impl: str | None = None,
                  search_mode: str = "epoch",
                  drift_threshold: float = 0.25,
                  reward_model: str = "log_slope",
@@ -88,7 +99,8 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
 
     worker_axes = worker_axes_for(cfg.adsp_granularity, mesh)
     rules = _rules_for(mesh, worker_axes)
-    task = build_mesh_task(cfg, rules, seq=seq, batch=batch, seed=seed)
+    task = build_mesh_task(cfg, rules, seq=seq, batch=batch, seed=seed,
+                           attn_impl=attn_impl)
     params = lm.lm_init(jax.random.PRNGKey(seed), cfg)
     task.init_params = jax.tree.map(
         lambda x: x.astype(jnp.dtype(cfg.dtype))
@@ -102,6 +114,7 @@ def make_trainer(cfg: ModelConfig, mesh, *, tau: int, seq: int, batch: int,
         task, mesh, worker_axes=worker_axes, tau=tau,
         local_lr=local_lr, global_lr=global_lr, profiles=profiles,
         rules=update_rules, codec=codec, n_shards=n_shards,
+        fused_commit=fused_commit, overlap_shards=overlap_shards,
         fleet=fleet, metrics=metrics,
     )
     # drift mode stays armed even with no epoch cadence configured: the
@@ -152,6 +165,18 @@ def main(argv=None):
     p.add_argument("--metrics", default="",
                    help="write the structured fleet metrics stream (JSONL) "
                         "to this path; summarize with tools/fleet_report.py")
+    p.add_argument("--fused-commit", action="store_true",
+                   help="single-pass decode+apply PS commit (DESIGN.md "
+                        "§16); needs --codec int8|bf16, falls back to the "
+                        "chain path where the fusion is not bit-exact")
+    p.add_argument("--overlap-shards", action="store_true",
+                   help="with --fused-commit and --ps-shards K>1: issue "
+                        "per-shard pull/decode dispatches back-to-back "
+                        "with no host sync between shards")
+    p.add_argument("--attn-impl", default=None, choices=["ref", "flash"],
+                   help="training attention: 'ref' pure-JAX blockwise, "
+                        "'flash' Pallas kernel (default: flash for the "
+                        "granite family on TPU, ref elsewhere)")
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
     add_rule_args(p)
@@ -178,6 +203,8 @@ def main(argv=None):
         local_lr=args.local_lr, global_lr=args.global_lr, seed=args.seed,
         gamma_rounds=args.gamma_rounds, search_every=args.search_every,
         update_rules=rules, codec=codec, n_shards=args.ps_shards,
+        fused_commit=args.fused_commit, overlap_shards=args.overlap_shards,
+        attn_impl=args.attn_impl,
         search_mode=args.search_mode, drift_threshold=args.drift_threshold,
         reward_model=args.reward_model, fleet=fleet, metrics=metrics,
     )
@@ -187,6 +214,9 @@ def main(argv=None):
           f"rules={lr_rule.name}+{cr_rule.name}[{cr_rule.backend}] "
           f"codec={backend.codec.name}[{backend.codec.backend}] "
           f"ps_shards={backend.n_shards} "
+          f"fused_commit={backend.fused_commit} "
+          f"overlap={backend.overlap_shards} "
+          f"attn={resolve_attn_impl(args.attn_impl, cfg.name)} "
           f"({backend.bytes_per_round/1e6:.2f} MB/round to PS)")
     t0 = time.time()
 

@@ -28,9 +28,37 @@ __all__ = [
     "attention_apply",
     "decode_attention_apply",
     "flash_attention_jax",
+    "resolve_attn_impl",
 ]
 
 NEG_INF = -1e30
+
+
+def resolve_attn_impl(requested: str | None = None, model_name: str = "") -> str:
+    """Map a user-facing attention choice to an ``attention_apply`` impl.
+
+    ``"ref"`` → the pure-JAX blockwise ``"scan"``; ``"flash"`` → the
+    Pallas ``"pallas"`` kernel. None/"auto" picks per model family, the
+    same policy as ``repro.ps.rules.resolve_backend``: flash is the
+    default training-path attention for the granite family when a TPU is
+    present (the kernel compiles natively there); everything else — and
+    every family off-TPU, where interpret-mode Pallas is a validation
+    path, not a fast path — stays on the scan implementation.
+    """
+    if requested in ("naive", "scan", "pallas"):
+        return requested
+    if requested == "ref":
+        return "scan"
+    if requested == "flash":
+        return "pallas"
+    if requested not in (None, "auto"):
+        raise ValueError(
+            f"unknown attention impl {requested!r} "
+            "(want 'ref', 'flash', 'naive', 'scan', 'pallas', 'auto')"
+        )
+    if "granite" in model_name and jax.default_backend() == "tpu":
+        return "pallas"
+    return "scan"
 
 
 def attention_init(rng, cfg, d_model: int | None = None, num_heads: int | None = None,

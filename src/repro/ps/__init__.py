@@ -40,6 +40,7 @@ from .train_step import (
 
 # importing these registers the built-in rules
 from . import commit_rules as _commit_rules  # noqa: F401
+from . import fused_codec as _fused_codec  # noqa: F401
 from . import local as _local  # noqa: F401
 
 __all__ = [

@@ -1,0 +1,185 @@
+"""Codec-consuming CommitRules: the fused decode+apply commit path
+(DESIGN.md §16).
+
+The classic commit chain runs PS-side decode and commit apply as two
+separate passes over every leaf (``codec.decode`` then
+``CommitRule.apply``). For the elementwise codecs (int8, bf16) the
+decode is itself elementwise, so the two passes fuse into one HBM trip:
+these rules take the *encoded payload* straight from ``codec.encode``
+and produce the committed params in a single pass per leaf
+(``kernels.fused_codec_commit`` via ``kernels.ops``).
+
+Registered under combined names ``<commit_rule>@<codec>`` — e.g.
+``momentum_delta@int8`` — with the usual reference/fused backend pair:
+the reference backend IS the unfused decode → apply chain (same jnp
+expressions, same casts), which is the bit-for-bit contract the fused
+kernels are parity-tested against per codec and shard count
+(tests/test_update_rules.py, tests/test_sharding.py).
+
+``make_train_step(fused_commit=True)`` resolves these by name when the
+step's codec supports them; ``top_k`` (gather/scatter decode) and
+``identity`` (nothing to fuse) fall back to the chain path.
+
+Payload trees are not params-shaped (an int8 leaf is a ``{"q","scale"}``
+dict), so each rule carries its ``is_payload`` predicate — how
+``make_sharded_apply`` slices payloads leaf-aligned with the params.
+The predicate is redefined here rather than imported from
+``repro.transport`` (transport imports ``repro.ps.rules``; the package
+layering is ps ← transport).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .rules import CommitRule, register_commit_rule
+
+__all__ = ["FUSABLE_CODECS", "fused_commit_name"]
+
+# codecs whose decode is elementwise and therefore fusable with the apply
+FUSABLE_CODECS = ("int8", "bf16")
+
+
+def fused_commit_name(commit_rule_name: str, codec_name: str) -> str:
+    """The combined registry name of the fused decode+apply rule."""
+    return f"{commit_rule_name}@{codec_name}"
+
+
+def _is_int8_payload(x):
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def _zip3(params, cstate, enc, is_payload):
+    """(leaves, treedef) zip of params/commit-state/payload trees; the
+    payload tree flattens under ``is_payload`` so its leaf order aligns
+    with the params leaves."""
+    p_leaves, treedef = jax.tree.flatten(params)
+    c_leaves = jax.tree.leaves(cstate)
+    e_leaves, _ = jax.tree_util.tree_flatten(enc, is_leaf=is_payload)
+    return p_leaves, c_leaves, e_leaves, treedef
+
+
+# ---------------------------------------------------------------------------
+# momentum_delta @ codec  (Eqn. 1 PS with the decode folded in)
+# ---------------------------------------------------------------------------
+
+def _make_momentum_delta(name, backend, dec_apply, is_payload) -> CommitRule:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def apply(params, cstate, enc, momentum):
+        p_leaves, c_leaves, e_leaves, treedef = _zip3(
+            params, cstate, enc, is_payload)
+        new_p, new_c = [], []
+        for w, d, p in zip(p_leaves, c_leaves, e_leaves):
+            nw, nd = dec_apply(w, d, p, momentum)
+            new_p.append(nw)
+            new_c.append(nd)
+        return treedef.unflatten(new_p), treedef.unflatten(new_c)
+
+    return CommitRule(name, backend, init, apply, is_payload=is_payload)
+
+
+@register_commit_rule("momentum_delta@int8", "reference")
+def _md_int8_reference(ccfg, *, interpret=None) -> CommitRule:
+    def dec_apply(w, d, p, momentum):
+        # the exact unfused chain: dequantize → cast like the params →
+        # Eqn. 1 apply (δ ← μ·δ − η·u ; W ← W + δ), same casts throughout
+        u = (p["q"].astype(jnp.float32) * p["scale"]).astype(w.dtype)
+        delta = (momentum * d - ccfg.global_lr * u).astype(d.dtype)
+        return w + delta, delta
+
+    return _make_momentum_delta("momentum_delta@int8", "reference",
+                                dec_apply, _is_int8_payload)
+
+
+@register_commit_rule("momentum_delta@int8", "fused")
+def _md_int8_fused(ccfg, *, interpret=None) -> CommitRule:
+    def dec_apply(w, d, p, momentum):
+        return ops.int8_decode_apply(w, d, p["q"], p["scale"],
+                                     ccfg.global_lr, momentum,
+                                     interpret=interpret)
+
+    return _make_momentum_delta("momentum_delta@int8", "fused",
+                                dec_apply, _is_int8_payload)
+
+
+@register_commit_rule("momentum_delta@bf16", "reference")
+def _md_bf16_reference(ccfg, *, interpret=None) -> CommitRule:
+    def dec_apply(w, d, q, momentum):
+        u = q.astype(jnp.float32).astype(w.dtype)
+        delta = (momentum * d - ccfg.global_lr * u).astype(d.dtype)
+        return w + delta, delta
+
+    return _make_momentum_delta("momentum_delta@bf16", "reference",
+                                dec_apply, None)
+
+
+@register_commit_rule("momentum_delta@bf16", "fused")
+def _md_bf16_fused(ccfg, *, interpret=None) -> CommitRule:
+    def dec_apply(w, d, q, momentum):
+        return ops.bf16_decode_apply(w, d, q, ccfg.global_lr, momentum,
+                                     interpret=interpret)
+
+    return _make_momentum_delta("momentum_delta@bf16", "fused",
+                                dec_apply, None)
+
+
+# ---------------------------------------------------------------------------
+# plain_average @ codec  (stateless FedAvg-style pull with decode folded in)
+# ---------------------------------------------------------------------------
+
+def _make_plain_average(name, backend, dec_accum, is_payload) -> CommitRule:
+    def init(params):
+        return ()
+
+    def apply(params, cstate, enc, momentum):
+        del momentum  # stateless average has no PS momentum term
+        p_leaves, _, e_leaves, treedef = _zip3(params, cstate, enc, is_payload)
+        new_p = [dec_accum(w, p) for w, p in zip(p_leaves, e_leaves)]
+        return treedef.unflatten(new_p), cstate
+
+    return CommitRule(name, backend, init, apply, is_payload=is_payload)
+
+
+@register_commit_rule("plain_average@int8", "reference")
+def _pa_int8_reference(ccfg, *, interpret=None) -> CommitRule:
+    def dec_accum(w, p):
+        u = (p["q"].astype(jnp.float32) * p["scale"]).astype(w.dtype)
+        return (w - ccfg.global_lr * u).astype(w.dtype)
+
+    return _make_plain_average("plain_average@int8", "reference",
+                               dec_accum, _is_int8_payload)
+
+
+@register_commit_rule("plain_average@int8", "fused")
+def _pa_int8_fused(ccfg, *, interpret=None) -> CommitRule:
+    def dec_accum(w, p):
+        return ops.int8_decode_accum(w, p["q"], p["scale"], ccfg.global_lr,
+                                     interpret=interpret)
+
+    return _make_plain_average("plain_average@int8", "fused",
+                               dec_accum, _is_int8_payload)
+
+
+@register_commit_rule("plain_average@bf16", "reference")
+def _pa_bf16_reference(ccfg, *, interpret=None) -> CommitRule:
+    def dec_accum(w, q):
+        u = q.astype(jnp.float32).astype(w.dtype)
+        return (w - ccfg.global_lr * u).astype(w.dtype)
+
+    return _make_plain_average("plain_average@bf16", "reference",
+                               dec_accum, None)
+
+
+@register_commit_rule("plain_average@bf16", "fused")
+def _pa_bf16_fused(ccfg, *, interpret=None) -> CommitRule:
+    def dec_accum(w, q):
+        return ops.bf16_decode_accum(w, q, ccfg.global_lr,
+                                     interpret=interpret)
+
+    return _make_plain_average("plain_average@bf16", "fused",
+                               dec_accum, None)

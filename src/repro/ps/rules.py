@@ -73,12 +73,20 @@ class LocalRule:
 @dataclasses.dataclass(frozen=True)
 class CommitRule:
     """PS apply over the worker axes (see module docstring for the
-    ``init``/``apply`` contracts)."""
+    ``init``/``apply`` contracts).
+
+    ``is_payload`` marks codec-consuming rules (the fused decode+apply
+    path, DESIGN.md §16): when set, ``apply``'s ``u`` is an *encoded*
+    payload tree whose per-leaf atoms this predicate identifies (e.g.
+    the int8 ``{"q", "scale"}`` dict). ``make_sharded_apply`` uses it to
+    slice payload trees leaf-aligned with the params; None means ``u``
+    is a dense params-shaped tree (every classic rule)."""
 
     name: str
     backend: str
     init: Callable[[Pytree], Pytree]
     apply: Callable[..., tuple]
+    is_payload: Callable[[Any], bool] | None = None
 
 
 # --------------------------------------------------------------------------

@@ -40,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import SCAN_IN_PARTIAL_AUTO_BROKEN, shard_map as _compat_shard_map
 
-from .rules import LocalRule, UpdateRules
+from .fused_codec import FUSABLE_CODECS, fused_commit_name
+from .rules import LocalRule, UpdateRules, get_commit_rule
 from .sharding import ShardPlan
 from .state import AdspState, CommitConfig
 
@@ -81,7 +82,13 @@ def make_sharded_apply(commit_rule, n_shards: int) -> Callable:
     leaf-wise, so the K-sharded apply is bit-identical to the monolithic
     one — sharding reorganizes what the transport layer sees (per-shard
     payloads, versions), never the numerics. n_shards == 1 returns the
-    rule's apply untouched (the monolithic fast path)."""
+    rule's apply untouched (the monolithic fast path).
+
+    Codec-consuming rules (``commit_rule.is_payload`` set, the fused
+    decode+apply path of DESIGN.md §16) take an *encoded* ``u`` whose
+    leaves are payload atoms, not params-shaped arrays — those trees are
+    flattened under the rule's predicate so the per-shard slices stay
+    leaf-aligned with the params."""
     if n_shards <= 1:
         return commit_rule.apply
 
@@ -99,12 +106,14 @@ def make_sharded_apply(commit_rule, n_shards: int) -> Callable:
             )
         p_leaves, treedef = jax.tree.flatten(params)
         c_leaves = jax.tree.leaves(cstate) if c_sliceable else None
+        u_leaves, _ = jax.tree_util.tree_flatten(
+            u, is_leaf=commit_rule.is_payload)
         new_p = list(p_leaves)
         new_c = list(c_leaves) if c_sliceable else cstate
         for k in range(plan.n_shards):
             idx = plan.shard_leaf_indices(k)
             p_k = plan.slice(params, k)
-            u_k = plan.slice(u, k)
+            u_k = [u_leaves[i] for i in idx]
             c_k = [c_leaves[i] for i in idx] if c_sliceable else cstate
             np_k, nc_k = commit_rule.apply(p_k, c_k, u_k, momentum)
             for i, leaf in zip(idx, np_k):
@@ -177,6 +186,7 @@ def make_train_step(
     explicit_momentum: float = 0.0,
     remat: bool = False,
     codec=None,
+    fused_commit: bool = False,
 ) -> Callable:
     """Build the full train step for any granularity and rule backend.
 
@@ -207,9 +217,23 @@ def make_train_step(
     payloads computes. None (default) and the identity codec leave the
     arithmetic bit-identical to the no-transport step.
 
+    ``fused_commit=True`` asks for the single-pass decode+apply commit
+    (DESIGN.md §16): the PS-side decode and the CommitRule apply run as
+    one combined rule (``repro.ps.fused_codec``), skipping a full
+    params-sized HBM round trip per commit. The fusion is taken only
+    when it is bit-identical to the chain — a fusable elementwise codec
+    (int8/bf16), one worker (per-worker int8 scales cannot be folded
+    across the worker pmean), a registered ``<rule>@<codec>`` combined
+    rule, and float32 ``commit_dtype`` (the chain's cast to commit_dtype
+    would otherwise reorder the decode) — and falls back to the chain
+    path silently otherwise; ``.fused_commit`` on the returned step
+    reports whether the fusion is live.
+
     The returned callable carries ``.init(params) -> AdspState`` (state
     with rule-owned slots), ``.rules`` (the resolved pair), ``.codec``,
-    ``.config`` (the effective CommitConfig), and ``.n_workers``.
+    ``.config`` (the effective CommitConfig), ``.n_workers``,
+    ``.fused_commit``, and ``.donate_argnums`` (the state argument —
+    what jit should donate on the hot path).
     """
     if isinstance(codec, str):
         from repro.transport import get_codec  # deferred: avoids ps↔transport cycle
@@ -229,18 +253,38 @@ def make_train_step(
 
     if isinstance(rules, (tuple, list)):
         local_rule, commit_rule = rules
+        _interpret = None
     else:
         bundle = rules if rules is not None else UpdateRules()
         local_rule, commit_rule = bundle.resolve(ccfg)
-    # PS sharding (§11): the commit apply is shard-sliced per the
-    # deterministic ShardPlan; 1 shard keeps the monolithic apply.
-    commit_apply = make_sharded_apply(commit_rule, ccfg.n_shards)
+        _interpret = bundle.interpret
 
     if axes:
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         n_workers = int(np.prod([sizes[a] for a in axes]))
     else:
         n_workers = 1
+
+    # Fused decode+apply (§16): resolve the combined <rule>@<codec> rule
+    # when the fusion preconditions hold (see docstring). The chain path
+    # stays the default and the bit-for-bit contract.
+    fused_rule = None
+    if (fused_commit and codec is not None
+            and codec.name in FUSABLE_CODECS
+            and n_workers == 1
+            and jnp.dtype(ccfg.commit_dtype) == jnp.dtype(jnp.float32)):
+        try:
+            fused_rule = get_commit_rule(
+                fused_commit_name(commit_rule.name, codec.name), ccfg,
+                backend=commit_rule.backend, interpret=_interpret)
+        except KeyError:
+            fused_rule = None  # no combined rule registered: chain path
+    use_fused = fused_rule is not None
+
+    # PS sharding (§11): the commit apply is shard-sliced per the
+    # deterministic ShardPlan; 1 shard keeps the monolithic apply.
+    commit_apply = make_sharded_apply(
+        fused_rule if use_fused else commit_rule, ccfg.n_shards)
 
     def _validate_state(state: AdspState) -> None:
         # Catch a seed-era AdspState.create(params) (momentum-delta-shaped,
@@ -303,6 +347,13 @@ def make_train_step(
         u = codec.decode(enc, u)
         return u, jax.tree.map(lambda x: x[None], ts1)
 
+    def _encode_codec(u, tstate):
+        """Worker-side encode only — the fused commit path consumes the
+        payload directly, so there is no PS-side decode pass (§16)."""
+        ts0 = jax.tree.map(lambda x: x[0], tstate)
+        enc, ts1 = codec.encode(u, ts0)
+        return enc, jax.tree.map(lambda x: x[None], ts1)
+
     if axes:
         def _sharded_body(params, cstate, lstate, tstate, step,
                           microbatches, tau_per_worker):
@@ -311,14 +362,22 @@ def make_train_step(
             tau_i = tau_per_worker[0]
             ls0 = jax.tree.map(lambda x: x[0], lstate)
             u, ls1, loss = run(params, ls0, microbatches, tau_i)
-            # ---- transport: what actually crosses the link ----
-            u, tstate_out = _through_codec(u, tstate)
-            # ---- the commit: PS apply as all-reduce over workers ----
-            cd = jnp.dtype(ccfg.commit_dtype)
-            u = jax.tree.map(lambda x: x.astype(cd), u)
-            u = jax.lax.pmean(u, axes)
             loss = jax.lax.pmean(loss, axes)
-            new_p, new_c = commit_apply(params, cstate, u, explicit_momentum)
+            if use_fused:
+                # single worker: the payload IS the worker-mean update, so
+                # the fused rule decodes+applies it in one pass (§16)
+                enc, tstate_out = _encode_codec(u, tstate)
+                new_p, new_c = commit_apply(params, cstate, enc,
+                                            explicit_momentum)
+            else:
+                # ---- transport: what actually crosses the link ----
+                u, tstate_out = _through_codec(u, tstate)
+                # ---- the commit: PS apply as all-reduce over workers ----
+                cd = jnp.dtype(ccfg.commit_dtype)
+                u = jax.tree.map(lambda x: x.astype(cd), u)
+                u = jax.lax.pmean(u, axes)
+                new_p, new_c = commit_apply(params, cstate, u,
+                                            explicit_momentum)
             lstate_out = jax.tree.map(lambda x: x[None], ls1)
             return new_p, new_c, lstate_out, tstate_out, step + 1, loss
 
@@ -352,10 +411,16 @@ def make_train_step(
             tau_i = jnp.reshape(jnp.asarray(tau_per_worker, jnp.int32), (-1,))[0]
             ls0 = jax.tree.map(lambda x: x[0], state.local_state)
             u, ls1, loss = run(state.params, ls0, microbatches, tau_i)
-            u, tstate_out = _through_codec(u, state.transport_state)
-            new_p, new_c = commit_apply(
-                state.params, state.commit_state, u, explicit_momentum
-            )
+            if use_fused:
+                enc, tstate_out = _encode_codec(u, state.transport_state)
+                new_p, new_c = commit_apply(
+                    state.params, state.commit_state, enc, explicit_momentum
+                )
+            else:
+                u, tstate_out = _through_codec(u, state.transport_state)
+                new_p, new_c = commit_apply(
+                    state.params, state.commit_state, u, explicit_momentum
+                )
             lstate_out = jax.tree.map(lambda x: x[None], ls1)
             return AdspState(new_p, new_c, lstate_out, state.step + 1,
                              tstate_out, _next_versions(state)), loss
@@ -373,4 +438,6 @@ def make_train_step(
     train_step.config = ccfg
     train_step.n_workers = n_workers
     train_step.n_shards = ccfg.n_shards
+    train_step.fused_commit = use_fused
+    train_step.donate_argnums = (0,)  # the AdspState: safe to donate per round
     return train_step

@@ -113,9 +113,11 @@ def _int8_reference(*, interpret=None) -> Codec:
 @register_codec("int8", "fused")
 def _int8_fused(*, interpret=None) -> Codec:
     def enc_leaf(ul, rl):
-        e = ul.astype(jnp.float32) + rl
-        scale = _int8_scale(e)  # jnp reduction; the passes below are Pallas
-        q, res = ops.quantize_int8(e, scale, interpret=interpret)
+        # the scale is a jnp reduction over e = u + r (XLA fuses it into
+        # the read); the error-feedback add + quantize + residual run as
+        # ONE Pallas pass — e is never materialized (quantize_int8_ef)
+        scale = _int8_scale(ul.astype(jnp.float32) + rl)
+        q, res = ops.quantize_int8_ef(ul, rl, scale, interpret=interpret)
         return {"q": q, "scale": scale}, res
 
     def encode(u, state):
@@ -159,8 +161,8 @@ def _bf16_reference(*, interpret=None) -> Codec:
 @register_codec("bf16", "fused")
 def _bf16_fused(*, interpret=None) -> Codec:
     def enc_leaf(ul, rl):
-        e = ul.astype(jnp.float32) + rl
-        q, res = ops.encode_bf16(e, interpret=interpret)
+        # error-feedback add folded into the cast pass (encode_bf16_ef)
+        q, res = ops.encode_bf16_ef(ul, rl, interpret=interpret)
         return q, res
 
     return _make_bf16(enc_leaf, "fused")

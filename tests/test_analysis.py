@@ -72,6 +72,7 @@ def test_rule_catalogue_complete():
         "wall-clock-in-sim", "host-sync-in-hot-path",
         "handler-exhaustiveness", "registry-parity", "frozen-protocol",
         "broad-except", "mutable-default", "tracer-branch",
+        "separate-dispatch-in-commit-path",
     }
     with pytest.raises(KeyError):
         get_rule("nonexistent-rule")
@@ -135,6 +136,38 @@ def test_host_sync_in_hot_path(tmp_path):
     assert len(found) == 4
     assert all(f.path == "src/repro/models/bad.py" for f in found)
     assert any(".item()" in f.message for f in found)
+
+
+def test_separate_dispatch_in_commit_path(tmp_path):
+    project = make_project(tmp_path, {
+        # the pre-§16 shape: decode the payload, then apply the commit
+        # rule — two dispatches where the combined rule does one
+        "src/repro/ps/train_step.py": """\
+            def commit(codec, rule, params, cstate, enc, momentum):
+                u = codec.decode(enc, params)
+                return rule.apply(params, cstate, u, momentum)
+            """,
+        # fusion-aware fallback: mentions fused, so it deliberately chains
+        "src/repro/launch/steps.py": """\
+            def commit(codec, rule, params, cstate, enc, momentum, fused_rule):
+                if fused_rule is not None:  # fused path handles decode+apply
+                    return fused_rule.apply(params, cstate, enc, momentum)
+                u = codec.decode(enc, params)
+                return rule.apply(params, cstate, u, momentum)
+            """,
+        # same two-call shape outside the commit-path files: out of scope
+        "src/repro/transport/replay.py": """\
+            def replay(codec, rule, params, cstate, enc, momentum):
+                u = codec.decode(enc, params)
+                return rule.apply(params, cstate, u, momentum)
+            """,
+    })
+    found = hits(project, "separate-dispatch-in-commit-path")
+    assert len(found) == 1
+    assert found[0].path == "src/repro/ps/train_step.py"
+    assert found[0].line == 2  # the decode call
+    assert "fused_codec" in found[0].message
+    assert get_rule("separate-dispatch-in-commit-path").severity == "warning"
 
 
 def test_handler_exhaustiveness(tmp_path):

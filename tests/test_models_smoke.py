@@ -86,3 +86,44 @@ def test_smoke_decode_consistency(arch, rng):
         np.asarray(dec[:, 0], np.float32), np.asarray(ref_logits[:, s], np.float32),
         atol=5e-5, rtol=5e-5,
     )
+
+
+def test_resolve_attn_impl_mapping(monkeypatch):
+    """'ref'/'flash' user names map onto scan/pallas; auto defaults to
+    flash only for the granite family on TPU."""
+    from repro.models import attention
+
+    assert attention.resolve_attn_impl("ref") == "scan"
+    assert attention.resolve_attn_impl("flash") == "pallas"
+    assert attention.resolve_attn_impl("naive") == "naive"
+    with pytest.raises(ValueError):
+        attention.resolve_attn_impl("magic")
+    # off-TPU everything resolves to the pure-JAX scan
+    assert attention.resolve_attn_impl(None, "granite-3-8b") == "scan"
+    assert attention.resolve_attn_impl("auto", "granite-3-8b") == "scan"
+    monkeypatch.setattr(attention.jax, "default_backend", lambda: "tpu")
+    assert attention.resolve_attn_impl(None, "granite-3-8b") == "pallas"
+    assert attention.resolve_attn_impl(None, "qwen2-5-32b") == "scan"
+    assert attention.resolve_attn_impl("ref", "granite-3-8b") == "scan"
+
+
+def test_flash_attention_is_differentiable():
+    """The Pallas forward carries a custom_vjp that recomputes through
+    the reference attention, so --attn-impl flash works under grad (the
+    raw pallas_call has no autodiff rule). Gradients must match the
+    reference's own."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 48, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 48, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 48, 2, 16)), jnp.float32)
+
+    def loss(fa, q, k, v):
+        return jnp.sum(fa(q, k, v, causal=True, window=8) ** 2)
+
+    g_ops = jax.grad(lambda *a: loss(ops.flash_attention, *a), (0, 1, 2))(q, k, v)
+    g_ref = jax.grad(lambda *a: loss(ref.flash_attention, *a), (0, 1, 2))(q, k, v)
+    for a, b in zip(g_ops, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)

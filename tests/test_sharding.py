@@ -362,3 +362,142 @@ def test_mesh_backend_sharded_state():
     for a, b in zip(jax.tree.leaves(outs[1].state.params),
                     jax.tree.leaves(outs[2].state.params)):
         assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fused decode+apply across shard counts (§16)
+# ---------------------------------------------------------------------------
+
+def _run_fused(problem, n_shards, codec, fused, rounds=4):
+    params, batch = problem
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = CommitConfig(tau=2, local_lr=0.1, global_lr=0.7, n_shards=n_shards)
+    mbs = (jnp.stack([batch[0]] * 2), jnp.stack([batch[1]] * 2))
+    step = make_train_step(
+        quad_loss, cfg, UpdateRules(backend="reference"),
+        mesh=mesh, granularity="data", explicit_momentum=0.3,
+        codec=codec, fused_commit=fused,
+    )
+    with use_mesh(mesh):
+        state = step.init(params)
+        for _ in range(rounds):
+            state, loss = jax.jit(step)(state, mbs, jnp.asarray([2], jnp.int32))
+    return step, state, float(loss)
+
+
+@pytest.mark.parametrize("commit", ["momentum_delta", "plain_average"])
+@pytest.mark.parametrize("codec_name", ["int8", "bf16"])
+@pytest.mark.parametrize("k", [1, 2, 8])
+def test_fused_sharded_apply_bit_identical_to_chain(codec_name, commit, k):
+    """The §16 contract: given the same encoded payload, the fused
+    decode+apply under the ShardPlan — int8 payloads flatten as
+    {"q","scale"} units — is bit-identical to decode → apply at every K.
+    (K=8 clamps to the leaf count like any plan.)"""
+    from repro.ps import get_commit_rule, make_sharded_apply
+    from repro.ps.fused_codec import fused_commit_name
+    from repro.transport import get_codec
+
+    rng = np.random.default_rng(11)
+    params = {
+        "w": jnp.asarray(rng.normal(size=(37, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(1,)), jnp.float32),
+        "h": {"v": jnp.asarray(rng.normal(size=(260,)), jnp.float32)},
+    }
+    u = jax.tree.map(lambda x: (x * 0.07 + 0.01).astype(jnp.float32), params)
+    cfg = CommitConfig(tau=1, global_lr=0.7, worker_axes=(), n_shards=k)
+    chain_rule = get_commit_rule(commit, cfg, backend="reference")
+    fused_rule = get_commit_rule(fused_commit_name(commit, codec_name), cfg,
+                                 backend="reference")
+    codec = get_codec(codec_name, backend="reference")
+    enc, _ = jax.jit(codec.encode)(u, jax.tree.map(jnp.zeros_like, u))
+    dec = jax.jit(lambda e: codec.decode(e, params))(enc)
+    cstate = chain_rule.init(params)
+    fstate = fused_rule.init(params)
+
+    out_c = jax.jit(make_sharded_apply(chain_rule, k))(params, cstate, dec, 0.3)
+    out_f = jax.jit(make_sharded_apply(fused_rule, k))(params, fstate, enc, 0.3)
+    for a, b in zip(jax.tree.leaves(out_c), jax.tree.leaves(out_f)):
+        assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("codec", ["int8", "bf16"])
+@pytest.mark.parametrize("k", [1, 2, 8])
+def test_fused_commit_sharded_train_step_matches_chain(problem, codec, k):
+    """End-to-end sharded train step, fused vs chain. bf16 is bit-exact
+    (its EF residual is a bare subtract). int8's residual e − q·s is
+    mul+sub: LLVM FMA-contracts it in the encode-only fused graph but not
+    in the chain graph (where the product is CSEd with the decode), so
+    across 4 rounds the trajectories agree only to ~1e-7 — the per-commit
+    numerics are pinned exactly by the same-payload apply test above."""
+    step_c, sc, lc = _run_fused(problem, k, codec, fused=False)
+    step_f, sf, lf = _run_fused(problem, k, codec, fused=True)
+    assert not step_c.fused_commit and step_f.fused_commit
+    if codec == "bf16":
+        assert lc == lf
+        for a, b in zip(jax.tree.leaves(sc), jax.tree.leaves(sf)):
+            assert_array_equal(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+    else:
+        assert lc == pytest.approx(lf, rel=1e-6)
+        for a, b in zip(jax.tree.leaves(sc), jax.tree.leaves(sf)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=1e-7)
+
+
+def test_mesh_backend_overlapped_shards_bit_identical():
+    """The overlapped per-shard commit (push once, K pull dispatches with
+    no host sync between them): params, commit state, and losses match
+    the monolithic fused step and the plain chain bit for bit. The
+    transport residual alone is compiler-sensitive (the push graph
+    compiles the local scan without the apply epilogue, shifting one
+    fusion decision) and is pinned to one f32 ulp instead. Donation must
+    leave the caller's init params untouched."""
+    from repro.cluster import ADSP, ClusterEngine
+    from repro.cluster.mesh_backend import MeshBackend, MeshTask
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(8, 1)), jnp.float32)
+    init = {"w": jnp.zeros((4, 1), jnp.float32),
+            "b": jnp.zeros((1,), jnp.float32)}
+    init_copy = jax.tree.map(np.asarray, init)
+    task = MeshTask(
+        init_params=init,
+        loss_fn=quad_loss,
+        make_microbatches=lambda r, tau, n: (jnp.stack([x] * tau),
+                                             jnp.stack([y] * tau)),
+    )
+    mesh = jax.make_mesh((1,), ("data",))
+    variants = {
+        "chain": dict(),
+        "fused": dict(fused_commit=True),
+        "overlap": dict(fused_commit=True, overlap_shards=True),
+    }
+    outs = {}
+    for name, kw in variants.items():
+        backend = MeshBackend(task, mesh, tau=2, codec="bf16", n_shards=2, **kw)
+        ClusterEngine(ADSP(search=False, gamma=4.0), backend)
+        with use_mesh(mesh):
+            losses = [backend.run_round() for _ in range(3)]
+        outs[name] = (backend, losses)
+    assert not outs["chain"][0].fused_commit
+    assert outs["fused"][0].fused_commit and not outs["fused"][0].overlap_shards
+    assert outs["overlap"][0].overlap_shards
+    assert outs["chain"][1] == outs["fused"][1] == outs["overlap"][1]
+    ref_state = outs["chain"][0].state
+    for a, b in zip(jax.tree.leaves(ref_state),
+                    jax.tree.leaves(outs["fused"][0].state)):
+        assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    ov = outs["overlap"][0].state
+    for tree in ("params", "commit_state", "shard_versions"):
+        for a, b in zip(jax.tree.leaves(getattr(ref_state, tree)),
+                        jax.tree.leaves(getattr(ov, tree))):
+            assert_array_equal(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+    for a, b in zip(jax.tree.leaves(ref_state.transport_state),
+                    jax.tree.leaves(ov.transport_state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-8)
+    # donated round buffers never alias the caller's tree
+    for a, b in zip(jax.tree.leaves(init), jax.tree.leaves(init_copy)):
+        assert_array_equal(np.asarray(a), b)

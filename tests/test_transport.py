@@ -141,6 +141,84 @@ def test_codec_kernel_ops_match_plain_math(update_tree):
                     np.asarray(x), atol=1e-6, rtol=1e-6)
 
 
+@pytest.mark.parametrize("shape", [(32, 1024), (257,), (3, 5), (40_000,)])
+def test_fused_codec_commit_kernel_ops_match_ref(shape):
+    """The single-pass commit-path kernels (§16) — "quantize_int8_ef",
+    "encode_bf16_ef", "int8_decode_apply", "bf16_decode_apply",
+    "int8_decode_accum", "bf16_decode_accum" — bit-for-bit against their
+    ref.py twins, which spell out the exact unfused chain. The twins run
+    under jit like every real call site (eager mode skips XLA's FMA
+    contraction of e − q·s and differs below one ulp of e)."""
+    from repro.kernels import ops
+    from repro.kernels import ref as _ref
+
+    class ref:  # jit each twin: compare the compiled forms, as deployed
+        pass
+    for _n in ("quantize_int8_ef", "encode_bf16_ef", "int8_decode_apply",
+               "bf16_decode_apply", "int8_decode_accum", "bf16_decode_accum"):
+        setattr(ref, _n, staticmethod(jax.jit(getattr(_ref, _n))))
+
+    rng = np.random.default_rng(int(np.prod(shape)))
+    u = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    r = jnp.asarray(rng.normal(size=shape) * 0.01, jnp.float32)
+    w = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    d = jnp.asarray(rng.normal(size=shape) * 0.1, jnp.float32)
+    lr, mu = 0.7, 0.9
+
+    scale = float(jnp.max(jnp.abs(u + r))) / 127.0
+    q, res = ops.quantize_int8_ef(u, r, scale, interpret=True)
+    q_e, res_e = ref.quantize_int8_ef(u, r, scale)
+    assert q.dtype == jnp.int8
+    assert_array_equal(np.asarray(q), np.asarray(q_e))
+    assert_array_equal(np.asarray(res), np.asarray(res_e))
+
+    qb, rb = ops.encode_bf16_ef(u, r, interpret=True)
+    qb_e, rb_e = ref.encode_bf16_ef(u, r)
+    assert qb.dtype == jnp.bfloat16
+    assert_array_equal(np.asarray(qb, np.float32), np.asarray(qb_e, np.float32))
+    assert_array_equal(np.asarray(rb), np.asarray(rb_e))
+
+    nw, nd = ops.int8_decode_apply(w, d, q, scale, lr, mu, interpret=True)
+    ew, ed = ref.int8_decode_apply(w, d, q, scale, lr, mu)
+    assert_array_equal(np.asarray(nw), np.asarray(ew))
+    assert_array_equal(np.asarray(nd), np.asarray(ed))
+
+    nw, nd = ops.bf16_decode_apply(w, d, qb, lr, mu, interpret=True)
+    ew, ed = ref.bf16_decode_apply(w, d, qb, lr, mu)
+    assert_array_equal(np.asarray(nw), np.asarray(ew))
+    assert_array_equal(np.asarray(nd), np.asarray(ed))
+
+    aw = ops.int8_decode_accum(w, q, scale, lr, interpret=True)
+    assert_array_equal(np.asarray(aw),
+                       np.asarray(ref.int8_decode_accum(w, q, scale, lr)))
+    aw = ops.bf16_decode_accum(w, qb, lr, interpret=True)
+    assert_array_equal(np.asarray(aw),
+                       np.asarray(ref.bf16_decode_accum(w, qb, lr)))
+
+
+def test_as_tiles_skips_copy_for_aligned_leaves():
+    """A leaf whose size is already a tile multiple passes through
+    _as_tiles/_from_tiles untouched — the same buffer, no pad/reshape
+    copy — while ragged leaves still take the padded path."""
+    from repro.kernels import ops
+    from repro.kernels.codec import QBLOCK
+
+    x = jnp.ones(QBLOCK, jnp.float32)  # exactly one tile
+    t, n = ops._as_tiles(x, QBLOCK)
+    assert t is x and n == x.size
+    assert ops._from_tiles(t, n, x.shape, x.dtype) is t
+
+    big = jnp.ones((4 * QBLOCK[0], QBLOCK[1]), jnp.float32)
+    t, _ = ops._as_tiles(big, QBLOCK)
+    assert t is big
+
+    ragged = jnp.ones((257,), jnp.float32)
+    t, n = ops._as_tiles(ragged, QBLOCK)
+    assert t is not ragged and t.shape == QBLOCK and n == 257
+    back = ops._from_tiles(t, n, ragged.shape, ragged.dtype)
+    assert_array_equal(np.asarray(back), np.asarray(ragged))
+
+
 @pytest.mark.parametrize("name", ["int8", "bf16"])
 def test_fused_matches_reference_encode_decode(update_tree, name):
     ref = get_codec(name, backend="reference")

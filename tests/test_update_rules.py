@@ -48,6 +48,11 @@ def _mesh1():
     return jax.make_mesh((1,), ("data",))
 
 
+def _null_ctx():
+    import contextlib
+    return contextlib.nullcontext()
+
+
 def _stack(batch, tau):
     x, y = batch
     return jnp.stack([x] * tau), jnp.stack([y] * tau)
@@ -460,3 +465,109 @@ def test_launch_train_smoke_adamw(tmp_path, capsys):
     out = capsys.readouterr().out
     assert "rules=adamw+momentum_delta" in out
     assert ckpt.exists()
+
+
+# ---------------------------------------------------------------------------
+# fused decode+apply commit path (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def test_fused_codec_rule_registry():
+    """The combined decode+apply rules register under "<rule>@<codec>" in
+    both backends: "momentum_delta@int8", "momentum_delta@bf16",
+    "plain_average@int8", "plain_average@bf16"."""
+    combined = {
+        "momentum_delta@int8", "momentum_delta@bf16",
+        "plain_average@int8", "plain_average@bf16",
+    }
+    assert combined <= set(commit_rule_names())
+    cfg = CommitConfig(tau=1, worker_axes=())
+    for name in combined:
+        assert rule_backends("commit", name) == ("fused", "reference")
+        rule = get_commit_rule(name, cfg, backend="reference")
+        if name.endswith("@int8"):
+            # int8 payloads are {"q","scale"} dicts the tree flattener
+            # must treat as leaves
+            assert rule.is_payload({"q": 1, "scale": 2})
+            assert not rule.is_payload({"q": 1})
+            assert not rule.is_payload(jnp.zeros(3))
+        else:
+            assert rule.is_payload is None
+
+
+@pytest.mark.parametrize("granularity", ["data", "accum"])
+@pytest.mark.parametrize("commit", ["momentum_delta", "plain_average"])
+@pytest.mark.parametrize("codec", ["identity", "int8", "bf16", "top_k"])
+def test_fused_commit_bit_identical_to_chain(problem, codec, commit,
+                                             granularity):
+    """fused_commit=True must be bit-for-bit the encode → decode → apply
+    chain for every codec: fusable codecs take the single-pass rule,
+    the rest silently fall back to the chain itself."""
+    params, batch = problem
+    cfg = CommitConfig(tau=2, local_lr=0.05, global_lr=1.0,
+                       worker_axes=("data",) if granularity == "data" else ())
+    mesh = _mesh1() if granularity == "data" else None
+    mbs = _stack(batch, 2)
+    tau = jnp.asarray([2], jnp.int32)
+    rules = UpdateRules(commit=commit, backend="reference")
+    outs = {}
+    for fused in (False, True):
+        step = make_train_step(quad_loss, cfg, rules, mesh=mesh,
+                               granularity=granularity, codec=codec,
+                               explicit_momentum=0.5, fused_commit=fused)
+        assert step.fused_commit is (fused and codec in ("int8", "bf16"))
+        with use_mesh(mesh) if mesh is not None else _null_ctx():
+            state = step.init(params)
+            for _ in range(3):
+                state, loss = jax.jit(step)(state, mbs, tau)
+        outs[fused] = (state, float(loss))
+    sa, sb = outs[False][0], outs[True][0]
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    assert outs[False][1] == outs[True][1]
+
+
+def test_fused_commit_kernel_backend_matches_reference(problem):
+    """backend="fused" routes the combined rule through the Pallas
+    single-pass kernels (interpret on CPU) — same bits as the reference
+    combined rule."""
+    params, batch = problem
+    cfg = CommitConfig(tau=2, local_lr=0.05, global_lr=1.0, worker_axes=())
+    mbs = _stack(batch, 2)
+    tau = jnp.asarray([2], jnp.int32)
+    outs = {}
+    for backend in ("reference", "fused"):
+        step = make_train_step(
+            quad_loss, cfg, UpdateRules(backend=backend), granularity="accum",
+            codec="int8", explicit_momentum=0.5, fused_commit=True,
+        )
+        assert step.fused_commit
+        state = step.init(params)
+        for _ in range(3):
+            state, loss = jax.jit(step)(state, mbs, tau)
+        outs[backend] = (np.asarray(state.params["w"]), float(loss))
+    assert_array_equal(outs["fused"][0], outs["reference"][0])
+    assert outs["fused"][1] == outs["reference"][1]
+
+
+def test_fused_commit_gate_falls_back():
+    """Fusion preconditions: codec present + fusable, one worker, f32
+    commit dtype — anything else silently uses the chain path."""
+    cfg = CommitConfig(tau=1, worker_axes=())
+    mk = lambda **kw: make_train_step(quad_loss, kw.pop("cfg", cfg),
+                                      UpdateRules(backend="reference"),
+                                      granularity="accum", **kw)
+    assert mk(codec="int8", fused_commit=True).fused_commit
+    assert not mk(codec="int8", fused_commit=False).fused_commit
+    assert not mk(codec=None, fused_commit=True).fused_commit
+    assert not mk(codec="top_k", fused_commit=True).fused_commit
+    cfg16 = CommitConfig(tau=1, worker_axes=(), commit_dtype="bfloat16")
+    assert not mk(cfg=cfg16, codec="int8", fused_commit=True).fused_commit
+
+
+def test_train_step_exposes_donate_argnums():
+    """The state argument is safe to donate: callers jit with
+    step.donate_argnums and reuse buffers round over round."""
+    cfg = CommitConfig(tau=1, worker_axes=())
+    step = make_train_step(quad_loss, cfg, UpdateRules(backend="reference"),
+                           granularity="accum")
+    assert step.donate_argnums == (0,)
