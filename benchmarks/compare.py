@@ -42,7 +42,7 @@ GATE_KEYS = {
     "under_10s", "before_epoch_end", "drift_no_later", "roundtrip_ok",
     "stalled", "continuous_beats_static_p99",
     "version_tracking_loss_improves", "partial_lt_full", "race_ok",
-    "overlap_matches",
+    "overlap_matches", "chunked_beats_unchunked_p99", "balancer_beats_rr",
 }
 # derived keys gated against an absolute floor in the CURRENT snapshot
 # (not baseline-relative). fused_commit_speedup is a within-run host-time
@@ -98,15 +98,18 @@ def compare(baseline: pathlib.Path, current: pathlib.Path,
                 elif cv != bv:
                     info.append(f"{name}: {key} {bv:g} -> {cv:g}")
                 continue
+            # sign-safe relative worsening: |bv| scales the allowance, so
+            # negative baselines (e.g. a speedup that was already a
+            # slowdown) don't flag equal-or-better values as regressions
             if any(s in key for s in LOWER_BETTER):
-                if math.isfinite(bv) and cv > bv * (1.0 + threshold):
+                if math.isfinite(bv) and cv - bv > threshold * abs(bv):
                     regressions.append(
                         f"{name}: {key} rose {bv:g} -> {cv:g} "
                         f"(>{threshold:.0%})")
                 elif cv != bv:
                     info.append(f"{name}: {key} {bv:g} -> {cv:g}")
             elif any(s in key for s in HIGHER_BETTER):
-                if math.isfinite(bv) and cv < bv * (1.0 - threshold):
+                if math.isfinite(bv) and bv - cv > threshold * abs(bv):
                     regressions.append(
                         f"{name}: {key} fell {bv:g} -> {cv:g} "
                         f"(>{threshold:.0%})")

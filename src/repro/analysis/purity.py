@@ -12,6 +12,11 @@ the host (DESIGN.md §15).
   ``block_until_ready`` / ``np.asarray`` on a traced value inside the
   train step, the kernels, or the model forward paths forces a device
   round trip per call (and breaks under jit on values that are tracers).
+  The serving decode/chunk loops (``serve/engine.py``,
+  ``serve/balance.py``) are scanned too, with a narrower contract: a
+  per-step host copy of small token ids is the loop's job, but any host
+  sync touching *logits* ships a (slots, vocab) tensor per step — the
+  argmax belongs inside the jit.
 """
 
 from __future__ import annotations
@@ -56,6 +61,16 @@ HOT_PATHS = (
     "src/repro/ps/train_step.py",
     "src/repro/kernels/",
     "src/repro/models/",
+)
+
+# The serving decode/chunk loops run one host round trip per *step*, so
+# they may ship small (slots,) token-id arrays — but never logits: a
+# host copy of a (slots, vocab) logits tensor per step is exactly the
+# sync the engine's device-side argmax exists to remove (§17). These
+# files are scanned for host syncs whose expression touches logits.
+SERVE_HOT_PATHS = (
+    "src/repro/serve/engine.py",
+    "src/repro/serve/balance.py",
 )
 
 _HOST_SYNC_DOTTED = {"jax.device_get"}
@@ -142,4 +157,33 @@ class HostSyncInHotPath(Rule):
                     yield self.finding(sf, node, (
                         f"{name}() forces a host copy (and fails on traced "
                         "values under jit); use jnp.asarray or restructure"
+                    ))
+        yield from self._check_serve(project)
+
+    def _check_serve(self, project: Project) -> Iterator[Finding]:
+        """Serve decode loops: host syncs are per-step, so they must ship
+        token ids, never logits — argmax belongs inside the jit."""
+        for sf in project.files_under(*SERVE_HOT_PATHS):
+            if sf.tree is None:
+                continue
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                is_sync = False
+                if isinstance(node.func, ast.Attribute):
+                    attr = node.func.attr
+                    if (attr == "item" and not node.args and not node.keywords
+                            ) or attr == "block_until_ready":
+                        is_sync = True
+                if not is_sync:
+                    name = dotted_name(node.func)
+                    is_sync = (name in _HOST_SYNC_DOTTED
+                               or name in _HOST_COPY_DOTTED
+                               or (name is not None
+                                   and name.endswith(".device_get")))
+                if is_sync and "logits" in ast.unparse(node):
+                    yield self.finding(sf, node, (
+                        "host sync on logits in the serving loop: a "
+                        "(slots, vocab) device→host copy per decode step; "
+                        "argmax on device and ship token ids instead"
                     ))

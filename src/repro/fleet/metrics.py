@@ -157,7 +157,9 @@ class ServeRecord(MetricRecord):
     at completion. Latencies decompose the request's life:
     queue (arrival → slot admission) + prefill + decode = total.
     ``version`` is the replica's model version at completion (total shard
-    commits reflected; 0 when not tracking training)."""
+    commits reflected; 0 when not tracking training). ``replica`` is the
+    serving replica that handled the request (0 for a single engine);
+    the default keeps pre-balancer JSONL streams loadable."""
 
     req: int
     queue: float
@@ -168,17 +170,20 @@ class ServeRecord(MetricRecord):
     slo: float
     slo_ok: bool
     version: int
+    replica: int = 0
 
 
 @_register("pull")
 @dataclasses.dataclass(frozen=True)
 class PullRecord(MetricRecord):
     """A serving replica pulled version-stale shards from the training PS
-    between decode steps (``repro.serve.sync``)."""
+    between decode steps (``repro.serve.sync``). ``replica`` keeps the
+    per-replica pull-bytes story separable under a load balancer."""
 
     stale_shards: int
     n_shards: int
     nbytes: float
+    replica: int = 0
 
 
 # ---------------------------------------------------------------------------

@@ -8,10 +8,19 @@ Two modes:
     ``deadline`` admission, per-request SLO accounting. With
     ``--track-training`` a co-running sharded trainer commits to a live
     PS and the replica pulls version-stale shards between decode steps.
+    ``--prefill-chunk C`` turns on chunked prefill (C tokens per
+    dispatch, interleaved with decode; ``--prefill-batch`` lanes share
+    each dispatch) and ``--replicas N`` puts N engines behind a
+    ``--router`` policy (§17).
 
         PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
             --smoke --trace poisson --requests 32 --rate 20 --slots 4 \
             --scheduler deadline --slo-ms 800 --metrics run.jsonl
+
+        PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
+            --smoke --trace bursty --requests 64 --rate 40 \
+            --prefill-chunk 16 --prefill-batch 2 \
+            --replicas 2 --router deadline_slack
 
   * **one-shot** (no ``--trace``): the original fixed-batch demo —
     prefill a batch of prompts, greedy-decode ``--new-tokens``.
@@ -55,6 +64,14 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--scheduler", default="fcfs", help="fcfs|deadline")
     p.add_argument("--mode", default="continuous", help="continuous|static")
     p.add_argument("--slo-ms", type=float, default=1000.0)
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="tokens per chunked-prefill dispatch (0 = monolithic)")
+    p.add_argument("--prefill-batch", type=int, default=1,
+                   help="prefill lanes sharing each chunk dispatch")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="engine replicas behind the load balancer")
+    p.add_argument("--router", default="least_queue",
+                   help="round_robin|least_queue|deadline_slack")
     p.add_argument("--metrics", default="", help="stream JSONL records here")
     p.add_argument("--track-training", action="store_true",
                    help="co-run a sharded trainer; pull stale shards live")
@@ -140,8 +157,9 @@ def run_oneshot(args) -> dict:
 
 def run_engine(args) -> dict:
     from repro.fleet import JsonlSink, MetricsLog
-    from repro.serve import (ReplicaSync, ServeConfig, ServeEngine,
-                             ShardedTrainer, TraceConfig, make_trace)
+    from repro.serve import (LoadBalancer, ReplicaSync, ServeConfig,
+                             ServeEngine, ShardedTrainer, TraceConfig,
+                             make_trace)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params = lm.lm_init(jax.random.PRNGKey(args.seed), cfg)
@@ -151,30 +169,45 @@ def run_engine(args) -> dict:
     serve_cfg = ServeConfig(
         slots=args.slots, scheduler=args.scheduler, mode=args.mode,
         sync_every=args.sync_every if args.track_training else 0,
-        seed=args.seed)
+        seed=args.seed, prefill_chunk=args.prefill_chunk,
+        prefill_batch=args.prefill_batch)
 
-    trainer = sync = tick = None
+    trainer = tick = None
+    make_sync = None
     loss_first = loss_last = None
     if args.track_training:
         trainer = ShardedTrainer(cfg, params, n_shards=args.shards)
-        sync = ReplicaSync(params, lambda: trainer.state, n_shards=args.shards)
+        make_sync = lambda i: ReplicaSync(  # noqa: E731
+            params, lambda: trainer.state, n_shards=args.shards)
         tick = lambda eng, t: trainer.advance(t)  # noqa: E731
         loss_first = trainer.eval_loss(params)
 
     sink = JsonlSink(args.metrics) if args.metrics else MetricsLog()
     t0 = time.time()
-    engine = ServeEngine(cfg, params, serve_cfg, trace,
-                         metrics=sink, sync=sync, tick=tick)
-    report = engine.run()
+    balance = None
+    if args.replicas > 1:
+        balancer = LoadBalancer(cfg, params, serve_cfg, trace,
+                                n_replicas=args.replicas, router=args.router,
+                                metrics=sink, make_sync=make_sync, tick=tick)
+        balance = balancer.run()
+        report = balance.merged
+        synced_params = balancer.engines[0].params
+    else:
+        engine = ServeEngine(cfg, params, serve_cfg, trace, metrics=sink,
+                             sync=make_sync(0) if make_sync else None,
+                             tick=tick)
+        report = engine.run()
+        synced_params = engine.params
     wall = time.time() - t0
     if args.track_training:
-        loss_last = trainer.eval_loss(engine.params)
+        loss_last = trainer.eval_loss(synced_params)
     if isinstance(sink, JsonlSink):
         sink.close()
 
     print(f"# arch={cfg.name} trace={args.trace} requests={args.requests} "
           f"rate={args.rate}/s slots={args.slots} scheduler={args.scheduler} "
-          f"mode={args.mode}")
+          f"mode={args.mode} chunk={args.prefill_chunk} "
+          f"replicas={args.replicas}")
     print(f"# served {len(report.records)} requests, "
           f"{report.total_tokens} tokens in {report.t_end:.2f} virtual s "
           f"({wall:.1f} s wall)")
@@ -184,6 +217,12 @@ def run_engine(args) -> dict:
     print(f"# SLO attainment {100*report.slo_attainment:.1f}% | "
           f"goodput {report.goodput:.2f} req/s | "
           f"{report.tokens_per_s:.1f} tok/s")
+    if args.prefill_chunk:
+        print(f"# chunked prefill: {report.chunk_dispatches} dispatches "
+              f"(chunk {args.prefill_chunk}, {args.prefill_batch} lanes)")
+    if balance is not None:
+        print(f"# router={balance.router} per-replica requests "
+              f"{balance.per_replica_requests}")
     if args.track_training:
         print(f"# training: loss {loss_first:.4f} -> {loss_last:.4f} over "
               f"{trainer.commits} commits | pulls {report.sync_pulls}/"
@@ -192,7 +231,7 @@ def run_engine(args) -> dict:
     if args.metrics:
         print(f"# metrics -> {args.metrics}")
     return {"report": report, "loss_first": loss_first, "loss_last": loss_last,
-            "trainer": trainer}
+            "trainer": trainer, "balance": balance}
 
 
 def main(argv=None):

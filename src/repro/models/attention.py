@@ -26,6 +26,7 @@ from .layers import annotate, dense_init, rope
 __all__ = [
     "attention_init",
     "attention_apply",
+    "chunk_attention_apply",
     "decode_attention_apply",
     "flash_attention_jax",
     "resolve_attn_impl",
@@ -277,3 +278,78 @@ def decode_attention_apply(cfg, p, x, cache, *, window: int = 0, rules=None):
 
 def cfg_num_heads_from(qg):
     return qg.shape[2] * qg.shape[3]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (c new tokens against a cache, resumable)
+# ---------------------------------------------------------------------------
+
+def chunk_attention_apply(cfg, p, x, cache, positions, nv, valid, *,
+                          window: int = 0, rules=None):
+    """Advance a decode cache by one prefill chunk.
+
+    x: (B, c, d) — c prompt tokens per row, of which ``nv`` (B,) are
+    valid (the rest are padding; per-row ragged chunks share one
+    dispatch). ``positions`` (B, c) are absolute token positions
+    (``cache["pos"] + arange(c)``); ``valid`` is the (B, c) bool mask
+    ``arange(c) < nv``. Each query attends to the previously cached keys
+    plus the chunk's own keys under the same causal/window masks the
+    full-sequence path applies, then the valid K/V land in the cache
+    (ring slots when windowed, dense otherwise) and ``pos`` advances by
+    ``nv``. Rows with nv = 0 are exact no-ops on the cache.
+
+    Returns (out (B, c, d), new_cache). Requires c <= cache capacity for
+    ring caches — a larger chunk would overwrite keys still inside the
+    window of the chunk's own early queries.
+    """
+    rules = rules or {}
+    b, c, _ = x.shape
+    cap = cache["k"].shape[1]
+    if window and c > cap:
+        raise ValueError(
+            f"prefill chunk {c} exceeds ring cache capacity {cap}; "
+            "windowed caches can absorb at most `window` tokens per chunk"
+        )
+    pos = cache["pos"]  # (B,) tokens already cached per row
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions, rules)
+
+    # absolute positions + validity of the *existing* cache slots, i.e.
+    # the state before this chunk (last written position = pos - 1).
+    idx = jnp.arange(cap)[None, :]
+    e_old = pos[:, None] - 1
+    if window:
+        m = e_old % cap
+        abs_cache = jnp.where(idx <= m, e_old - m + idx, e_old - m - cap + idx)
+        valid_cache = (abs_cache >= 0) & (abs_cache <= e_old)
+    else:
+        abs_cache = jnp.broadcast_to(idx, (b, cap))
+        valid_cache = idx < pos[:, None]
+
+    k_all = jnp.concatenate([cache["k"], k_new], axis=1)  # (B, cap+c, Hkv, hd)
+    v_all = jnp.concatenate([cache["v"], v_new], axis=1)
+    abs_all = jnp.concatenate([abs_cache, positions], axis=1)  # (B, cap+c)
+    valid_all = jnp.concatenate([valid_cache, valid], axis=1)
+
+    qg, _ = _gqa_expand(q, k_all)  # (B, c, Hkv, G, hd)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_all) * scale
+    logits = logits.astype(jnp.float32)
+    mask = valid_all[:, None, :] & (abs_all[:, None, :] <= positions[:, :, None])
+    if window:
+        mask &= positions[:, :, None] - abs_all[:, None, :] < window
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v_all.dtype)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_all)
+    ctx = ctx.reshape(b, c, -1, q.shape[-1])
+    out = _out_proj(p, ctx, rules)
+
+    # scatter the valid chunk K/V; invalid rows point past the cache and
+    # mode="drop" discards them, so padding never lands in a slot.
+    slots = positions % cap if window else positions
+    slots = jnp.where(valid, slots, cap)
+    rows = jnp.arange(b)[:, None]
+    new_cache = dict(cache)
+    new_cache["k"] = cache["k"].at[rows, slots].set(k_new, mode="drop")
+    new_cache["v"] = cache["v"].at[rows, slots].set(v_new, mode="drop")
+    new_cache["pos"] = pos + nv
+    return out, new_cache

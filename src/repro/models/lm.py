@@ -51,11 +51,13 @@ __all__ = [
     "lm_loss",
     "lm_logits",
     "lm_prefill",
+    "lm_prefill_chunk",
     "lm_decode_step",
     "init_decode_caches",
     "cache_slot_insert",
     "cache_slot_extract",
     "cache_slot_clear",
+    "max_chunk_len",
 ]
 
 ATTN_KINDS = ("global", "local", "dense", "moe")
@@ -610,6 +612,176 @@ def _prefill_block(cfg, kind, p, x, cache, positions, rules, attn_impl, enc_out)
             "wkv": stT,
             "last_x_time": h[:, -1].astype(jnp.float32),
             "last_x_chan": h2[:, -1].astype(jnp.float32),
+        }
+        return x_after_time + y2, new_state
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: advance decode caches by c tokens per call, resumable.
+#
+# The carry is the decode cache tree itself — ring K/V + pos for
+# attention kinds, {h, conv_tail} for RG-LRU, {wkv, last_x_*} for RWKV —
+# so a prompt can be prefetched in fixed-size chunks interleaved with
+# decode steps (repro.serve), evicted mid-prefill and resumed later.
+# Rows are ragged: ``n_valid`` masks each row's tail with identity
+# transitions (attention: scatter dropped + keys masked; rglru: a=1,
+# b=0; rwkv: w=1, k=v=0), so one dispatch advances every active lane and
+# a row with n_valid = 0 is an exact no-op on its state.
+# ---------------------------------------------------------------------------
+
+def max_chunk_len(cfg: ModelConfig, cache_len: int) -> int | None:
+    """Largest prefill chunk the decode caches can absorb in one call:
+    the smallest ring-buffer capacity across windowed attention layers
+    (a bigger chunk would overwrite keys its own early queries still
+    need). None when no layer rings (dense attention / recurrent)."""
+    caps = []
+    for pattern, _ in cfg.layer_groups:
+        for kind in pattern:
+            if kind in ATTN_KINDS:
+                w = _attn_window(cfg, kind)
+                if w:
+                    caps.append(min(w, cache_len))
+    return min(caps) if caps else None
+
+
+def lm_prefill_chunk(cfg: ModelConfig, params, batch, caches, start, *,
+                     rules=None, attn_impl="scan", n_valid=None):
+    """One prefill chunk: batch {"tokens": (B, c)}, per-row ``start``
+    (B,) tokens already consumed, ``n_valid`` (B,) valid tokens in this
+    chunk (None = all c). Returns (logits at each row's last valid
+    position (B, V), updated caches). Token streams match monolithic
+    ``lm_prefill`` + decode exactly; logits agree to float tolerance
+    (reduction order differs, as with every blockwise attention)."""
+    if cfg.frontend or cfg.encoder is not None:
+        raise ValueError(
+            "chunked prefill drives token-only decoders; "
+            f"{cfg.name} needs a modality frontend at prefill"
+        )
+    rules = rules or {}
+    dt = dtype_of(cfg)
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.broadcast_to(start, (b,))
+    nv = (jnp.full((b,), c, jnp.int32) if n_valid is None
+          else jnp.asarray(n_valid, jnp.int32))
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < nv[:, None]  # (B, c)
+
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.pos_variant == "learned":
+        safe = jnp.clip(positions, 0, cfg.max_seq_len - 1)
+        x = x + params["pos_embed"].astype(dt)[safe]
+
+    new_caches = []
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups):
+        gp = params[f"group{gi}"]
+
+        def body(h, xs, _pattern=pattern):
+            layer_params, layer_cache = xs
+            out_cache = {}
+            for key, kind in _pattern_keys(_pattern):
+                h, out_cache[key] = _chunk_block(
+                    cfg, kind, layer_params[key], h, layer_cache[key],
+                    positions, nv, valid, rules, attn_impl,
+                )
+            return h, out_cache
+
+        x, nc = jax.lax.scan(body, x, (gp, caches[gi]))
+        new_caches.append(nc)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    last = jnp.clip(nv - 1, 0, c - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]  # (B, d)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bd,vd->bv", x_last, head.astype(dt))
+    else:
+        logits = jnp.einsum("bd,dv->bv", x_last, head.astype(dt))
+    return logits, new_caches
+
+
+def _chunk_block(cfg, kind, p, x, cache, positions, nv, valid, rules, attn_impl):
+    from .attention import chunk_attention_apply
+
+    if kind in ATTN_KINDS:
+        h = norm_apply(cfg, p["norm1"], x)
+        h2, new_cache = chunk_attention_apply(
+            cfg, p["attn"], h, cache, positions, nv, valid,
+            window=_attn_window(cfg, kind), rules=rules,
+        )
+        x = x + h2
+        h = norm_apply(cfg, p["norm2"], x)
+        if kind == "moe":
+            h, _ = moe_apply(cfg, p["moe"], h, rules)
+        else:
+            h = mlp_apply(p["mlp"], h, cfg.mlp_variant, rules)
+        return x + h, new_cache
+
+    if kind == "recurrent":
+        from .rglru import _gates, lru_scan
+
+        h = norm_apply(cfg, p["norm1"], x)
+        dt = x.dtype
+        c = x.shape[1]
+        u = h @ p["rec"]["wx"].astype(dt)  # (B, c, w)
+        vgate = jax.nn.gelu(h @ p["rec"]["wg"].astype(dt))
+        kw = cfg.conv1d_width
+        tail = cache["conv_tail"].astype(dt)  # (B, K-1, w)
+        win = jnp.concatenate([tail, u], axis=1)  # (B, K-1+c, w)
+        uc = sum(win[:, i : i + c] * p["rec"]["conv"][i].astype(dt)
+                 for i in range(kw))
+        a, bb = _gates(p["rec"], uc, dt)
+        vm = valid[..., None]
+        a = jnp.where(vm, a, 1.0)  # identity transition on padding rows
+        bb = jnp.where(vm, bb, 0.0)
+        hs = lru_scan(a, bb, h0=cache["h"])
+        # new conv tail = raw u at the last K-1 *valid* positions (win
+        # index nv maps to u index nv-(K-1); nv < K-1 keeps old tail).
+        tail_idx = nv[:, None, None] + jnp.arange(kw - 1)[None, :, None]
+        new_tail = jnp.take_along_axis(win.astype(jnp.float32), tail_idx, axis=1)
+        new_tail = jnp.where((nv > 0)[:, None, None], new_tail, cache["conv_tail"])
+        new_state = {"h": hs[:, -1], "conv_tail": new_tail}
+        y = (hs.astype(dt) * vgate) @ p["rec"]["wo"].astype(dt)
+        x = x + y
+        h = norm_apply(cfg, p["norm2"], x)
+        return x + mlp_apply(p["mlp"], h, cfg.mlp_variant, rules), new_state
+
+    if kind == "rwkv":
+        from .rwkv6 import _channel_core, _groupnorm, _heads, _streams, _token_shift, wkv_scan
+        from .rwkv_chunked import wkv_chunked
+
+        h = norm_apply(cfg, p["norm1"], x)
+        dt = x.dtype
+        n = cfg.rwkv_head_dim
+        c = x.shape[1]
+        prev = _token_shift(h, last=cache["last_x_time"].astype(dt))
+        r, k, v, w, g = _streams(p["time"], h, prev, dt)
+        r, k, v, w = (_heads(t, n) for t in (r, k, v, w))
+        k = k * (1.0 / np.sqrt(n))
+        vm = valid[..., None, None]
+        k = jnp.where(vm, k, 0.0)  # identity state transition on padding
+        v = jnp.where(vm, v, 0.0)
+        w = jnp.where(vm, w.astype(jnp.float32), 1.0)
+        _wkv = wkv_scan if attn_impl == "naive" else wkv_chunked
+        out, stT = _wkv(r, k, v, w, p["time"]["bonus"], state0=cache["wkv"])
+        y = _groupnorm(out, p["time"]["ln_gamma"], n).astype(dt) * g
+        x_after_time = x + y @ p["time"]["wo"].astype(dt)
+        h2 = norm_apply(cfg, p["norm2"], x_after_time)
+        prev2 = _token_shift(h2, last=cache["last_x_chan"].astype(h2.dtype))
+        y2 = _channel_core(p["chan"], h2, prev2, h2.dtype, rules)
+        last = jnp.clip(nv - 1, 0, c - 1)[:, None, None]
+        any_v = (nv > 0)[:, None]
+
+        def at_last(t):
+            return jnp.take_along_axis(t, last, axis=1)[:, 0].astype(jnp.float32)
+
+        new_state = {
+            "wkv": stT,
+            "last_x_time": jnp.where(any_v, at_last(h), cache["last_x_time"]),
+            "last_x_chan": jnp.where(any_v, at_last(h2), cache["last_x_chan"]),
         }
         return x_after_time + y2, new_state
     raise ValueError(kind)

@@ -11,7 +11,12 @@ trains, from the same parameter-server state it trains them in.
   * ``engine`` — continuous batching over a bounded slot pool
     (per-step eviction + immediate backfill, prefill/decode
     interleaving) under ``fcfs`` or ``deadline``/EDF admission, with a
-    deterministic virtual-clock cost model;
+    deterministic virtual-clock cost model; chunked prefill splits long
+    prompts into fixed-size dispatches interleaved 1:1 with decode, and
+    batches queued prefills into shared lane dispatches (§17);
+  * ``balance`` — N engine replicas on one virtual clock behind a
+    registered routing policy (``round_robin`` | ``least_queue`` |
+    ``deadline_slack``), per-replica caches and PS sync (§17);
   * ``sync`` — version-stale shard pulls from a live training PS
     (``repro.ps.AdspState`` + ``ShardPlan``) between decode steps.
 
@@ -20,6 +25,13 @@ Per-request records flow through ``repro.fleet.metrics``
 ``tools/fleet_report.py`` summarizes.
 """
 
+from .balance import (
+    BalanceReport,
+    LoadBalancer,
+    get_router,
+    register_router,
+    router_names,
+)
 from .cache import CachePool, family_of
 from .engine import (
     CostModel,
@@ -52,6 +64,9 @@ __all__ = [
     "ServeEngine", "ServeConfig", "ServeReport", "CostModel",
     "serve_trace", "solo_decode",
     "register_scheduler", "get_scheduler", "scheduler_names",
+    # balance
+    "LoadBalancer", "BalanceReport",
+    "register_router", "get_router", "router_names",
     # sync
     "ReplicaSync", "ShardedTrainer", "pull_stale", "shard_versions_of",
 ]

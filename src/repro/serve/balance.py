@@ -1,0 +1,200 @@
+"""Multi-replica serving behind a load balancer (DESIGN.md §17).
+
+N ``ServeEngine`` replicas — each owning its slot pool, prefill lanes,
+and (optionally) its own ``ReplicaSync`` against the training PS — are
+driven on **one virtual clock** by a ``LoadBalancer``: arrivals from a
+single trace are routed to a replica by a registered policy, then every
+replica runs until the next arrival. Replica clocks advance
+independently between arrivals (a busy replica may still be working at
+t=5 while an idle one has jumped ahead), which is exactly the
+heterogeneous-participant shape ADSP builds for: routing decisions see
+the *divergent* replica states, never a barrier-synchronised fiction.
+
+Routing policies (registry idiom, as ``serve.engine`` schedulers):
+
+  * ``round_robin`` — arrival index mod N, the no-information baseline;
+  * ``least_queue`` — fewest requests queued or in flight, ties to the
+    lowest replica index;
+  * ``deadline_slack`` — pick the replica maximising the request's slack
+    at estimated completion: deadline − (replica clock at arrival +
+    backlog + this request's own service estimate). Backlog is
+    ``ServeEngine.backlog_seconds()``, a deterministic cost-model sum
+    over the replica's slots, lanes, and queue — the router prices the
+    *work*, not the request count, so one 2k-token prompt counts for
+    what it costs.
+
+Determinism: the trace is seeded, the cost model is virtual, replica
+state evolves only through ``run_until``/``submit``, and every policy
+breaks ties by replica index — same trace + same seed ⇒ identical
+per-request records, which tests/test_serve.py asserts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import math
+
+from .engine import ServeConfig, ServeEngine, ServeReport
+from .sync import ReplicaSync
+from .trace import Request
+
+__all__ = [
+    "RouterPolicy", "register_router", "get_router", "router_names",
+    "LoadBalancer", "BalanceReport",
+]
+
+Pytree = Any
+
+_ROUTERS: dict[str, Callable[[], "RouterPolicy"]] = {}
+
+
+def register_router(name: str):
+    def deco(cls):
+        _ROUTERS[name] = cls
+        return cls
+    return deco
+
+
+def get_router(name: str) -> "RouterPolicy":
+    try:
+        return _ROUTERS[name]()
+    except KeyError:
+        raise KeyError(f"unknown router {name!r}; known: {router_names()}")
+
+
+def router_names() -> list[str]:
+    return sorted(_ROUTERS)
+
+
+class RouterPolicy:
+    """Picks the replica for one arriving request. Engines have been
+    run up to the request's arrival when ``pick`` is called."""
+
+    def pick(self, req: Request, engines: list[ServeEngine]) -> int:
+        raise NotImplementedError
+
+
+@register_router("round_robin")
+class RoundRobinRouter(RouterPolicy):
+    def __init__(self):
+        self._i = 0
+
+    def pick(self, req: Request, engines: list[ServeEngine]) -> int:
+        i = self._i % len(engines)
+        self._i += 1
+        return i
+
+
+@register_router("least_queue")
+class LeastQueueRouter(RouterPolicy):
+    """Fewest requests on the replica (queued + slots + lanes)."""
+
+    def pick(self, req: Request, engines: list[ServeEngine]) -> int:
+        return min(range(len(engines)),
+                   key=lambda i: (engines[i].n_queued + engines[i].n_active, i))
+
+
+@register_router("deadline_slack")
+class DeadlineSlackRouter(RouterPolicy):
+    """Maximise the request's slack at its estimated completion time.
+
+    Estimated completion on replica i = max(replica clock, arrival)
+    + backlog_seconds() + the request's own service estimate (prefill
+    of the full prompt + max_new decode steps). Slack = deadline − that.
+    The replica clock matters: a replica mid-way through a long prefill
+    has a *later* effective start than an idle one even at equal
+    backlog."""
+
+    def pick(self, req: Request, engines: list[ServeEngine]) -> int:
+        def slack(i: int) -> float:
+            e = engines[i]
+            cost = e.serve_cfg.cost
+            est = (cost.prefill(req.prompt_len)
+                   + req.max_new * cost.decode(e.serve_cfg.slots))
+            t0 = max(e.t, req.arrival)
+            return req.deadline - (t0 + e.backlog_seconds() + est)
+
+        # max slack; ties to the lowest index (min over negated slack)
+        return min(range(len(engines)), key=lambda i: (-slack(i), i))
+
+
+@dataclasses.dataclass
+class BalanceReport:
+    """Merged view over all replicas plus the per-replica reports.
+    ``merged`` carries every request record (each stamped with its
+    replica) and the fleet clock ``t_end = max`` over replicas, so
+    goodput/percentiles aggregate exactly as a single engine's would."""
+
+    merged: ServeReport
+    replicas: list[ServeReport]
+    router: str
+
+    @property
+    def per_replica_requests(self) -> list[int]:
+        return [len(r.records) for r in self.replicas]
+
+
+class LoadBalancer:
+    """N replicas of one model behind a routing policy.
+
+    ``make_sync(i)`` (optional) builds replica i's ``ReplicaSync`` — each
+    replica tracks the training PS independently, so pull traffic and
+    version staleness stay per-replica stories. ``tick`` is shared; the
+    serve-side trainer advances monotonically, so out-of-order ticks
+    from replicas with divergent clocks are safe no-ops backwards.
+    """
+
+    def __init__(self, cfg, params: Pytree, serve_cfg: ServeConfig,
+                 trace: list[Request], *, n_replicas: int = 2,
+                 router: str = "least_queue", metrics=None,
+                 make_sync: Callable[[int], ReplicaSync] | None = None,
+                 tick=None):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if serve_cfg.sync_every and make_sync is None:
+            raise ValueError("sync_every > 0 needs a make_sync factory")
+        self.trace = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        self.router_name = router
+        self.router = get_router(router)
+        # capacity must come from the *global* trace: any replica can be
+        # routed any request, and per-replica traces are empty at build
+        need = max((r.prompt_len + r.max_new for r in self.trace), default=2)
+        cap = serve_cfg.capacity or need
+        serve_cfg = dataclasses.replace(serve_cfg, capacity=cap)
+        self.engines = [
+            ServeEngine(cfg, params, serve_cfg, [], metrics=metrics,
+                        sync=make_sync(i) if make_sync else None,
+                        tick=tick, replica=i)
+            for i in range(n_replicas)
+        ]
+
+    def run(self) -> BalanceReport:
+        for req in self.trace:
+            for e in self.engines:
+                e.run_until(req.arrival)
+            self.engines[self.router.pick(req, self.engines)].submit(req)
+        for e in self.engines:
+            e.run_until(math.inf)
+        reports = [e.finish() for e in self.engines]
+        records = sorted((r for rep in reports for r in rep.records),
+                         key=lambda r: (r.t, r.req))
+        tokens: dict[int, list[int]] = {}
+        for rep in reports:
+            tokens.update(rep.tokens_by_rid)
+        merged = ServeReport(
+            records=records,
+            t_end=max((rep.t_end for rep in reports), default=0.0),
+            decode_steps=sum(rep.decode_steps for rep in reports),
+            tokens_by_rid=tokens,
+            inserts=sum(rep.inserts for rep in reports),
+            evictions=sum(rep.evictions for rep in reports),
+            sync_polls=sum(rep.sync_polls for rep in reports),
+            sync_pulls=sum(rep.sync_pulls for rep in reports),
+            pull_bytes=sum(rep.pull_bytes for rep in reports),
+            full_pull_bytes=sum(rep.full_pull_bytes for rep in reports),
+            chunk_dispatches=sum(rep.chunk_dispatches for rep in reports),
+        )
+        return BalanceReport(merged=merged, replicas=reports,
+                             router=self.router_name)

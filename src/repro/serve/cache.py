@@ -105,6 +105,29 @@ class CachePool:
         self.inserts += 1
         return slot
 
+    def admit(self, rid: int) -> int:
+        """Claim a free slot for ``rid`` with *zeroed* state. Chunked
+        prefill lanes start from empty caches and are advanced in place
+        by ``lm_prefill_chunk`` — unlike ``insert`` there is no source
+        tree, so the previous occupant's state must be cleared (the
+        chunk path accumulates into whatever it finds)."""
+        if not self.free:
+            raise RuntimeError("no free slot; evict before admitting")
+        if rid in self.slot_of:
+            raise ValueError(f"request {rid} already holds slot {self.slot_of[rid]}")
+        slot = self.free.pop()
+        self.caches = lm.cache_slot_clear(self.caches, slot)
+        self.request_of[slot] = rid
+        self.slot_of[rid] = slot
+        self.inserts += 1
+        return slot
+
+    def extract(self, rid: int):
+        """``rid``'s slot state as a batch-1 cache tree (insertable into
+        another pool of the same cfg/capacity — the lane → decode-pool
+        handoff when a chunked prefill completes)."""
+        return lm.cache_slot_extract(self.caches, self.slot_of[rid])
+
     def evict(self, rid: int) -> int:
         """Release ``rid``'s slot. The state is left in place — the next
         insert overwrites every leaf, so no clear pass is needed."""

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine (DESIGN.md §14).
+"""Continuous-batching serving engine (DESIGN.md §14, §17).
 
 The engine turns the one-shot prefill+decode demo into a request-level
 server: an open-loop trace (``serve.trace``) feeds an admission queue, a
@@ -13,26 +13,52 @@ hardware, same cost model, same per-request token streams.
 
 Two clocks, deliberately separate:
 
-  * tokens come from the *real* model (``lm_prefill``/``lm_decode_step``
-    on the actual params) — a request served from a pool slot is
-    bit-identical to the same request decoded alone (enforced per model
-    family by tests/test_serve_parity.py);
+  * tokens come from the *real* model (``lm_prefill_chunk``/
+    ``lm_decode_step`` on the actual params) — a request served from a
+    pool slot is token-identical to the same request decoded alone
+    (enforced per model family by tests/test_serve_parity.py);
   * *time* is virtual, from a deterministic ``CostModel`` (prefill cost
     affine in prompt length, decode cost affine in pool width), so
     latency distributions, SLO attainment, and scheduler comparisons are
     reproducible on any host and "equal hardware" between policies means
     exactly equal step costs.
 
+Prefill runs in two regimes (§17):
+
+  * **monolithic** (``prefill_chunk=0``): one dispatch consumes the
+    whole prompt before anything else happens — the engine loop stalls
+    for the full prefill cost, exactly the straggler-blocks-the-barrier
+    shape ADSP §3 removes from training. Dispatches are jit-cached by
+    the prompt length rounded up to a power of two (padding masked by
+    ``n_valid``), so realistic traces compile O(log max_len) prefill
+    fns, not one per distinct length.
+  * **chunked** (``prefill_chunk=C``, continuous mode): prompts are
+    admitted to up to ``prefill_batch`` *lanes* (a second ``CachePool``)
+    and advanced C tokens at a time — all lanes in **one dispatch** per
+    chunk, ragged rows masked — with the chunk *riding the decode step*
+    whenever the pool is busy: one combined step costs
+    ``decode(slots) + per_token×chunk`` (``CostModel.piggyback``), so a
+    2k-token prompt never stalls the decode pool and pays no per-chunk
+    dispatch base. Only a standalone chunk (empty pool) pays a base,
+    once per dispatch however many lanes share it — batched prefill
+    admission amortizes exactly that.
+
 Admission order is a registered scheduler: ``fcfs`` (arrival order) or
 ``deadline`` (earliest deadline first — EDF spends slack where it
 exists). Between decode steps the engine can poll a ``ReplicaSync``
 (``serve.sync``) so the served model tracks a live training PS via
 version-stale shard pulls.
+
+The run loop is a stepping API (``submit``/``run_until``) so a
+``serve.balance.LoadBalancer`` can drive N engines on one virtual clock;
+``run()`` is the single-replica convenience that feeds the engine's own
+trace through it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable
 
 import jax
@@ -55,6 +81,8 @@ __all__ = [
 
 Pytree = Any
 
+_EPS = 1e-12
+
 
 # ---------------------------------------------------------------------------
 # virtual step costs
@@ -65,18 +93,35 @@ Pytree = Any
 class CostModel:
     """Virtual seconds per engine operation. Affine models: prefill in
     prompt tokens, decode in pool width (every slot is computed whether
-    occupied or not — that is precisely static batching's waste)."""
+    occupied or not — that is precisely static batching's waste).
+
+    Chunked prefill is priced at the *step* level, the way continuous
+    batching actually schedules it: when a decode step is running
+    anyway, the chunk's tokens ride that step — ``piggyback`` charges
+    only their per-token work, the dispatch base is already paid by the
+    decode step. Only a *standalone* chunk dispatch (empty decode pool)
+    pays a base (``chunk``): the base is paid once per dispatch however
+    many lanes advance, which is what batched prefill admission buys."""
 
     prefill_base: float = 2e-3
     prefill_per_token: float = 2.5e-4
     decode_base: float = 4e-3
     decode_per_slot: float = 1e-3
+    chunk_base: float | None = None  # standalone-chunk base (None: prefill_base)
 
     def prefill(self, prompt_len: int) -> float:
         return self.prefill_base + self.prefill_per_token * prompt_len
 
     def decode(self, n_slots: int) -> float:
         return self.decode_base + self.decode_per_slot * n_slots
+
+    def chunk(self, tokens: int) -> float:
+        base = self.prefill_base if self.chunk_base is None else self.chunk_base
+        return base + self.prefill_per_token * tokens
+
+    def piggyback(self, tokens: int) -> float:
+        """Marginal cost of chunk tokens sharing a decode step."""
+        return self.prefill_per_token * tokens
 
 
 # ---------------------------------------------------------------------------
@@ -138,7 +183,9 @@ class ServeConfig:
     evict + backfill) or 'static' (rebatch only when the pool drains).
     sync_every: decode steps between PS polls (0 = never). capacity:
     attention cache length per slot; 0 derives the minimum from the
-    trace (max prompt + max new tokens)."""
+    trace (max prompt + max new tokens). prefill_chunk: tokens per
+    chunked-prefill dispatch (0 = monolithic prefill); prefill_batch:
+    concurrent prefill lanes sharing each chunk dispatch."""
 
     slots: int = 4
     scheduler: str = "fcfs"
@@ -147,6 +194,8 @@ class ServeConfig:
     sync_every: int = 0
     capacity: int = 0
     seed: int = 0
+    prefill_chunk: int = 0
+    prefill_batch: int = 1
     cost: CostModel = dataclasses.field(default_factory=CostModel)
 
     def __post_init__(self):
@@ -154,6 +203,15 @@ class ServeConfig:
             raise ValueError("slots must be >= 1")
         if self.mode not in ("continuous", "static"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
+        if self.prefill_batch < 1:
+            raise ValueError("prefill_batch must be >= 1")
+        if self.prefill_chunk and self.mode != "continuous":
+            raise ValueError(
+                "chunked prefill interleaves with decode; static mode "
+                "rebatches whole pools and cannot use it"
+            )
 
 
 @dataclasses.dataclass
@@ -171,6 +229,7 @@ class ServeReport:
     sync_pulls: int = 0
     pull_bytes: int = 0
     full_pull_bytes: int = 0  # dense re-pull at the same pull points
+    chunk_dispatches: int = 0  # chunked-prefill dispatches (0 = monolithic)
 
     # ------------------------------------------------------------ derived
     def _vals(self, field: str) -> list[float]:
@@ -217,6 +276,28 @@ class _Active:
     tokens: list[int]
 
 
+@dataclasses.dataclass
+class _Lane:
+    """One chunked-prefill lane: a request whose prompt is being consumed
+    ``prefill_chunk`` tokens per shared dispatch. ``first`` is the
+    prefill argmax once the prompt is fully consumed (the lane then
+    waits for a decode slot); ``t_first`` stamps that dispatch."""
+
+    req: Request
+    t_admit: float
+    consumed: int = 0
+    first: int | None = None
+    t_first: float = 0.0
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+def _prev_pow2(n: int) -> int:
+    return 1 << (n.bit_length() - 1)
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -229,12 +310,15 @@ class ServeEngine:
     PS; ``tick`` is called as ``tick(engine, t)`` once per decode step
     *before* the sync poll — benchmarks use it to advance a co-running
     trainer to the serving clock and to probe serving-side loss.
+    ``replica`` stamps this engine's records when several engines share
+    one metrics stream under a ``serve.balance.LoadBalancer``.
     """
 
     def __init__(self, cfg, params: Pytree, serve_cfg: ServeConfig,
                  trace: list[Request], *, metrics=None,
                  sync: ReplicaSync | None = None,
-                 tick: Callable[["ServeEngine", float], None] | None = None):
+                 tick: Callable[["ServeEngine", float], None] | None = None,
+                 replica: int = 0):
         if cfg.frontend or cfg.encoder is not None:
             raise ValueError(
                 "the serve engine drives token-only decoders; "
@@ -249,18 +333,73 @@ class ServeEngine:
         self.metrics = metrics
         self.sync = sync
         self.tick = tick
+        self.replica = replica
         need = max((r.prompt_len + r.max_new for r in self.trace), default=2)
         cap = serve_cfg.capacity or need
         if cap < need:
             raise ValueError(f"capacity {cap} < trace requirement {need}")
         self.pool = CachePool(cfg, serve_cfg.slots, cap)
         self.scheduler = get_scheduler(serve_cfg.scheduler)
-        self._decode = jax.jit(
-            lambda p, toks, c: lm.lm_decode_step(cfg, p, {"tokens": toks}, c)
-        )
+        # chunks larger than the smallest ring cache would overwrite keys
+        # the chunk's own early queries still need (models.lm.max_chunk_len)
+        self._ring_limit = lm.max_chunk_len(cfg, cap)
+        if serve_cfg.prefill_chunk and self._ring_limit is not None and \
+                serve_cfg.prefill_chunk > self._ring_limit:
+            raise ValueError(
+                f"prefill_chunk {serve_cfg.prefill_chunk} exceeds the "
+                f"smallest ring cache capacity {self._ring_limit} of {cfg.name}"
+            )
+        self.lanes: CachePool | None = None
+        if serve_cfg.prefill_chunk:
+            self.lanes = CachePool(cfg, serve_cfg.prefill_batch, cap)
+            self._chunk_fn = jax.jit(self._chunk_step)
+        self._decode = jax.jit(self._decode_fn)
+        # monolithic prefill dispatches, jit-cached by pow2-padded length
         self._prefill_fns: dict[int, Callable] = {}
         self._last_tok = np.zeros((serve_cfg.slots,), np.int32)
         self._slots: dict[int, _Active] = {}
+        self._begin()
+
+    # ---------------------------------------------------------- jitted fns
+    def _decode_fn(self, params, toks, caches):
+        """One pool-wide decode step; the argmax stays on device so the
+        loop ships (slots,) token ids, not (slots, vocab) logits."""
+        logits, caches = lm.lm_decode_step(self.cfg, params, {"tokens": toks}, caches)
+        return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), caches
+
+    def _chunk_step(self, params, toks, caches, start, nv):
+        """Advance every prefill lane by one (ragged) chunk."""
+        logits, caches = lm.lm_prefill_chunk(
+            self.cfg, params, {"tokens": toks}, caches, start, n_valid=nv
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    def _build_prefill_fn(self, padded: int) -> Callable:
+        """Monolithic prefill at bucket length ``padded`` (pow2): fresh
+        caches + the chunk path over the whole (masked) prompt, split
+        into ring-safe sub-blocks when a sliding window caps the chunk."""
+        cap = self.pool.capacity
+        step = padded if self._ring_limit is None else \
+            min(padded, _prev_pow2(self._ring_limit))
+        nblk = (padded + step - 1) // step
+
+        def fn(params, toks, nv):
+            caches = lm.init_decode_caches(self.cfg, 1, cap)
+            lgs = []
+            for j in range(nblk):
+                off = j * step
+                lg, caches = lm.lm_prefill_chunk(
+                    self.cfg, params, {"tokens": toks[:, off:off + step]},
+                    caches, jnp.full((1,), off, jnp.int32),
+                    n_valid=jnp.clip(nv - off, 0, step),
+                )
+                lgs.append(lg)
+            # the last *valid* block holds the first-token logits
+            jstar = jnp.clip((nv[0] - 1) // step, 0, nblk - 1)
+            lg = jnp.stack(lgs)[jstar]  # (1, V)
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32), caches
+
+        return jax.jit(fn)
 
     # ------------------------------------------------------------ helpers
     def prompt_tokens(self, req: Request) -> np.ndarray:
@@ -272,17 +411,16 @@ class ServeEngine:
         return toks[:, : req.prompt_len]
 
     def _prefill(self, req: Request):
-        reserve = self.pool.capacity - req.prompt_len
-        fn = self._prefill_fns.get(req.prompt_len)
+        padded = _next_pow2(req.prompt_len)
+        fn = self._prefill_fns.get(padded)
         if fn is None:
-            fn = jax.jit(
-                lambda p, b, _r=reserve: lm.lm_prefill(self.cfg, p, b, reserve=_r)
-            )
-            self._prefill_fns[req.prompt_len] = fn
-        batch = {"tokens": jnp.asarray(self.prompt_tokens(req), jnp.int32)}
-        logits, caches = fn(self.params, batch)
-        first = int(np.argmax(np.asarray(logits[0])))
-        return first, caches
+            fn = self._build_prefill_fn(padded)
+            self._prefill_fns[padded] = fn
+        toks = np.zeros((1, padded), np.int32)
+        toks[:, : req.prompt_len] = self.prompt_tokens(req)
+        tok, caches = fn(self.params, jnp.asarray(toks),
+                         jnp.asarray([req.prompt_len], jnp.int32))
+        return int(tok[0]), caches
 
     def _version(self) -> int:
         return self.sync.version if self.sync is not None else 0
@@ -297,98 +435,87 @@ class ServeEngine:
             decode=0.0 if prefill_only else t - t_first,
             total=t - r.arrival,
             tokens=st.gen, slo=r.slo,
-            slo_ok=bool(t <= r.deadline + 1e-12),
+            slo_ok=bool(t <= r.deadline + _EPS),
             version=self._version(),
+            replica=self.replica,
         )
         self._done.append(rec)
         self._tokens_by_rid[r.rid] = st.tokens
         if self.metrics is not None:
             self.metrics.record(rec)
 
-    # -------------------------------------------------------------- run
-    def run(self) -> ServeReport:
-        cfg = self.serve_cfg
-        cost = cfg.cost
+    # ---------------------------------------------------------- stepping API
+    #
+    # The balancer drives N engines on one virtual clock through these
+    # three calls; run() is the single-replica composition. One _step()
+    # performs exactly one *timed* action (a prefill, a chunk dispatch,
+    # or a decode step) plus any zero-cost bookkeeping before it, so the
+    # clock only ever advances inside _step().
+
+    def _begin(self):
+        self.t = 0.0
+        self._queue: list[Request] = []
         self._done: list[ServeRecord] = []
         self._tokens_by_rid: dict[int, list[int]] = {}
-        queue: list[Request] = []
-        t, i, n = 0.0, 0, len(self.trace)
-        decode_steps = 0
-        filling = False  # static mode: batch-formation phase
+        self._decode_steps = 0
+        self._chunk_dispatches = 0
+        self._filling = False  # static mode: batch-formation phase
+        self._lanes: dict[int, _Lane] = {}
+        self._prompt_np: dict[int, np.ndarray] = {}
+        self._chunk_tok = None  # last chunk dispatch's device-side argmaxes
 
-        while i < n or queue or self._slots:
-            # open-loop admission: everything that has arrived by now
-            while i < n and self.trace[i].arrival <= t + 1e-12:
-                queue.append(self.trace[i])
-                i += 1
+    def submit(self, req: Request) -> None:
+        """Hand a request to the admission queue (arrival bookkeeping is
+        the caller's: submit when the clock reaches ``req.arrival``)."""
+        self._queue.append(req)
 
-            if cfg.mode == "static" and not self._slots and queue:
-                filling = True
-            can_admit = (self.pool.n_free > 0 and
-                         (cfg.mode == "continuous" or filling))
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue or self._slots or self._lanes)
 
-            if queue and can_admit:
-                req = queue.pop(self.scheduler.pick(queue, t))
-                t_admit = t
-                first, caches = self._prefill(req)
-                pf = cost.prefill(req.prompt_len)
-                t += pf
-                st = _Active(req=req, t_admit=t_admit, prefill_s=pf,
-                             gen=1, tokens=[first])
-                done_now = (req.max_new <= 1 or
-                            (cfg.eos_id is not None and first == cfg.eos_id))
-                if done_now:
-                    self._complete(st, t, prefill_only=True)
-                else:
-                    slot = self.pool.insert(req.rid, caches)
-                    self._last_tok[slot] = first
-                    self._slots[slot] = st
-                continue  # re-admit arrivals that landed during prefill
-            filling = False
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
 
-            if not self._slots:
-                if i < n:  # idle: jump to the next arrival
-                    t = max(t, self.trace[i].arrival)
-                    continue
-                break  # queue empty, nothing active, trace exhausted
+    @property
+    def n_active(self) -> int:
+        """Requests holding a decode slot or a prefill lane."""
+        return len(self._slots) + len(self._lanes)
 
-            # one decode step over the whole pool
-            toks = jnp.asarray(self._last_tok[:, None])
-            logits, self.pool.caches = self._decode(
-                self.params, toks, self.pool.caches
-            )
-            t += cost.decode(cfg.slots)
-            decode_steps += 1
+    def backlog_seconds(self) -> float:
+        """Deterministic service-time estimate for everything queued or
+        in flight — the ``deadline_slack`` router's load signal."""
+        cost = self.serve_cfg.cost
+        per_tok = cost.decode(self.serve_cfg.slots)
+        s = 0.0
+        for st in self._slots.values():
+            s += max(st.req.max_new - st.gen, 0) * per_tok
+        for lane in self._lanes.values():
+            rem = lane.req.prompt_len - lane.consumed
+            if rem > 0:
+                s += cost.prefill(rem)
+            s += lane.req.max_new * per_tok
+        for q in self._queue:
+            s += cost.prefill(q.prompt_len) + q.max_new * per_tok
+        return s
 
-            if self.tick is not None:
-                self.tick(self, t)
-            if (self.sync is not None and cfg.sync_every
-                    and decode_steps % cfg.sync_every == 0):
-                self.params, n_stale, nbytes, secs = self.sync.poll(self.params)
-                t += secs
-                if n_stale and self.metrics is not None:
-                    self.metrics.record(PullRecord(
-                        t=t, stale_shards=n_stale,
-                        n_shards=self.sync.plan.n_shards, nbytes=float(nbytes),
-                    ))
+    def run_until(self, t: float) -> None:
+        """Process work while the clock is before ``t`` (an action that
+        *starts* before ``t`` may finish past it — the caller submits
+        arrivals that landed mid-action before the next one). Idle
+        engines jump their clock straight to ``t``."""
+        while self.has_work and self.t < t - _EPS:
+            if not self._step():
+                break
+        if math.isfinite(t) and not self.has_work and self.t < t:
+            self.t = t
 
-            next_tok = np.argmax(np.asarray(logits[:, 0]), axis=-1)
-            for slot in sorted(self._slots):
-                st = self._slots[slot]
-                tok = int(next_tok[slot])
-                st.tokens.append(tok)
-                st.gen += 1
-                self._last_tok[slot] = tok
-                if (st.gen >= st.req.max_new or
-                        (cfg.eos_id is not None and tok == cfg.eos_id)):
-                    self._complete(st, t)
-                    self.pool.evict(st.req.rid)
-                    del self._slots[slot]
-
+    def finish(self) -> ServeReport:
         report = ServeReport(
-            records=self._done, t_end=t, decode_steps=decode_steps,
+            records=self._done, t_end=self.t, decode_steps=self._decode_steps,
             tokens_by_rid=self._tokens_by_rid,
             inserts=self.pool.inserts, evictions=self.pool.evictions,
+            chunk_dispatches=self._chunk_dispatches,
         )
         if self.sync is not None:
             report.sync_polls = self.sync.polls
@@ -396,6 +523,195 @@ class ServeEngine:
             report.pull_bytes = self.sync.bytes_pulled
             report.full_pull_bytes = self.sync.full_bytes_equiv
         return report
+
+    # -------------------------------------------------------------- steps
+    def _step(self) -> bool:
+        """One timed action; False when nothing can run (idle)."""
+        if self.serve_cfg.prefill_chunk:
+            return self._step_chunked()
+        return self._step_monolithic()
+
+    def _step_monolithic(self) -> bool:
+        cfg = self.serve_cfg
+        if cfg.mode == "static" and not self._slots and self._queue:
+            self._filling = True
+        can_admit = (self.pool.n_free > 0 and
+                     (cfg.mode == "continuous" or self._filling))
+
+        if self._queue and can_admit:
+            req = self._queue.pop(self.scheduler.pick(self._queue, self.t))
+            t_admit = self.t
+            first, caches = self._prefill(req)
+            pf = cfg.cost.prefill(req.prompt_len)
+            self.t += pf
+            st = _Active(req=req, t_admit=t_admit, prefill_s=pf,
+                         gen=1, tokens=[first])
+            done_now = (req.max_new <= 1 or
+                        (cfg.eos_id is not None and first == cfg.eos_id))
+            if done_now:
+                self._complete(st, self.t, prefill_only=True)
+            else:
+                slot = self.pool.insert(req.rid, caches)
+                self._last_tok[slot] = first
+                self._slots[slot] = st
+            return True
+        self._filling = False
+
+        if not self._slots:
+            return False
+        self._decode_step()
+        return True
+
+    def _step_chunked(self) -> bool:
+        # lane admission is zero-cost bookkeeping: the scheduler hands
+        # queued requests to free lanes, then finished lanes drain into
+        # free decode slots, then exactly one timed step runs. When both
+        # kinds of work exist, the chunk rides the decode step (one
+        # combined step: decode cost + the chunk's per-token work); a
+        # standalone chunk (empty pool) pays its own dispatch base.
+        while self._queue and self.lanes.n_free > 0:
+            req = self._queue.pop(self.scheduler.pick(self._queue, self.t))
+            slot = self.lanes.admit(req.rid)
+            self._lanes[slot] = _Lane(req=req, t_admit=self.t)
+            self._prompt_np[req.rid] = self.prompt_tokens(req)
+        self._drain_ready()
+
+        chunk_work = any(l.first is None for l in self._lanes.values())
+        decode_work = bool(self._slots)
+        if chunk_work and decode_work:
+            pend = self._chunk_issue()
+            self._decode_step(piggyback_tokens=pend[2])
+            self._chunk_finalize(pend)
+            self._drain_ready()
+            return True
+        if chunk_work:
+            pend = self._chunk_issue()
+            self.t += self.serve_cfg.cost.chunk(pend[2])
+            self._chunk_finalize(pend)
+            self._drain_ready()
+            return True
+        if decode_work:
+            self._decode_step()
+            return True
+        return False
+
+    def _chunk_issue(self):
+        """Dispatch one (ragged) chunk over every mid-prompt lane.
+        Device work only — the clock and lane bookkeeping advance in
+        ``_chunk_finalize`` once the step this dispatch rides is priced.
+        Returns (active lane slots, per-lane valid counts, total)."""
+        n_lanes, chunk = self.lanes.n_slots, self.serve_cfg.prefill_chunk
+        blk = np.zeros((n_lanes, chunk), np.int32)
+        nv = np.zeros((n_lanes,), np.int32)
+        start = np.zeros((n_lanes,), np.int32)
+        active = []
+        for slot in sorted(self._lanes):
+            lane = self._lanes[slot]
+            if lane.first is not None:
+                continue  # prefilled, waiting for a decode slot
+            n = min(chunk, lane.req.prompt_len - lane.consumed)
+            nv[slot], start[slot] = n, lane.consumed
+            prompt = self._prompt_np[lane.req.rid]
+            blk[slot, :n] = prompt[0, lane.consumed:lane.consumed + n]
+            active.append(slot)
+        tok, self.lanes.caches = self._chunk_fn(
+            self.params, jnp.asarray(blk), self.lanes.caches,
+            jnp.asarray(start), jnp.asarray(nv),
+        )
+        self._chunk_dispatches += 1
+        self._chunk_tok = tok  # device array; fetched in finalize
+        return active, nv, int(nv.sum())
+
+    def _chunk_finalize(self, pend) -> None:
+        cfg = self.serve_cfg
+        active, nv, _ = pend
+        tok_host = np.asarray(self._chunk_tok)
+        for slot in active:
+            lane = self._lanes[slot]
+            lane.consumed += int(nv[slot])
+            if lane.consumed >= lane.req.prompt_len:
+                lane.first = int(tok_host[slot])
+                lane.t_first = self.t
+                done_now = (lane.req.max_new <= 1 or
+                            (cfg.eos_id is not None and
+                             lane.first == cfg.eos_id))
+                if done_now:
+                    st = _Active(req=lane.req, t_admit=lane.t_admit,
+                                 prefill_s=lane.t_first - lane.t_admit,
+                                 gen=1, tokens=[lane.first])
+                    self._complete(st, self.t, prefill_only=True)
+                    self._free_lane(slot)
+
+    def _free_lane(self, slot: int) -> None:
+        lane = self._lanes.pop(slot)
+        self.lanes.evict(lane.req.rid)
+        del self._prompt_np[lane.req.rid]
+
+    def _drain_ready(self) -> None:
+        """Move prefilled lanes into free decode slots (lane order)."""
+        for slot in sorted(self._lanes):
+            lane = self._lanes[slot]
+            if lane.first is None:
+                continue
+            if self.pool.n_free == 0:
+                break
+            src = self.lanes.extract(lane.req.rid)
+            dslot = self.pool.insert(lane.req.rid, src)
+            self._last_tok[dslot] = lane.first
+            self._slots[dslot] = _Active(
+                req=lane.req, t_admit=lane.t_admit,
+                prefill_s=lane.t_first - lane.t_admit,
+                gen=1, tokens=[lane.first],
+            )
+            self._free_lane(slot)
+
+    def _decode_step(self, piggyback_tokens: int = 0) -> None:
+        cfg = self.serve_cfg
+        toks = jnp.asarray(self._last_tok[:, None])
+        tok_ids, self.pool.caches = self._decode(
+            self.params, toks, self.pool.caches
+        )
+        self.t += cfg.cost.decode(cfg.slots)
+        if piggyback_tokens:
+            self.t += cfg.cost.piggyback(piggyback_tokens)
+        self._decode_steps += 1
+
+        if self.tick is not None:
+            self.tick(self, self.t)
+        if (self.sync is not None and cfg.sync_every
+                and self._decode_steps % cfg.sync_every == 0):
+            self.params, n_stale, nbytes, secs = self.sync.poll(self.params)
+            self.t += secs
+            if n_stale and self.metrics is not None:
+                self.metrics.record(PullRecord(
+                    t=self.t, stale_shards=n_stale,
+                    n_shards=self.sync.plan.n_shards, nbytes=float(nbytes),
+                    replica=self.replica,
+                ))
+
+        next_tok = np.asarray(tok_ids)
+        for slot in sorted(self._slots):
+            st = self._slots[slot]
+            tok = int(next_tok[slot])
+            st.tokens.append(tok)
+            st.gen += 1
+            self._last_tok[slot] = tok
+            if (st.gen >= st.req.max_new or
+                    (cfg.eos_id is not None and tok == cfg.eos_id)):
+                self._complete(st, self.t)
+                self.pool.evict(st.req.rid)
+                del self._slots[slot]
+        if self.serve_cfg.prefill_chunk:
+            self._drain_ready()
+
+    # -------------------------------------------------------------- run
+    def run(self) -> ServeReport:
+        self._begin()
+        for req in self.trace:
+            self.run_until(req.arrival)
+            self.submit(req)
+        self.run_until(math.inf)
+        return self.finish()
 
 
 def serve_trace(cfg, params: Pytree, serve_cfg: ServeConfig,
@@ -407,19 +723,19 @@ def serve_trace(cfg, params: Pytree, serve_cfg: ServeConfig,
 def solo_decode(cfg, params: Pytree, prompt: np.ndarray, max_new: int,
                 capacity: int, *, eos_id: int | None = None) -> list[int]:
     """Reference decode of one request alone (batch 1) at the same cache
-    capacity a pool would give it — the bit-identity oracle for
+    capacity a pool would give it — the token-identity oracle for
     tests/test_serve_parity.py and the degenerate one-shot path."""
     plen = prompt.shape[1]
     logits, caches = lm.lm_prefill(
         cfg, params, {"tokens": jnp.asarray(prompt, jnp.int32)},
         reserve=capacity - plen,
     )
-    tok = int(np.argmax(np.asarray(logits[0])))
+    tok = int(jnp.argmax(logits[0]))
     out = [tok]
     while len(out) < max_new and not (eos_id is not None and tok == eos_id):
         lg, caches = lm.lm_decode_step(
             cfg, params, {"tokens": jnp.asarray([[tok]], jnp.int32)}, caches
         )
-        tok = int(np.argmax(np.asarray(lg[0, 0])))
+        tok = int(jnp.argmax(lg[0, 0]))
         out.append(tok)
     return out

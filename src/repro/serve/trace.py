@@ -61,11 +61,18 @@ class TraceConfig:
 
     ``slo_scale`` draws each request's SLO as ``slo_ms/1000 × factor``
     with the factor sampled uniformly from the tuple — heterogeneous
-    deadlines are what separates EDF from FCFS."""
+    deadlines are what separates EDF from FCFS.
+
+    ``prompt_weights`` (same length as ``prompt_lens``, auto-normalised)
+    skews the prompt-length draw — a heavy tail like
+    ``prompt_lens=(8, 16, 96), prompt_weights=(8, 8, 1)`` makes the
+    occasional long prompt a straggler among short ones, the workload
+    where chunked prefill earns its keep."""
 
     n_requests: int = 32
     rate: float = 8.0  # mean arrivals per (virtual) second
     prompt_lens: tuple[int, ...] = (8, 16)
+    prompt_weights: tuple[float, ...] | None = None
     max_new: tuple[int, int] = (4, 12)  # inclusive range
     slo_ms: float = 1500.0
     slo_scale: tuple[float, ...] = (1.0,)
@@ -84,6 +91,12 @@ class TraceConfig:
             raise ValueError(f"bad max_new range {self.max_new}")
         if not 0.0 < self.burst_duty < 1.0:
             raise ValueError("burst_duty must be in (0, 1)")
+        if (self.prompt_weights is not None
+                and len(self.prompt_weights) != len(self.prompt_lens)):
+            raise ValueError(
+                f"prompt_weights {self.prompt_weights} must match "
+                f"prompt_lens {self.prompt_lens}"
+            )
 
 
 _TRACES: dict[str, Callable[[TraceConfig], list[Request]]] = {}
@@ -114,7 +127,11 @@ def make_trace(name: str, cfg: TraceConfig) -> list[Request]:
 def _fill(cfg: TraceConfig, arrivals: np.ndarray) -> list[Request]:
     """Attach per-request shape/SLO draws to a sorted arrival sequence."""
     rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 0xD5]))
-    lens = rng.choice(np.asarray(cfg.prompt_lens), size=len(arrivals))
+    p = None
+    if cfg.prompt_weights is not None:
+        w = np.asarray(cfg.prompt_weights, np.float64)
+        p = w / w.sum()
+    lens = rng.choice(np.asarray(cfg.prompt_lens), size=len(arrivals), p=p)
     lo, hi = cfg.max_new
     news = rng.integers(lo, hi + 1, size=len(arrivals))
     scales = rng.choice(np.asarray(cfg.slo_scale, np.float64), size=len(arrivals))

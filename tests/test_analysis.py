@@ -138,6 +138,47 @@ def test_host_sync_in_hot_path(tmp_path):
     assert any(".item()" in f.message for f in found)
 
 
+def test_host_sync_on_logits_in_serve_loop(tmp_path):
+    """The serving decode loop's narrower contract: shipping small
+    token-id arrays per step is fine; any host sync whose expression
+    touches logits is the (slots, vocab)-per-step copy the device-side
+    argmax removed — exactly the pre-fix engine pattern."""
+    project = make_project(tmp_path, {
+        "src/repro/serve/engine.py": """\
+            import numpy as np
+
+            def decode_step(decode, params, toks, caches):
+                logits, caches = decode(params, toks, caches)
+                # pre-fix: argmax on host over the full logits tensor
+                next_tok = np.argmax(np.asarray(logits[:, 0]), axis=-1)
+                return next_tok, caches
+
+            def decode_step_fixed(decode, params, toks, caches):
+                tok_ids, caches = decode(params, toks, caches)
+                next_tok = np.asarray(tok_ids)  # (slots,) ids: allowed
+                return next_tok, caches
+            """,
+        "src/repro/serve/balance.py": """\
+            import jax
+
+            def probe(logits):
+                return jax.device_get(logits)
+            """,
+        # trace generation is not a decode loop: out of scope
+        "src/repro/serve/trace.py": """\
+            import numpy as np
+
+            def gen(logits):
+                return np.asarray(logits)
+            """,
+    })
+    found = hits(project, "host-sync-in-hot-path")
+    assert len(found) == 2
+    assert {f.path for f in found} == {
+        "src/repro/serve/engine.py", "src/repro/serve/balance.py"}
+    assert all("logits" in f.message for f in found)
+
+
 def test_separate_dispatch_in_commit_path(tmp_path):
     project = make_project(tmp_path, {
         # the pre-§16 shape: decode the payload, then apply the commit

@@ -1,0 +1,58 @@
+"""benchmarks.compare: snapshot diffing rules.
+
+Pins the sign-safe relative check: a HIGHER_BETTER key whose baseline
+is negative (a speedup that was already a slowdown) must not flag an
+equal — or improved — current value as a regression. The pre-fix form
+``cv < bv * (1 - threshold)`` fired on exact equality when ``bv < 0``
+(-0.3 < -0.24), which is how BENCH_9 -> BENCH_10 first tripped it.
+"""
+
+import json
+
+from benchmarks.compare import GATE_KEYS, compare
+
+
+def _snap(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+    return path
+
+
+def _row(name, **derived):
+    return {"name": name, "derived": derived}
+
+
+def test_negative_speedup_equal_is_not_a_regression(tmp_path):
+    base = _snap(tmp_path / "a.json",
+                 [_row("fig/speedup", adsp_vs_fixed_speedup=-0.3)])
+    for cv in (-0.3, -0.2, 0.5):  # equal or better
+        cur = _snap(tmp_path / "b.json",
+                    [_row("fig/speedup", adsp_vs_fixed_speedup=cv)])
+        regressions, _ = compare(base, cur)
+        assert regressions == [], (cv, regressions)
+
+
+def test_speedup_drop_still_flags(tmp_path):
+    base = _snap(tmp_path / "a.json", [_row("fig/speedup", sched_speedup=2.0)])
+    cur = _snap(tmp_path / "b.json", [_row("fig/speedup", sched_speedup=1.0)])
+    regressions, _ = compare(base, cur)
+    assert len(regressions) == 1 and "fell" in regressions[0]
+
+
+def test_lower_better_rise_flags_and_negative_base_tolerated(tmp_path):
+    base = _snap(tmp_path / "a.json", [_row("fig/conv", t_conv=100.0)])
+    cur = _snap(tmp_path / "b.json", [_row("fig/conv", t_conv=150.0)])
+    regressions, _ = compare(base, cur)
+    assert len(regressions) == 1 and "rose" in regressions[0]
+
+
+def test_serve_gates_registered():
+    assert {"chunked_beats_unchunked_p99", "balancer_beats_rr"} <= GATE_KEYS
+
+
+def test_gate_drop_flags(tmp_path):
+    base = _snap(tmp_path / "a.json",
+                 [_row("serve/chunked_p99", chunked_beats_unchunked_p99=1)])
+    cur = _snap(tmp_path / "b.json",
+                [_row("serve/chunked_p99", chunked_beats_unchunked_p99=0)])
+    regressions, _ = compare(base, cur)
+    assert len(regressions) == 1 and "gate" in regressions[0]

@@ -46,6 +46,7 @@ from repro.ps.state import AdspState
 from repro.serve import (
     CachePool,
     CostModel,
+    LoadBalancer,
     ReplicaSync,
     Request,
     ServeConfig,
@@ -53,9 +54,11 @@ from repro.serve import (
     ShardedTrainer,
     TraceConfig,
     family_of,
+    get_router,
     get_scheduler,
     make_trace,
     pull_stale,
+    router_names,
     scheduler_names,
     shard_versions_of,
     trace_names,
@@ -470,3 +473,170 @@ def test_fleet_report_serve_summary(smoke):
     assert "serving: 6 requests" in report
     assert "SLO attainment" in report
     assert math.isfinite(s["serve"]["t_last"])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (§17)
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_config_validation(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError):
+        ServeConfig(prefill_chunk=-1)
+    with pytest.raises(ValueError):
+        ServeConfig(prefill_batch=0)
+    with pytest.raises(ValueError):  # static mode cannot interleave
+        ServeConfig(mode="static", prefill_chunk=4)
+
+
+def test_cost_model_chunk_pricing():
+    """One dispatch over all lanes pays the base once (the batching
+    win); m chunks pay it m times (the interleaving price)."""
+    cm = CostModel()
+    plen = 32
+    assert cm.chunk(plen) == pytest.approx(cm.prefill(plen))
+    two_chunks = cm.chunk(16) + cm.chunk(16)
+    assert two_chunks == pytest.approx(cm.prefill(32) + cm.prefill_base)
+    # batched: two 16-token prompts in one dispatch cost one base
+    assert cm.chunk(32) < cm.prefill(16) + cm.prefill(16)
+    cheap = CostModel(chunk_base=1e-4)
+    assert cheap.chunk(16) < cheap.prefill(16)
+
+
+def test_chunked_engine_matches_monolithic_tokens(smoke):
+    """Chunked prefill changes *when* work happens, never the tokens:
+    same trace, same streams, and a chunk-dispatch count that reflects
+    ceil(plen / chunk) per request (minus batching overlap)."""
+    cfg, params = smoke
+    trace = _trace(n_requests=8, prompt_lens=(4, 8, 13), rate=40.0)
+    mono = ServeEngine(cfg, params, ServeConfig(slots=3), trace).run()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        slots=3, prefill_chunk=4, prefill_batch=2), trace)
+    chunked = eng.run()
+    assert chunked.tokens_by_rid == mono.tokens_by_rid
+    assert len(chunked.records) == len(trace)
+    assert chunked.chunk_dispatches > 0 and mono.chunk_dispatches == 0
+    for rec in chunked.records:
+        assert rec.total == pytest.approx(
+            rec.queue + rec.prefill + rec.decode, abs=1e-9)
+
+
+def test_chunked_engine_deterministic(smoke):
+    cfg, params = smoke
+    trace = _trace(n_requests=8, prompt_lens=(4, 13), rate=40.0)
+    sc = ServeConfig(slots=2, prefill_chunk=4, prefill_batch=2)
+    r1 = ServeEngine(cfg, params, sc, trace).run()
+    r2 = ServeEngine(cfg, params, sc, trace).run()
+    assert [to_dict(a) for a in r1.records] == [to_dict(b) for b in r2.records]
+    assert r1.t_end == r2.t_end
+
+
+def test_prefill_jit_cache_buckets_by_pow2(smoke):
+    """Monolithic prefill dispatches are jit-cached by the prompt length
+    rounded up to a power of two — a trace with many distinct lengths
+    compiles one fn per *bucket*, not one per length."""
+    cfg, params = smoke
+    lens = (3, 4, 5, 6, 7, 8, 9, 12, 13, 15)
+    trace = _trace(n_requests=20, prompt_lens=lens, rate=40.0)
+    eng = ServeEngine(cfg, params, ServeConfig(slots=3), trace)
+    eng.run()
+    seen = {r.prompt_len for r in trace}
+    buckets = {1 << (n - 1).bit_length() if n > 1 else 1 for n in seen}
+    assert set(eng._prefill_fns) == buckets
+    assert len(eng._prefill_fns) < len(seen)
+
+
+# ---------------------------------------------------------------------------
+# multi-replica load balancing (§17)
+# ---------------------------------------------------------------------------
+
+
+def test_router_registry():
+    assert set(router_names()) >= {"round_robin", "least_queue",
+                                   "deadline_slack"}
+    with pytest.raises(KeyError):
+        get_router("nope")
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_queue",
+                                    "deadline_slack"])
+def test_balancer_deterministic(smoke, router):
+    """Same trace + seed ⇒ identical per-request records, with EDF
+    honored within each replica (deadline scheduler throughout)."""
+    cfg, params = smoke
+    trace = _trace(n_requests=10, rate=40.0, slo_ms=(400.0))
+    sc = ServeConfig(slots=2, scheduler="deadline", seed=1)
+    a = LoadBalancer(cfg, params, sc, trace, n_replicas=2,
+                     router=router).run()
+    b = LoadBalancer(cfg, params, sc, trace, n_replicas=2,
+                     router=router).run()
+    assert [to_dict(x) for x in a.merged.records] == \
+        [to_dict(x) for x in b.merged.records]
+    assert a.merged.t_end == b.merged.t_end
+    # every request served exactly once, somewhere
+    assert sorted(a.merged.tokens_by_rid) == [r.rid for r in trace]
+    assert {r.replica for r in a.merged.records} <= {0, 1}
+    assert sum(a.per_replica_requests) == len(trace)
+    # per-replica token streams match the single-engine ones (routing
+    # never changes a request's tokens, only where/when it runs)
+    solo = ServeEngine(cfg, params, sc, trace).run()
+    assert a.merged.tokens_by_rid == solo.tokens_by_rid
+
+
+def test_balancer_round_robin_alternates(smoke):
+    cfg, params = smoke
+    trace = _trace(n_requests=6, rate=40.0)
+    out = LoadBalancer(cfg, params, ServeConfig(slots=2), trace,
+                       n_replicas=2, router="round_robin").run()
+    by_rid = {r.req: r.replica for r in out.merged.records}
+    arrivals = sorted(trace, key=lambda r: (r.arrival, r.rid))
+    assert [by_rid[r.rid] for r in arrivals] == [0, 1, 0, 1, 0, 1]
+
+
+def test_balancer_spreads_load_over_idle_replica(smoke):
+    """least_queue routes around a busy replica: a burst of arrivals
+    lands on both replicas instead of queueing on one."""
+    cfg, params = smoke
+    trace = _trace(n_requests=8, rate=200.0)  # near-simultaneous burst
+    out = LoadBalancer(cfg, params, ServeConfig(slots=2), trace,
+                       n_replicas=2, router="least_queue").run()
+    assert min(out.per_replica_requests) >= 2
+
+
+def test_balancer_rejects_bad_config(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError):
+        LoadBalancer(cfg, params, ServeConfig(), _trace(), n_replicas=0)
+    with pytest.raises(KeyError):
+        LoadBalancer(cfg, params, ServeConfig(), _trace(), router="nope")
+    with pytest.raises(ValueError):  # sync_every needs a factory
+        LoadBalancer(cfg, params, ServeConfig(sync_every=2), _trace())
+
+
+def test_fleet_report_per_replica(smoke):
+    cfg, params = smoke
+    trace = _trace(n_requests=8, rate=40.0)
+    log = MetricsLog()
+    LoadBalancer(cfg, params, ServeConfig(slots=2), trace, n_replicas=2,
+                 router="round_robin", metrics=log).run()
+    fr = _load_fleet_report()
+    s = fr.summarize(log.records)
+    assert s["serve"]["requests"] == 8
+    assert set(s["per_replica"]) == {0, 1}
+    assert sum(rp["requests"] for rp in s["per_replica"].values()) == 8
+    report = fr.format_report(s)
+    assert "replica" in report
+
+
+def test_launcher_balancer_mode(capsys):
+    out = serve_launch.main([
+        "--arch", ARCH, "--smoke", "--trace", "poisson",
+        "--requests", "6", "--rate", "30", "--slots", "2",
+        "--replicas", "2", "--router", "least_queue",
+        "--prefill-chunk", "4", "--prefill-batch", "2"])
+    text = capsys.readouterr().out
+    assert len(out["report"].records) == 6
+    assert out["balance"] is not None
+    assert "router=least_queue" in text
+    assert "chunked prefill" in text

@@ -219,6 +219,46 @@ def test_as_tiles_skips_copy_for_aligned_leaves():
     assert_array_equal(np.asarray(back), np.asarray(ragged))
 
 
+def test_overlapped_shard_pulls_donate_param_buffers():
+    """The overlapped commit's per-shard pull jits carry
+    donate_argnums=(0, 1): each shard's params and commit state are dead
+    the moment the fused apply produces their successors, so the round
+    updates in place. Verified by buffer identity — after a (warm)
+    round, every new param leaf occupies one of the previous round's
+    buffers, i.e. donation actually took effect rather than being
+    silently dropped."""
+    from repro.cluster import ADSP, ClusterEngine
+    from repro.cluster.mesh_backend import MeshBackend, MeshTask
+
+    def quad_loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] + params["b"] - y) ** 2)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(8, 1)), jnp.float32)
+    task = MeshTask(
+        init_params={"w": jnp.zeros((4, 1), jnp.float32),
+                     "b": jnp.zeros((1,), jnp.float32)},
+        loss_fn=quad_loss,
+        make_microbatches=lambda r, tau, n: (jnp.stack([x] * tau),
+                                             jnp.stack([y] * tau)),
+    )
+    mesh = jax.make_mesh((1,), ("data",))
+    backend = MeshBackend(task, mesh, tau=2, codec="bf16", n_shards=2,
+                          fused_commit=True, overlap_shards=True)
+    ClusterEngine(ADSP(search=False, gamma=4.0), backend)
+    with use_mesh(mesh):
+        backend.run_round()  # warm the push/pull jits (first call compiles)
+        before = {leaf.unsafe_buffer_pointer()
+                  for leaf in jax.tree.leaves(backend.state.params)}
+        backend.run_round()
+        after = [leaf.unsafe_buffer_pointer()
+                 for leaf in jax.tree.leaves(backend.state.params)]
+    assert all(p in before for p in after), (
+        "per-shard pull did not reuse donated param buffers")
+
+
 @pytest.mark.parametrize("name", ["int8", "bf16"])
 def test_fused_matches_reference_encode_decode(update_tree, name):
     ref = get_codec(name, backend="reference")

@@ -41,6 +41,11 @@ def summarize(records) -> dict:
         "serve": {"requests": 0, "tokens": 0, "slo_ok": 0,
                   "queue": [], "total": [], "t_first": None, "t_last": 0.0},
         "pulls": {"polls": 0, "nbytes": 0.0, "stale_shards": 0, "n_shards": 0},
+        # replica -> same shape as "serve" (only filled when records carry
+        # non-zero replica ids, i.e. a balancer run)
+        "per_replica": defaultdict(
+            lambda: {"requests": 0, "tokens": 0, "slo_ok": 0, "total": [],
+                     "pull_bytes": 0.0, "pulls": 0}),
     }
     for r in records:
         out["t_end"] = max(out["t_end"], r.t)
@@ -81,12 +86,20 @@ def summarize(records) -> dict:
             sv["t_first"] = (arrival if sv["t_first"] is None
                              else min(sv["t_first"], arrival))
             sv["t_last"] = max(sv["t_last"], r.t)
+            rp = out["per_replica"][r.replica]
+            rp["requests"] += 1
+            rp["tokens"] += r.tokens
+            rp["slo_ok"] += int(r.slo_ok)
+            rp["total"].append(r.total)
         elif k == "pull":
             pl = out["pulls"]
             pl["polls"] += 1
             pl["nbytes"] += r.nbytes
             pl["stale_shards"] += r.stale_shards
             pl["n_shards"] = max(pl["n_shards"], r.n_shards)
+            rp = out["per_replica"][r.replica]
+            rp["pulls"] += 1
+            rp["pull_bytes"] += r.nbytes
     return out
 
 
@@ -127,6 +140,18 @@ def format_report(s: dict) -> str:
                 f"    PS pulls: {pl['polls']} "
                 f"({pl['stale_shards']} stale shards of {pl['n_shards']}-way, "
                 f"{pl['nbytes']/1e6:.2f} MB)")
+        # per-replica breakdown only when a balancer spread the load
+        if len(s["per_replica"]) > 1:
+            lines.append("    replica  requests  tokens  slo%  total_p99_ms"
+                         "  pulls  MB_pulled")
+            for rep in sorted(s["per_replica"]):
+                rp = s["per_replica"][rep]
+                slo = (100.0 * rp["slo_ok"] / rp["requests"]
+                       if rp["requests"] else 0.0)
+                lines.append(
+                    f"    {rep:7d}  {rp['requests']:8d}  {rp['tokens']:6d}"
+                    f"  {slo:4.0f}  {_percentile(rp['total'], 0.99)*1e3:12.1f}"
+                    f"  {rp['pulls']:5d}  {rp['pull_bytes']/1e6:9.2f}")
     if s["per_worker"]:
         lines.append("  worker  commits  mean_lat  p95_lat    MB_up  MB_down"
                      "  stale_ratio")
